@@ -1,0 +1,83 @@
+"""Shared benchmark fixtures: the paper's four roles, sized per §IV.
+
+Role 1: fully connected (float32)
+Role 2: fully connected with barrier (float32)     — barrier-AND packet sync
+Role 3: conv 5×5, 1 filter, fixed weights (int16)
+Role 4: conv 3×3, 2 filters, fixed weights (int16)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels  # noqa: F401
+from repro.core.ledger import OverheadLedger
+from repro.core.registry import FIXED_WEIGHT, GLOBAL_REGISTRY, KernelImpl
+from repro.core.roles import Role, RoleLibrary
+from repro.kernels.conv2d import conv2d_fixed_weight
+from repro.kernels import matmul as matmul_k
+from repro.kernels import conv2d as conv2d_k
+
+RNG = np.random.default_rng(0)
+
+FC_DIM = 256
+IMG = 64
+
+
+def make_paper_roles(lib: RoleLibrary):
+    """Returns dict name -> (role, concrete_args)."""
+    roles = {}
+
+    # Roles 1 & 2: generic fully connected; role 2 is the barrier-synchronised
+    # variant (distinct op so it occupies its own region, as on the FPGA)
+    fc_impl = GLOBAL_REGISTRY.resolve("matmul", "any", ("xla",))
+    barrier_impl = KernelImpl(
+        op="fc_barrier", device_kind="any", source="xla", fn=fc_impl.fn,
+        footprint=fc_impl.footprint,
+    )
+    GLOBAL_REGISTRY.register(barrier_impl, allow_override=True)
+    x = jnp.asarray(RNG.normal(size=(FC_DIM, FC_DIM)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(FC_DIM, FC_DIM)), jnp.float32)
+    a = jax.ShapeDtypeStruct((FC_DIM, FC_DIM), jnp.float32)
+    roles["role1_fc"] = (lib.make_role(fc_impl, (a, a), name="role1_fc"), (x, w))
+    roles["role2_fc_barrier"] = (
+        lib.make_role(barrier_impl, (a, a), name="role2_fc_barrier"), (x, w),
+    )
+
+    # Roles 3 & 4: fixed-weight int16 conv (weights baked into the program)
+    w5 = jnp.asarray(RNG.integers(-8, 8, size=(5, 5, 1, 1)), jnp.int16)
+    w3 = jnp.asarray(RNG.integers(-8, 8, size=(3, 3, 1, 2)), jnp.int16)
+    xi = jnp.asarray(RNG.integers(-100, 100, size=(1, IMG, IMG, 1)), jnp.int16)
+    xa = jax.ShapeDtypeStruct((1, IMG, IMG, 1), jnp.int16)
+
+    for name, wfix in (("role3_conv5x5", w5), ("role4_conv3x3", w3)):
+        # fixed-weight role, host-executable (XLA source); the Pallas
+        # conv2d_fixed_weight variant is the TPU-target twin (same algebra,
+        # golden-tested in tests/test_kernels.py)
+        def fixed_fn(x, *, _w=wfix):
+            from repro.kernels import ref
+            return ref.conv2d(x, _w)
+
+        impl = KernelImpl(
+            op=f"{name}", device_kind="any", source="xla", fn=fixed_fn,
+            specialization=FIXED_WEIGHT,
+            footprint=conv2d_k.footprint(IMG, IMG, 1, wfix.shape[-1],
+                                         wfix.shape[0], wfix.shape[1], 2),
+        )
+        GLOBAL_REGISTRY.register(impl, allow_override=True)
+        roles[name] = (lib.make_role(impl, (xa,), name=name), (xi,))
+
+    return roles
+
+
+def pallas_footprints():
+    """Per-role VMEM/MXU claims of the Pallas (TPU-target) implementations."""
+    return {
+        "role1_fc": matmul_k.footprint(FC_DIM, FC_DIM, FC_DIM, 4),
+        "role2_fc_barrier": matmul_k.footprint(FC_DIM, FC_DIM, FC_DIM, 4),
+        "role3_conv5x5": conv2d_k.footprint(IMG, IMG, 1, 1, 5, 5, 2),
+        "role4_conv3x3": conv2d_k.footprint(IMG, IMG, 1, 2, 3, 3, 2),
+    }

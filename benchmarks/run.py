@@ -1,0 +1,28 @@
+"""Benchmark harness: one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run with
+``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    n = 100 if fast else 1000
+
+    from benchmarks import table1_utilization, table2_overhead, table3_efficiency
+
+    print("name,us_per_call,derived")
+    for row in table1_utilization.run():
+        print(row)
+    for row in table2_overhead.run(n=n):
+        print(row)
+    for row in table3_efficiency.run(n=n):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Table I: resource utilization of the shell and role variants.
+
+FPGA column -> TPU analogue:
+  LUTs/FFs  -> generated code bytes of the compiled role executable
+  BRAM      -> VMEM working set claimed by the Pallas BlockSpecs (% of 128 MiB)
+  DSPs      -> MXU passes per block
+
+"Shell" is the static runtime: HSA system + queues + region manager, measured
+as resident host bytes after hsa_init (the part that never reconfigures).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import make_paper_roles, pallas_footprints
+from repro.core.hsa import hsa_init, hsa_shut_down
+from repro.core.ledger import OverheadLedger
+from repro.hw import TPU_V5E
+
+
+def run() -> list[str]:
+    hsa_shut_down()
+    ledger = OverheadLedger()
+    sys_ = hsa_init(num_regions=4, ledger=ledger)
+    rows = []
+    try:
+        roles = make_paper_roles(sys_.library)
+        fps = pallas_footprints()
+        sys_.library.synthesize_all()
+
+        # shell: code+state of the runtime itself
+        import sys as _s
+        shell_bytes = sum(
+            _s.getsizeof(o) for o in (sys_.agents, sys_.queues, sys_.regions)
+        )
+        rows.append(f"table1,shell,0.0,state_bytes={shell_bytes}")
+
+        for name, (role, args) in roles.items():
+            role.load()
+            fp = role.footprint()
+            pf = fps[name]
+            vmem_pct = 100.0 * pf.vmem_bytes / TPU_V5E.vmem_bytes
+            rows.append(
+                f"table1,{name},0.0,"
+                f"code_bytes={fp.get('code_bytes', 0):.0f};"
+                f"vmem_bytes={pf.vmem_bytes};vmem_pct={vmem_pct:.2f};"
+                f"mxu_tiles={pf.mxu_tiles};synthesis_s={role.synthesis_s:.3f}"
+            )
+    finally:
+        hsa_shut_down()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

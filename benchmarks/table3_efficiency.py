@@ -1,0 +1,97 @@
+"""Paper Table III: efficiency benefit of registered roles vs plain CPU (n=1000).
+
+The paper compares FPGA roles against a plain ARM Cortex-A53 implementation
+in OP/cycle.  Host analogue: per-op NumPy eager execution (the "plain CPU"
+path a developer writes by hand) vs the registered, compiled role executable
+(XLA-fused).  OP/cycle derives from measured ops/s over the host clock; the
+``tpu_target`` column adds the roofline OP/cycle of the Pallas role on the
+TPU v5e MXU for the same shapes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import FC_DIM, IMG, make_paper_roles, pallas_footprints
+from repro.core.hsa import hsa_init, hsa_shut_down
+from repro.core.ledger import OverheadLedger
+from repro.hw import TPU_V5E
+
+HOST_HZ = 3.0e9          # nominal host clock for OP/cycle accounting
+
+
+def _flops(name: str) -> float:
+    if name.startswith(("role1", "role2")):
+        return 2.0 * FC_DIM ** 3
+    if "conv5x5" in name:
+        return 2.0 * (IMG - 4) ** 2 * 25
+    return 2.0 * (IMG - 2) ** 2 * 9 * 2
+
+
+def _numpy_baseline(name: str, args) -> float:
+    """Plain per-op host implementation, timed per call (seconds)."""
+    n = 50
+    if name.startswith(("role1", "role2")):
+        a, b = (np.asarray(x, np.float32) for x in args)
+        t = time.perf_counter()
+        for _ in range(n):
+            out = a @ b
+        return (time.perf_counter() - t) / n
+    (x,) = args
+    xi = np.asarray(x, np.int32)[0, :, :, 0]
+    kh = 5 if "5x5" in name else 3
+    f = 1 if "5x5" in name else 2
+    w = np.ones((kh, kh, f), np.int32)
+    t = time.perf_counter()
+    for _ in range(n):
+        oh, ow = xi.shape[0] - kh + 1, xi.shape[1] - kh + 1
+        acc = np.zeros((oh, ow, f), np.int32)
+        for di in range(kh):
+            for dj in range(kh):
+                acc += xi[di:di + oh, dj:dj + ow, None] * w[di, dj]
+    return (time.perf_counter() - t) / n
+
+
+def run(n: int = 1000) -> list[str]:
+    hsa_shut_down()
+    sys_ = hsa_init(num_regions=4, ledger=OverheadLedger())
+    rows = []
+    try:
+        roles = make_paper_roles(sys_.library)
+        sys_.library.synthesize_all()
+        fps = pallas_footprints()
+        for name, (role, args) in roles.items():
+            exe = role.load()
+            jax.block_until_ready(exe(*args))       # warm
+            t = time.perf_counter()
+            for _ in range(n):
+                out = exe(*args)
+            jax.block_until_ready(out)
+            accel_s = (time.perf_counter() - t) / n
+            base_s = _numpy_baseline(name, args)
+
+            flops = _flops(name)
+            ops_cycle_base = flops / (base_s * HOST_HZ)
+            ops_cycle_accel = flops / (accel_s * HOST_HZ)
+            speedup = base_s / accel_s
+            # TPU-target: MXU utilisation implied by the Pallas footprint
+            tpu_opc = min(flops, TPU_V5E.flops_per_cycle)
+            rows.append(
+                f"table3,{name},{accel_s*1e6:.1f},"
+                f"op_cycle_increase={speedup:.2f};"
+                f"base_us={base_s*1e6:.1f};opc_base={ops_cycle_base:.2f};"
+                f"opc_accel={ops_cycle_accel:.2f};"
+                f"tpu_target_opc={tpu_opc:.0f}"
+            )
+    finally:
+        hsa_shut_down()
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,87 @@
+"""End-to-end training driver: a small llama-family LM on synthetic data.
+
+Fault-tolerant loop (checkpoint/restart, straggler watchdog), sharded
+train_step, deterministic data pipeline.  Defaults train a ~25M-param model
+for 200 steps on CPU in a few minutes; ``--params 100m --steps 300`` scales up
+when you have the cycles.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps N] [--resume]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.dist.sharding import ShardingRules
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.optim.adamw import OptConfig
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.step import init_train_state, make_train_step
+
+
+def small_config(size: str) -> ArchConfig:
+    base = ARCHS["llama3.2-1b"]
+    if size == "100m":
+        return dataclasses.replace(
+            base, name="llama-100m", num_layers=8, d_model=768, num_heads=12,
+            num_kv_heads=4, d_ff=2048, vocab_size=8192, head_dim=64,
+            remat="none",
+        )
+    return dataclasses.replace(
+        base, name="llama-25m", num_layers=4, d_model=384, num_heads=6,
+        num_kv_heads=2, d_ff=1024, vocab_size=4096, head_dim=64, remat="none",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params", default="25m", choices=["25m", "100m"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--no-ckpt", action="store_true")
+    args = ap.parse_args()
+
+    cfg = small_config(args.params)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules.for_arch(cfg, mesh)
+    model = build_model(cfg)
+    opt = OptConfig(kind="adamw", lr=6e-4, warmup_steps=20,
+                    decay_steps=args.steps)
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      global_batch=args.batch))
+
+    with jax.set_mesh(mesh):
+        step, *_ = make_train_step(model, opt, rules, global_batch=args.batch)
+        params, opt_state = init_train_state(model, opt, rules,
+                                             jax.random.key(0))
+        n = sum(x.size for x in jax.tree.leaves(params))
+        print(f"model {cfg.name}: {n/1e6:.1f}M params")
+
+        loop = TrainLoop(
+            step,
+            lambda s: {k: jnp.asarray(v) for k, v in data.batch_at(s).items()},
+            LoopConfig(
+                total_steps=args.steps,
+                ckpt_dir=None if args.no_ckpt else args.ckpt_dir,
+                ckpt_every=50,
+                log_every=10,
+            ),
+        )
+        params, opt_state, report = loop.run(params, opt_state)
+        print(f"done: {report.steps_run} steps, "
+              f"final loss {report.last_metrics.get('loss', float('nan')):.4f}, "
+              f"resumed_from={report.resumed_from}, "
+              f"stragglers={report.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

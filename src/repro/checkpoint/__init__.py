@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint

@@ -1,0 +1,67 @@
+"""Config registry: ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, reduced
+from repro.configs import (
+    deepseek_v3_671b,
+    granite_3_8b,
+    hymba_1_5b,
+    internvl2_76b,
+    llama3_2_1b,
+    llama4_maverick,
+    mamba2_780m,
+    whisper_large_v3,
+    yi_6b,
+    yi_9b,
+)
+
+ARCHS: dict[str, ArchConfig] = {
+    cfg.name: cfg
+    for cfg in (
+        yi_9b.CONFIG,
+        llama3_2_1b.CONFIG,
+        yi_6b.CONFIG,
+        granite_3_8b.CONFIG,
+        internvl2_76b.CONFIG,
+        hymba_1_5b.CONFIG,
+        deepseek_v3_671b.CONFIG,
+        llama4_maverick.CONFIG,
+        mamba2_780m.CONFIG,
+        whisper_large_v3.CONFIG,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def cell_supported(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is (arch × shape) runnable? long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{arch.name} is pure full-attention (skip noted in DESIGN.md)"
+        )
+    return True, ""
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ArchConfig",
+    "ShapeConfig",
+    "get_arch",
+    "get_shape",
+    "cell_supported",
+    "reduced",
+]

@@ -1,0 +1,56 @@
+"""repro.core — the paper's contribution: transparent accelerator dispatch.
+
+Public surface:
+
+  - ``dispatch.op(name, *args)`` / ``dispatch.use(...)`` — transparent op
+    dispatch with scoped policy (the TF-frontend property),
+  - ``registry`` — kernel registration (reference / xla / pallas sources),
+  - ``hsa`` — agents, queues, signals, executor (the HSA runtime),
+  - ``roles`` / ``reconfig`` — presynthesized programs + LRU region residency
+    (the partial-reconfiguration model),
+  - ``ledger`` — Table II overhead accounting,
+  - ``policy`` — the generic-vs-fixed-weight role planner.
+"""
+
+from repro.core import dispatch, ledger, policy, reconfig, registry, roles
+from repro.core.dispatch import DispatchContext, DispatchTrace, op, use
+from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
+from repro.core.reconfig import RegionManager, ResidencyResult, ResidencyStats
+from repro.core.registry import (
+    FIXED_WEIGHT,
+    GENERIC,
+    GLOBAL_REGISTRY,
+    KernelImpl,
+    KernelRegistry,
+    ResourceFootprint,
+)
+from repro.core.roles import ONLINE, PRESYNTHESIZED, Role, RoleKey, RoleLibrary
+
+__all__ = [
+    "dispatch",
+    "ledger",
+    "policy",
+    "reconfig",
+    "registry",
+    "roles",
+    "DispatchContext",
+    "DispatchTrace",
+    "op",
+    "use",
+    "GLOBAL_LEDGER",
+    "OverheadLedger",
+    "RegionManager",
+    "ResidencyResult",
+    "ResidencyStats",
+    "FIXED_WEIGHT",
+    "GENERIC",
+    "GLOBAL_REGISTRY",
+    "KernelImpl",
+    "KernelRegistry",
+    "ResourceFootprint",
+    "ONLINE",
+    "PRESYNTHESIZED",
+    "Role",
+    "RoleKey",
+    "RoleLibrary",
+]

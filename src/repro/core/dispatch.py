@@ -1,0 +1,119 @@
+"""Transparent op dispatch — the "no secondary toolchain" property.
+
+Model code calls ``dispatch.op("matmul", x, w)`` instead of a concrete
+implementation.  Under ``jax.jit`` this function runs at *trace time*, so the
+resolved implementation is baked into the compiled program with zero runtime
+indirection — the TPU-idiomatic translation of TensorFlow looking up a
+registered HSA kernel in its executor.
+
+The active :class:`DispatchContext` selects the device kind and source
+preference.  Flipping ``prefer=("pallas", "xla", "reference")`` retargets an
+entire model to hand-written Pallas roles without touching model code; that
+one-flag switch is the paper's transparency claim.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Callable, Iterator, Sequence
+
+from repro.core.registry import GLOBAL_REGISTRY, KernelImpl, KernelRegistry
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchContext:
+    device_kind: str = "tpu"
+    prefer: tuple[str, ...] = ("xla", "reference")
+    registry: KernelRegistry = GLOBAL_REGISTRY
+    interpret: bool = False          # forwarded to pallas impls (CPU validation)
+    trace: "DispatchTrace | None" = None
+
+    def resolve(self, op: str, *, specialization: str | None = None) -> KernelImpl:
+        return self.registry.resolve(
+            op, self.device_kind, self.prefer, specialization=specialization
+        )
+
+
+class DispatchTrace:
+    """Records the sequence of resolved ops (role keys) during a trace.
+
+    The role planner (:mod:`repro.core.policy`) consumes this to decide the
+    generic-vs-fixed-weight split under a region budget.
+    """
+
+    def __init__(self) -> None:
+        self.events: list[tuple[str, str]] = []   # (op, impl name)
+
+    def record(self, op: str, impl: KernelImpl) -> None:
+        self.events.append((op, impl.name))
+
+    def op_counts(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for op_name, _ in self.events:
+            counts[op_name] = counts.get(op_name, 0) + 1
+        return counts
+
+
+_DEFAULT = DispatchContext()
+_CTX: contextvars.ContextVar[DispatchContext] = contextvars.ContextVar(
+    "repro_dispatch_ctx", default=_DEFAULT
+)
+
+
+def current() -> DispatchContext:
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def use(
+    *,
+    device_kind: str | None = None,
+    prefer: Sequence[str] | None = None,
+    registry: KernelRegistry | None = None,
+    interpret: bool | None = None,
+    trace: DispatchTrace | None = None,
+) -> Iterator[DispatchContext]:
+    """Scoped dispatch policy, like the paper's device annotation in user code."""
+    base = _CTX.get()
+    ctx = DispatchContext(
+        device_kind=device_kind if device_kind is not None else base.device_kind,
+        prefer=tuple(prefer) if prefer is not None else base.prefer,
+        registry=registry if registry is not None else base.registry,
+        interpret=interpret if interpret is not None else base.interpret,
+        trace=trace if trace is not None else base.trace,
+    )
+    token = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(token)
+
+
+def op(name: str, *args: Any, specialization: str | None = None, **kwargs: Any) -> Any:
+    """Dispatch a logical op through the active context (trace-time resolved)."""
+    ctx = _CTX.get()
+    impl = ctx.resolve(name, specialization=specialization)
+    if ctx.trace is not None:
+        ctx.trace.record(name, impl)
+    if impl.source == "pallas" and ctx.interpret:
+        kwargs = dict(kwargs, interpret=True)
+    return impl.fn(*args, **kwargs)
+
+
+def resolve(name: str, *, specialization: str | None = None) -> KernelImpl:
+    return _CTX.get().resolve(name, specialization=specialization)
+
+
+def policy_from_flag(policy: str) -> tuple[str, ...]:
+    """Map a CLI ``--policy`` flag to a source-preference order."""
+    orders = {
+        "reference": ("reference",),
+        "xla": ("xla", "reference"),
+        "pallas": ("pallas", "xla", "reference"),
+        "pallas-strict": ("pallas",),
+    }
+    if policy not in orders:
+        raise ValueError(f"unknown policy {policy!r}; choose from {sorted(orders)}")
+    return orders[policy]

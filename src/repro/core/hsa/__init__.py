@@ -1,0 +1,30 @@
+"""HSA-style runtime layer (agents, queues, signals, executor)."""
+
+from repro.core.hsa.agent import Agent, MemoryRegion
+from repro.core.hsa.executor import Executor, run_packet_sync
+from repro.core.hsa.queue import (
+    BarrierAndPacket,
+    Box,
+    KernelDispatchPacket,
+    Queue,
+    QueueFullError,
+)
+from repro.core.hsa.runtime import HsaSystem, hsa_init, hsa_shut_down, hsa_system
+from repro.core.hsa.signal import Signal
+
+__all__ = [
+    "Agent",
+    "MemoryRegion",
+    "Executor",
+    "run_packet_sync",
+    "BarrierAndPacket",
+    "Box",
+    "KernelDispatchPacket",
+    "Queue",
+    "QueueFullError",
+    "HsaSystem",
+    "hsa_init",
+    "hsa_shut_down",
+    "hsa_system",
+    "Signal",
+]

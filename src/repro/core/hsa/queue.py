@@ -1,0 +1,115 @@
+"""User-mode queues with AQL-style packets.
+
+HSA dispatch works by writing an Architected Queuing Language packet into a
+user-mode ring buffer and ringing a doorbell signal.  The two packet types the
+paper's runtime needs are kernel-dispatch and barrier-AND (dependency fences) —
+both modeled here.  Multiple producers (the training engine, the serving
+engine, ad-hoc user code) may submit to the same queue: the paper's
+"simultaneously from other sources e.g. OpenCL/OpenMP" property.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Sequence
+
+from repro.core.hsa.signal import Signal
+from repro.core.roles import RoleKey
+
+
+class Box:
+    """Mutable result slot for a dispatch packet."""
+
+    __slots__ = ("value", "error")
+
+    def __init__(self) -> None:
+        self.value: Any = None
+        self.error: BaseException | None = None
+
+
+@dataclasses.dataclass
+class KernelDispatchPacket:
+    role_key: RoleKey
+    args: tuple[Any, ...]
+    completion: Signal | None = None
+    out: Box = dataclasses.field(default_factory=Box)
+    producer: str = "tf"            # who enqueued: "tf" | "opencl" | "openmp" | ...
+
+
+@dataclasses.dataclass
+class BarrierAndPacket:
+    deps: tuple[Signal, ...]
+    completion: Signal | None = None
+
+
+Packet = KernelDispatchPacket | BarrierAndPacket
+
+
+class QueueFullError(RuntimeError):
+    pass
+
+
+class Queue:
+    """Bounded ring buffer with a doorbell signal (single consumer)."""
+
+    def __init__(self, agent: Any, size: int = 256) -> None:
+        if size < 1:
+            raise ValueError("queue size must be >= 1")
+        self.agent = agent
+        self.size = size
+        self._ring: list[Packet | None] = [None] * size
+        self._write = 0
+        self._read = 0
+        self._lock = threading.Lock()
+        self.doorbell = Signal(0, name="doorbell")
+
+    # -- producer side -----------------------------------------------------------
+
+    def submit(self, packet: Packet) -> int:
+        with self._lock:
+            if self._write - self._read >= self.size:
+                raise QueueFullError(f"queue full ({self.size} packets)")
+            idx = self._write
+            self._ring[idx % self.size] = packet
+            self._write += 1
+        self.doorbell.store(self._write)      # ring the doorbell
+        return idx
+
+    def dispatch(
+        self,
+        role_key: RoleKey,
+        *args: Any,
+        producer: str = "tf",
+    ) -> KernelDispatchPacket:
+        pkt = KernelDispatchPacket(
+            role_key=role_key,
+            args=args,
+            completion=Signal(1, name=f"done:{role_key}"),
+            producer=producer,
+        )
+        self.submit(pkt)
+        return pkt
+
+    def barrier(self, deps: Sequence[Signal]) -> BarrierAndPacket:
+        pkt = BarrierAndPacket(deps=tuple(deps), completion=Signal(1, name="barrier"))
+        self.submit(pkt)
+        return pkt
+
+    # -- consumer side -----------------------------------------------------------
+
+    def pop(self) -> Packet | None:
+        with self._lock:
+            if self._read >= self._write:
+                return None
+            pkt = self._ring[self._read % self.size]
+            self._ring[self._read % self.size] = None
+            self._read += 1
+            return pkt
+
+    def pending(self) -> int:
+        with self._lock:
+            return self._write - self._read
+
+    def __len__(self) -> int:
+        return self.pending()

@@ -1,0 +1,92 @@
+"""hsa_init / hsa_shut_down: system bring-up.
+
+One-time device/kernel setup (paper Table II row 1): enumerate agents, build
+the role library, create the default queue + executor + region manager per
+kernel-dispatch agent.  The measured setup time lands in the ledger's SETUP
+category.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+from repro.core import ledger as ledger_mod
+from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
+from repro.core.hsa.agent import Agent
+from repro.core.hsa.executor import Executor
+from repro.core.hsa.queue import Queue
+from repro.core.reconfig import RegionManager
+from repro.core.roles import RoleLibrary
+
+
+class HsaSystem:
+    def __init__(
+        self,
+        *,
+        num_regions: int = 4,
+        ledger: OverheadLedger = GLOBAL_LEDGER,
+        queue_size: int = 1024,
+    ) -> None:
+        self.ledger = ledger
+        with ledger.timed(ledger_mod.SETUP, what="hsa_init"):
+            self.agents = Agent.discover(num_reconfig_regions=num_regions)
+            self.library = RoleLibrary(ledger=ledger)
+            self.queues: dict[str, Queue] = {}
+            self.executors: dict[str, Executor] = {}
+            self.regions: dict[str, RegionManager] = {}
+            for agent in self.agents:
+                q = agent.create_queue(queue_size)
+                rm = RegionManager(agent.num_reconfig_regions, ledger=ledger)
+                self.queues[agent.name] = q
+                self.regions[agent.name] = rm
+                self.executors[agent.name] = Executor(rm, self.library, ledger=ledger)
+
+    @property
+    def default_agent(self) -> Agent:
+        # Prefer a real accelerator when present; else the first agent.
+        for a in self.agents:
+            if a.kind != "cpu":
+                return a
+        return self.agents[0]
+
+    def queue_of(self, agent: Agent) -> Queue:
+        return self.queues[agent.name]
+
+    def executor_of(self, agent: Agent) -> Executor:
+        return self.executors[agent.name]
+
+    def regions_of(self, agent: Agent) -> RegionManager:
+        return self.regions[agent.name]
+
+    def shutdown(self) -> None:
+        for ex in self.executors.values():
+            ex.stop()
+        for rm in self.regions.values():
+            rm.flush()
+
+
+_SYSTEM: HsaSystem | None = None
+_LOCK = threading.Lock()
+
+
+def hsa_init(**kw: Any) -> HsaSystem:
+    global _SYSTEM
+    with _LOCK:
+        if _SYSTEM is None:
+            _SYSTEM = HsaSystem(**kw)
+        return _SYSTEM
+
+
+def hsa_system() -> HsaSystem:
+    if _SYSTEM is None:
+        raise RuntimeError("hsa_init() has not been called")
+    return _SYSTEM
+
+
+def hsa_shut_down() -> None:
+    global _SYSTEM
+    with _LOCK:
+        if _SYSTEM is not None:
+            _SYSTEM.shutdown()
+            _SYSTEM = None

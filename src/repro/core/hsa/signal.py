@@ -1,0 +1,77 @@
+"""HSA signals: the synchronization primitive of the runtime.
+
+HSA 1.2 signals are 64-bit values with atomic ops and blocking waits; producers
+decrement/store, consumers wait on a condition.  Used here for queue doorbells,
+packet completion, and barrier-AND dependencies — same roles as in the paper's
+runtime.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable
+
+
+class Signal:
+    def __init__(self, initial: int = 1, name: str = "") -> None:
+        self._value = int(initial)
+        self._cond = threading.Condition()
+        self.name = name
+
+    # -- atomics ---------------------------------------------------------------
+
+    def load(self) -> int:
+        with self._cond:
+            return self._value
+
+    def store(self, value: int) -> None:
+        with self._cond:
+            self._value = int(value)
+            self._cond.notify_all()
+
+    def add(self, delta: int) -> int:
+        with self._cond:
+            self._value += int(delta)
+            self._cond.notify_all()
+            return self._value
+
+    def subtract(self, delta: int) -> int:
+        return self.add(-delta)
+
+    def decrement(self) -> int:
+        return self.add(-1)
+
+    def exchange(self, value: int) -> int:
+        with self._cond:
+            old = self._value
+            self._value = int(value)
+            self._cond.notify_all()
+            return old
+
+    # -- waits -------------------------------------------------------------------
+
+    def _wait(self, pred: Callable[[int], bool], timeout: float | None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while not pred(self._value):
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cond.wait(remaining)
+            return True
+
+    def wait_eq(self, target: int = 0, timeout: float | None = None) -> bool:
+        return self._wait(lambda v: v == target, timeout)
+
+    def wait_ne(self, target: int, timeout: float | None = None) -> bool:
+        return self._wait(lambda v: v != target, timeout)
+
+    def wait_lt(self, target: int, timeout: float | None = None) -> bool:
+        return self._wait(lambda v: v < target, timeout)
+
+    def wait_ge(self, target: int, timeout: float | None = None) -> bool:
+        return self._wait(lambda v: v >= target, timeout)
+
+    def __repr__(self) -> str:
+        return f"Signal({self.load()}, name={self.name!r})"

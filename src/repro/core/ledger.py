@@ -1,0 +1,139 @@
+"""Overhead ledger — reproduces the accounting structure of paper Table II.
+
+The paper decomposes the cost of transparent acceleration into exactly three
+categories:
+
+  ===================  =====================  =============================
+  category             occurrence             FPGA meaning -> TPU meaning
+  ===================  =====================  =============================
+  device/kernel setup  once                   runtime+driver init, kernel
+                                              registration -> hsa_init(),
+                                              registry build, AOT synthesis
+  reconfiguration      if not configured      partial bitstream load ->
+                                              program/weights residency miss
+  dispatch latency     every dispatch         AQL packet -> kernel launch
+  ===================  =====================  =============================
+
+All entries are *measured* wall times (perf_counter_ns), never simulated
+constants.  ``table()`` renders the Table II layout; benchmarks/table2 uses it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from typing import Any, Iterator
+
+import contextlib
+
+SETUP = "setup"
+RECONFIG = "reconfig"
+DISPATCH = "dispatch"
+EXEC = "exec"                 # kernel execution proper (not in Table II, kept for Table III)
+
+CATEGORIES = (SETUP, RECONFIG, DISPATCH, EXEC)
+
+OCCURRENCE = {
+    SETUP: "once",
+    RECONFIG: "if not configured",
+    DISPATCH: "every dispatch",
+    EXEC: "every dispatch",
+}
+
+
+@dataclasses.dataclass
+class Entry:
+    category: str
+    seconds: float
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Stat:
+    count: int = 0
+    total_s: float = 0.0
+    min_s: float = math.inf
+    max_s: float = 0.0
+
+    def add(self, seconds: float) -> None:
+        self.count += 1
+        self.total_s += seconds
+        self.min_s = min(self.min_s, seconds)
+        self.max_s = max(self.max_s, seconds)
+
+    @property
+    def mean_us(self) -> float:
+        return (self.total_s / self.count) * 1e6 if self.count else 0.0
+
+
+class OverheadLedger:
+    """Thread-safe accumulator of measured runtime overheads."""
+
+    def __init__(self, keep_entries: bool = False) -> None:
+        self._lock = threading.Lock()
+        self._stats: dict[str, Stat] = {c: Stat() for c in CATEGORIES}
+        self._entries: list[Entry] | None = [] if keep_entries else None
+
+    def record(self, category: str, seconds: float, **meta: Any) -> None:
+        if category not in self._stats:
+            raise ValueError(f"unknown ledger category {category!r}")
+        with self._lock:
+            self._stats[category].add(seconds)
+            if self._entries is not None:
+                self._entries.append(Entry(category, seconds, meta))
+
+    @contextlib.contextmanager
+    def timed(self, category: str, **meta: Any) -> Iterator[None]:
+        t0 = time.perf_counter_ns()
+        try:
+            yield
+        finally:
+            self.record(category, (time.perf_counter_ns() - t0) * 1e-9, **meta)
+
+    def stat(self, category: str) -> Stat:
+        with self._lock:
+            return dataclasses.replace(self._stats[category])
+
+    def entries(self) -> list[Entry]:
+        with self._lock:
+            return list(self._entries or ())
+
+    def reset(self) -> None:
+        with self._lock:
+            self._stats = {c: Stat() for c in CATEGORIES}
+            if self._entries is not None:
+                self._entries = []
+
+    # -- reporting ----------------------------------------------------------
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        with self._lock:
+            return {
+                c: {
+                    "count": float(s.count),
+                    "mean_us": s.mean_us,
+                    "total_us": s.total_s * 1e6,
+                }
+                for c, s in self._stats.items()
+            }
+
+    def table(self) -> str:
+        """Paper Table II layout: operation | occurrence | mean microseconds."""
+        rows = [("Operation", "Occurrence", "Mean [us]", "n")]
+        for cat in (SETUP, RECONFIG, DISPATCH):
+            s = self.stat(cat)
+            label = {
+                SETUP: "device/kernel setup",
+                RECONFIG: "reconfiguration",
+                DISPATCH: "dispatch latency",
+            }[cat]
+            rows.append((label, OCCURRENCE[cat], f"{s.mean_us:.1f}", str(s.count)))
+        widths = [max(len(r[i]) for r in rows) for i in range(4)]
+        lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)) for r in rows]
+        lines.insert(1, "-" * len(lines[0]))
+        return "\n".join(lines)
+
+
+GLOBAL_LEDGER = OverheadLedger(keep_entries=False)

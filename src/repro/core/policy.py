@@ -1,0 +1,175 @@
+"""Role planner: the paper's generic-vs-fixed-weight trade-off, made concrete.
+
+Paper §IV: "TF can consider this trade-off to either generate a lower number of
+generic roles or fix layer weights to have more efficient hardware."  A generic
+role (weights as operands) is shared by every layer that invokes the op, so it
+stays resident; fixing weights yields one role *per layer* — each faster, but
+with more roles than regions the LRU starts thrashing and every layer pays a
+reconfiguration.
+
+The planner takes a dispatch trace (the op sequence of one model step), a
+region budget, and a measured cost model, simulates LRU residency for each
+assignment of {generic, fixed_weight} per op type, and picks the assignment
+with the lowest predicted steady-state step time.  Op-type counts are small,
+so exhaustive search is exact; a greedy fallback covers wide op sets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import OrderedDict
+from typing import Hashable, Sequence
+
+from repro.core.registry import FIXED_WEIGHT, GENERIC
+
+
+@dataclasses.dataclass(frozen=True)
+class Invocation:
+    """One op call site in a model step: (op type, site id e.g. layer index)."""
+
+    op: str
+    site: Hashable
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Measured per-category costs in seconds (from the overhead ledger)."""
+
+    reconfig_s: float
+    dispatch_s: float
+    exec_generic_s: dict[str, float]       # op -> seconds
+    exec_fixed_s: dict[str, float]         # op -> seconds (faster: weights baked)
+
+    def exec_s(self, op: str, spec: str) -> float:
+        table = self.exec_fixed_s if spec == FIXED_WEIGHT else self.exec_generic_s
+        return table[op]
+
+
+@dataclasses.dataclass
+class SimResult:
+    total_s: float
+    hits: int
+    misses: int
+    distinct_roles: int
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+def role_sequence(
+    trace: Sequence[Invocation], assignment: dict[str, str]
+) -> list[Hashable]:
+    """Map invocations to role identities under an assignment.
+
+    Generic ops share one role per op type; fixed-weight ops get one role per
+    call site.
+    """
+    seq: list[Hashable] = []
+    for inv in trace:
+        spec = assignment.get(inv.op, GENERIC)
+        seq.append((inv.op, GENERIC) if spec == GENERIC else (inv.op, inv.site))
+    return seq
+
+
+def simulate_lru(
+    roles: Sequence[Hashable],
+    budget: int,
+    cost: CostModel,
+    spec_of: dict[Hashable, str],
+    op_of: dict[Hashable, str],
+    *,
+    repeats: int = 2,
+) -> SimResult:
+    """Steady-state LRU simulation over ``repeats`` passes of the role sequence.
+
+    The first pass is compulsory-miss dominated; reporting the *last* pass
+    gives the steady-state step cost the planner optimizes.
+    """
+    resident: "OrderedDict[Hashable, None]" = OrderedDict()
+    last = SimResult(0.0, 0, 0, len(set(roles)))
+    for _ in range(max(1, repeats)):
+        total, hits, misses = 0.0, 0, 0
+        for r in roles:
+            if r in resident:
+                resident.move_to_end(r)
+                hits += 1
+            else:
+                misses += 1
+                if len(resident) >= budget:
+                    resident.popitem(last=False)
+                resident[r] = None
+                total += cost.reconfig_s
+            total += cost.dispatch_s + cost.exec_s(op_of[r], spec_of[r])
+        last = SimResult(total, hits, misses, len(set(roles)))
+    return last
+
+
+@dataclasses.dataclass
+class Plan:
+    assignment: dict[str, str]             # op -> GENERIC | FIXED_WEIGHT
+    predicted: SimResult
+    alternatives: list[tuple[dict[str, str], float]] = dataclasses.field(
+        default_factory=list
+    )
+
+
+def _evaluate(
+    trace: Sequence[Invocation],
+    assignment: dict[str, str],
+    budget: int,
+    cost: CostModel,
+    repeats: int,
+) -> SimResult:
+    roles = role_sequence(trace, assignment)
+    spec_of = {}
+    op_of = {}
+    for inv, r in zip(trace, roles):
+        spec_of[r] = assignment.get(inv.op, GENERIC)
+        op_of[r] = inv.op
+    return simulate_lru(roles, budget, cost, spec_of, op_of, repeats=repeats)
+
+
+def plan_roles(
+    trace: Sequence[Invocation],
+    budget: int,
+    cost: CostModel,
+    *,
+    repeats: int = 2,
+    exhaustive_limit: int = 12,
+) -> Plan:
+    """Choose generic vs fixed-weight per op type to minimize step latency."""
+    ops = sorted({inv.op for inv in trace})
+    best: tuple[float, dict[str, str], SimResult] | None = None
+    alts: list[tuple[dict[str, str], float]] = []
+
+    if len(ops) <= exhaustive_limit:
+        choices = itertools.product((GENERIC, FIXED_WEIGHT), repeat=len(ops))
+        for combo in choices:
+            assignment = dict(zip(ops, combo))
+            sim = _evaluate(trace, assignment, budget, cost, repeats)
+            alts.append((assignment, sim.total_s))
+            if best is None or sim.total_s < best[0]:
+                best = (sim.total_s, assignment, sim)
+    else:
+        # Greedy: start all-generic, flip the op with the best marginal gain.
+        assignment = {op: GENERIC for op in ops}
+        sim = _evaluate(trace, assignment, budget, cost, repeats)
+        best = (sim.total_s, dict(assignment), sim)
+        improved = True
+        while improved:
+            improved = False
+            for op in ops:
+                trial = dict(assignment)
+                trial[op] = FIXED_WEIGHT if trial[op] == GENERIC else GENERIC
+                s = _evaluate(trace, trial, budget, cost, repeats)
+                if s.total_s < best[0]:
+                    best = (s.total_s, trial, s)
+                    assignment = trial
+                    improved = True
+
+    assert best is not None
+    alts.sort(key=lambda p: p[1])
+    return Plan(assignment=best[1], predicted=best[2], alternatives=alts[:8])

@@ -1,0 +1,130 @@
+"""Region manager: bounded kernel residency with LRU eviction.
+
+The FPGA in the paper exposes a fixed number of reconfigurable regions; when a
+dispatched kernel's role is not loaded, the runtime reconfigures a region,
+evicting the least-recently-used role if all regions are occupied.  The TPU
+analogue manages a bounded set of device-loaded executables (program + weight
+residency).  ``ensure_resident`` is the single choke point the HSA executor
+calls before every kernel launch; it records reconfiguration costs in the
+overhead ledger (paper Table II row 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Iterator
+
+from repro.core import ledger as ledger_mod
+from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
+from repro.core.roles import Role, RoleKey
+
+
+@dataclasses.dataclass
+class ResidencyStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+@dataclasses.dataclass
+class ResidencyResult:
+    role: Role
+    hit: bool
+    evicted: RoleKey | None = None
+    reconfig_s: float = 0.0
+
+
+class RegionManager:
+    """LRU-managed residency over ``num_regions`` slots.
+
+    Pinned roles are exempt from eviction (the paper's static shell services —
+    e.g. a DMA engine — correspond to pinned entries).
+    """
+
+    def __init__(
+        self,
+        num_regions: int,
+        *,
+        ledger: OverheadLedger = GLOBAL_LEDGER,
+    ) -> None:
+        if num_regions < 1:
+            raise ValueError("need at least one region")
+        self.num_regions = num_regions
+        self.ledger = ledger
+        self.stats = ResidencyStats()
+        self._resident: "OrderedDict[RoleKey, Role]" = OrderedDict()  # LRU: oldest first
+        self._pinned: set[RoleKey] = set()
+
+    # -- core protocol -------------------------------------------------------
+
+    def ensure_resident(self, role: Role) -> ResidencyResult:
+        key = role.key
+        if key in self._resident:
+            self._resident.move_to_end(key)
+            self.stats.hits += 1
+            return ResidencyResult(role=role, hit=True)
+
+        self.stats.misses += 1
+        evicted: RoleKey | None = None
+        if len(self._resident) >= self.num_regions:
+            evicted = self._evict_one()
+            if evicted is None:
+                raise RuntimeError(
+                    f"all {self.num_regions} regions pinned; cannot load {role.name}"
+                )
+
+        import time
+
+        t0 = time.perf_counter_ns()
+        role.load()
+        dt = (time.perf_counter_ns() - t0) * 1e-9
+        self.ledger.record(
+            ledger_mod.RECONFIG, dt, role=role.name, evicted=str(evicted), source=role.source
+        )
+        self._resident[key] = role
+        return ResidencyResult(role=role, hit=False, evicted=evicted, reconfig_s=dt)
+
+    def _evict_one(self) -> RoleKey | None:
+        for key in self._resident:          # oldest-first iteration order
+            if key not in self._pinned:
+                victim = self._resident.pop(key)
+                victim.unload()
+                self.stats.evictions += 1
+                return key
+        return None
+
+    # -- management ------------------------------------------------------------
+
+    def pin(self, role: Role) -> None:
+        self.ensure_resident(role)
+        self._pinned.add(role.key)
+
+    def unpin(self, key: RoleKey) -> None:
+        self._pinned.discard(key)
+
+    def flush(self) -> None:
+        for role in self._resident.values():
+            role.unload()
+        self._resident.clear()
+        self._pinned.clear()
+
+    def resident_keys(self) -> list[RoleKey]:
+        return list(self._resident.keys())
+
+    def is_resident(self, key: RoleKey) -> bool:
+        return key in self._resident
+
+    def __len__(self) -> int:
+        return len(self._resident)
+
+    def __iter__(self) -> Iterator[Role]:
+        return iter(self._resident.values())

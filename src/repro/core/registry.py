@@ -1,0 +1,200 @@
+"""Kernel registry: the heart of transparent acceleration.
+
+The paper registers presynthesized FPGA bitstreams as TensorFlow kernels; TF's
+executor looks up a registered kernel implementation for the HSA device type and
+dispatches it through the HSA runtime.  Here the registry maps a logical op name
+(``"matmul"``, ``"flash_attention"``, ...) plus a device kind to a ranked list of
+implementations.  Each implementation is tagged with a *source*:
+
+  - ``"reference"`` — pure-jnp oracle (always correct, never fast),
+  - ``"xla"``       — XLA-optimized jnp/lax formulation,
+  - ``"pallas"``    — hand-written Pallas TPU kernel (the "presynthesized role").
+
+Resolution is policy driven (see :mod:`repro.core.dispatch`): a preference order
+over sources, like the paper's choice between online-synthesized OpenCL kernels
+and presynthesized bitstreams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Iterable, Sequence
+
+Sources = ("pallas", "xla", "reference")
+
+GENERIC = "generic"
+FIXED_WEIGHT = "fixed_weight"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceFootprint:
+    """Static resource claim of an implementation (paper Table I analogue).
+
+    ``vmem_bytes`` is the VMEM working set implied by the kernel's BlockSpecs;
+    ``dsp_equiv`` counts MXU passes per block as the moral equivalent of DSP
+    slices.  Purely informational for reference/xla impls.
+    """
+
+    vmem_bytes: int = 0
+    hbm_bytes: int = 0
+    mxu_tiles: int = 0
+
+    def vmem_fraction(self, vmem_capacity: int = 128 * 1024 * 1024) -> float:
+        return self.vmem_bytes / float(vmem_capacity)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One registered implementation of a logical op."""
+
+    op: str
+    device_kind: str
+    source: str                      # "pallas" | "xla" | "reference"
+    fn: Callable[..., Any]
+    name: str = ""
+    specialization: str = GENERIC    # GENERIC | FIXED_WEIGHT
+    priority: int = 0                # higher wins within a source
+    footprint: ResourceFootprint = ResourceFootprint()
+    tags: tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.source not in Sources:
+            raise ValueError(f"unknown source {self.source!r}; expected one of {Sources}")
+        if not self.name:
+            object.__setattr__(self, "name", f"{self.op}:{self.source}:{self.specialization}")
+
+
+class KernelRegistry:
+    """Thread-safe registry of kernel implementations.
+
+    Mirrors TF's per-device kernel registry: ``register`` at import time,
+    ``resolve`` at op-dispatch time.  ``snapshot``/``restore`` support
+    hermetic tests.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._impls: dict[tuple[str, str], list[KernelImpl]] = {}
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, impl: KernelImpl, *, allow_override: bool = False) -> KernelImpl:
+        key = (impl.op, impl.device_kind)
+        with self._lock:
+            bucket = self._impls.setdefault(key, [])
+            existing = [i for i in bucket if i.name == impl.name]
+            if existing and not allow_override:
+                raise ValueError(f"kernel {impl.name!r} already registered for {key}")
+            for old in existing:
+                bucket.remove(old)
+            bucket.append(impl)
+            # Stable resolution order: source preference is applied at resolve
+            # time; within a bucket keep highest priority first.
+            bucket.sort(key=lambda i: -i.priority)
+        return impl
+
+    def define(
+        self,
+        op: str,
+        *,
+        device_kind: str = "tpu",
+        source: str,
+        name: str = "",
+        specialization: str = GENERIC,
+        priority: int = 0,
+        footprint: ResourceFootprint = ResourceFootprint(),
+        tags: Sequence[str] = (),
+        allow_override: bool = False,
+    ) -> Callable[[Callable[..., Any]], Callable[..., Any]]:
+        """Decorator form: ``@registry.define("matmul", source="pallas")``."""
+
+        def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
+            self.register(
+                KernelImpl(
+                    op=op,
+                    device_kind=device_kind,
+                    source=source,
+                    fn=fn,
+                    name=name,
+                    specialization=specialization,
+                    priority=priority,
+                    footprint=footprint,
+                    tags=tuple(tags),
+                ),
+                allow_override=allow_override,
+            )
+            return fn
+
+        return deco
+
+    # -- resolution --------------------------------------------------------
+
+    def resolve(
+        self,
+        op: str,
+        device_kind: str,
+        prefer: Sequence[str] = ("xla", "reference"),
+        *,
+        specialization: str | None = None,
+        require: bool = True,
+    ) -> KernelImpl | None:
+        """Find the best implementation under a source-preference order.
+
+        Falls back through ``prefer`` in order; within one source the highest
+        priority impl wins.  ``specialization`` filters (e.g. a fixed-weight
+        role requested by the role planner).
+        """
+        with self._lock:
+            bucket = list(self._impls.get((op, device_kind), ()))
+            if device_kind != "any":
+                bucket += list(self._impls.get((op, "any"), ()))
+        if specialization is not None:
+            bucket = [i for i in bucket if i.specialization == specialization]
+        for source in prefer:
+            matches = [i for i in bucket if i.source == source]
+            if matches:
+                return max(matches, key=lambda i: i.priority)
+        if require:
+            have = sorted({i.source for i in bucket})
+            raise KeyError(
+                f"no kernel for op={op!r} device_kind={device_kind!r} under "
+                f"prefer={tuple(prefer)}; registered sources: {have}"
+            )
+        return None
+
+    def lookup(self, op: str, device_kind: str = "tpu") -> list[KernelImpl]:
+        with self._lock:
+            out = list(self._impls.get((op, device_kind), ()))
+            if device_kind != "any":
+                out += list(self._impls.get((op, "any"), ()))
+            return out
+
+    def ops(self) -> list[str]:
+        with self._lock:
+            return sorted({op for (op, _k) in self._impls})
+
+    # -- test support ------------------------------------------------------
+
+    def snapshot(self) -> dict[tuple[str, str], list[KernelImpl]]:
+        with self._lock:
+            return {k: list(v) for k, v in self._impls.items()}
+
+    def restore(self, snap: dict[tuple[str, str], list[KernelImpl]]) -> None:
+        with self._lock:
+            self._impls = {k: list(v) for k, v in snap.items()}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._impls.clear()
+
+
+GLOBAL_REGISTRY = KernelRegistry()
+
+
+def register(impl: KernelImpl, **kw: Any) -> KernelImpl:
+    return GLOBAL_REGISTRY.register(impl, **kw)
+
+
+def define(op: str, **kw: Any) -> Callable[[Callable[..., Any]], Callable[..., Any]]:
+    return GLOBAL_REGISTRY.define(op, **kw)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, SyntheticTokens, make_batch_iterator

@@ -1,0 +1,104 @@
+"""Deterministic synthetic token pipeline — stateless-resumable, sharded.
+
+Production posture: every batch is a pure function of (seed, step), so a
+restarted or elastically-rescaled job regenerates exactly the token stream it
+would have seen — no data-loader state in checkpoints, no skew after failover
+(the property real pipelines get from deterministic sampling over a fixed
+corpus index).
+
+The synthetic stream is a mixture of Zipfian unigrams and shifted-repeat
+structure so models actually have something learnable (copy heads / induction
+patterns emerge within a few hundred steps on the quickstart config).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    repeat_period: int = 64           # induction structure
+    repeat_prob: float = 0.5
+
+
+class SyntheticTokens:
+    """Batch factory: ``batch_at(step)`` is pure and O(batch) to compute."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        # precompute the Zipf CDF once (vocab can be 200k)
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        probs = 1.0 / ranks ** cfg.zipf_a
+        self._cdf = np.cumsum(probs / probs.sum())
+
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, 0xDA7A])
+        )
+        u = rng.random((cfg.global_batch, cfg.seq_len))
+        tokens = np.searchsorted(self._cdf, u).astype(np.int32)
+        # overlay shifted-repeat structure: second half repeats the first at
+        # period offsets, giving induction heads something to learn
+        rep = rng.random((cfg.global_batch, 1)) < cfg.repeat_prob
+        p = cfg.repeat_period
+        if cfg.seq_len >= 2 * p:
+            src = tokens[:, :p]
+            reps = np.tile(src, (1, cfg.seq_len // p + 1))[:, : cfg.seq_len]
+            tokens = np.where(rep, reps, tokens)
+        tokens = np.clip(tokens, 0, cfg.vocab_size - 1)
+        return {"tokens": tokens}
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_batch_iterator(
+    cfg: DataConfig,
+    *,
+    start_step: int = 0,
+    sharding=None,
+    prefetch: int = 1,
+):
+    """Iterator of device-put batches with one-step lookahead prefetch.
+
+    ``sharding`` (a NamedSharding for [B, S]) places each host batch directly
+    into its sharded device layout; prefetch overlaps host generation with the
+    device step (the standard input-pipeline/compute overlap).
+    """
+    src = SyntheticTokens(cfg)
+
+    def put(batch):
+        if sharding is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        return {k: jax.device_put(v, sharding) for k, v in batch.items()}
+
+    def gen():
+        import collections
+
+        queue: collections.deque = collections.deque()
+        step = start_step
+        for _ in range(max(1, prefetch)):
+            queue.append(put(src.batch_at(step)))
+            step += 1
+        while True:
+            yield queue.popleft()
+            queue.append(put(src.batch_at(step)))
+            step += 1
+
+    return gen()

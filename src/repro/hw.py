@@ -1,0 +1,44 @@
+"""Target-hardware constants (TPU v5e) — single source of truth.
+
+Used by the roofline analysis, the agent descriptors, and kernel BlockSpec
+sizing.  This container executes on CPU; these constants describe the TARGET.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float        # FLOP/s per chip
+    peak_int8_ops: float          # OP/s per chip
+    hbm_bytes: int                # capacity
+    hbm_bw: float                 # bytes/s
+    vmem_bytes: int               # on-chip vector memory
+    ici_bw_per_link: float        # bytes/s per ICI link
+    ici_links: int                # links per chip (2D torus -> 4)
+    mxu_dim: int = 128            # systolic array edge
+    clock_hz: float = 0.94e9      # derived: 197e12 / (8 * 128*128*2) ~ 0.94 GHz equiv
+
+    @property
+    def flops_per_cycle(self) -> float:
+        return self.peak_bf16_flops / self.clock_hz
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    peak_int8_ops=394e12,
+    hbm_bytes=16 * 1024**3,
+    hbm_bw=819e9,
+    vmem_bytes=128 * 1024**2,
+    ici_bw_per_link=50e9,
+    ici_links=4,
+)
+
+# The evaluation host of the paper (Ultra96: ARM Cortex-A53) — kept only for
+# benchmark narration; OP/cycle comparisons in benchmarks/table3 are measured
+# on this container's host CPU instead.
+DEFAULT_CHIP = TPU_V5E

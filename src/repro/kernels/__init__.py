@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (roles) + XLA/reference implementations.
+
+Importing ``repro.kernels.ops`` registers every implementation in the global
+kernel registry.
+"""
+
+from repro.kernels import ops  # noqa: F401  (registration side effect)

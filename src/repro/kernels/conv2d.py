@@ -1,0 +1,79 @@
+"""Small-filter convolution roles — paper Table I roles 3 & 4.
+
+The paper's roles 3/4 are a 5×5/1-filter and a 3×3/2-filter VALID convolution
+with fixed int16 weights packed into DSP slices.  The MXU-idiomatic equivalent
+unrolls the kh×kw taps into shifted multiply-accumulates over a VMEM-resident
+image tile (int16 → int32 accumulation; the MXU's native int8/int16 path).
+``conv2d_fixed_weight`` bakes the weights as compile-time constants — the
+weight-specialized role the paper trades regions for.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.registry import ResourceFootprint
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, accum_dtype) -> None:
+    x = x_ref[0].astype(accum_dtype)              # [H, W, Cin]
+    w = w_ref[...].astype(accum_dtype)            # [kh, kw, Cin, F]
+    H, W, _ = x.shape
+    oh, ow = H - kh + 1, W - kw + 1
+    acc = jnp.zeros((oh, ow, w.shape[-1]), accum_dtype)
+    for di in range(kh):                           # static unroll over taps
+        for dj in range(kw):
+            patch = x[di:di + oh, dj:dj + ow, :]   # [oh, ow, Cin]
+            acc = acc + jnp.einsum(
+                "hwc,cf->hwf", patch, w[di, dj],
+                preferred_element_type=accum_dtype,
+            )
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def conv2d(
+    x: jax.Array,                   # [B, H, W, Cin]
+    w: jax.Array,                   # [kh, kw, Cin, F]
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, W, Cin = x.shape
+    kh, kw, Cin2, F = w.shape
+    assert Cin == Cin2, (x.shape, w.shape)
+    accum_dtype = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+    oh, ow = H - kh + 1, W - kw + 1
+
+    kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, accum_dtype=accum_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),                                 # one image tile per grid step
+        in_specs=[
+            pl.BlockSpec((1, H, W, Cin), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, Cin, F), lambda b: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, F), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, oh, ow, F), accum_dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def conv2d_fixed_weight(w: jax.Array) -> Callable[..., jax.Array]:
+    """Weight-specialized conv role (paper roles 3/4: 'fixed weights')."""
+    w_const = jnp.asarray(w)
+
+    def fixed(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+        return conv2d(x, w_const, interpret=interpret)
+
+    fixed.__name__ = f"conv2d_fixed_{w.shape[0]}x{w.shape[1]}x{w.shape[3]}"
+    return fixed
+
+
+def footprint(h: int = 128, w: int = 128, cin: int = 1, f: int = 2,
+              kh: int = 3, kw: int = 3, itemsize: int = 2) -> ResourceFootprint:
+    vmem = h * w * cin * itemsize + kh * kw * cin * f * itemsize + h * w * f * 4
+    return ResourceFootprint(vmem_bytes=vmem)

@@ -1,0 +1,166 @@
+"""Flash attention (online-softmax, KV-blocked) — the attention role.
+
+TPU-native adaptation:
+
+  - Q/K/V tiles stream HBM→VMEM under explicit BlockSpecs; the running
+    (max, denominator, accumulator) state lives in VMEM scratch and is carried
+    across the KV grid axis (innermost), so logits never materialize in HBM —
+    the classic O(S²) → O(S) memory rewrite, expressed for the MXU with
+    128-aligned q/k blocks.
+  - GQA is folded into the index maps: the K/V BlockSpecs map query head ``h``
+    to kv head ``h // group`` — no repeated KV materialization.
+  - ``causal`` + ``window`` masking happens block-wise: invisible blocks are
+    skipped via ``pl.when`` (on TPU this prunes whole MXU passes; ~2× for
+    causal), visible-but-partial blocks mask elementwise at -1e30.
+  - ``kv_offset = T - S`` places queries at the end of the KV axis, which makes
+    the same kernel serve prefill (S == T), chunked prefill (S < T), and
+    sliding-window decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.registry import ResourceFootprint
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    n_k: int,
+    causal: bool,
+    window: int | None,
+    kv_offset: int,
+) -> None:
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # --- block-level visibility (static grid, dynamic skip) -------------------
+    q_start = qi * block_q + kv_offset          # first query position on kv axis
+    q_end = q_start + block_q - 1
+    k_start = ki * block_k
+    k_end = k_start + block_k - 1
+    visible = True
+    if causal:
+        visible = jnp.logical_and(visible, k_start <= q_end)
+    if window is not None:
+        visible = jnp.logical_and(visible, k_end > q_start - window)
+
+    @pl.when(visible)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, D]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # [bq, bk]
+        correction = jnp.exp(m_prev - m_new)          # [bq, 1]
+        l_ref[...] = l_ref[...] * correction + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * correction + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                   # [B, Hq, S, D]
+    k: jax.Array,                   # [B, Hkv, T, D]
+    v: jax.Array,                   # [B, Hkv, T, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, S, D = q.shape
+    _, Hkv, T, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    bq, bk = min(block_q, S), min(block_k, T)
+    if S % bq or T % bk:
+        raise ValueError(f"S={S} T={T} not divisible by blocks ({bq},{bk})")
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(D))
+    n_k = T // bk
+    kv_offset = T - S
+
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale,
+        block_q=bq,
+        block_k=bk,
+        n_k=n_k,
+        causal=causal,
+        window=window,
+        kv_offset=kv_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, S // bq, n_k),                         # kv innermost
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),               # running max
+            pltpu.VMEM((bq, 1), jnp.float32),               # running denominator
+            pltpu.VMEM((bq, D), jnp.float32),               # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def footprint(block_q: int = 256, block_k: int = 256, d: int = 128,
+              itemsize: int = 2) -> ResourceFootprint:
+    vmem = (
+        block_q * d * itemsize            # q tile
+        + 2 * block_k * d * itemsize      # k, v tiles
+        + block_q * d * 4                 # accumulator
+        + 2 * block_q * 4                 # m, l
+        + block_q * block_k * 4           # logits tile
+        + block_q * d * itemsize          # out tile
+    )
+    return ResourceFootprint(
+        vmem_bytes=vmem,
+        mxu_tiles=2 * (block_q // 128) * (block_k // 128) * max(1, d // 128),
+    )

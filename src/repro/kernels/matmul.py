@@ -1,0 +1,130 @@
+"""Blocked MXU matmul — the "fully connected" roles (paper Table I, roles 1/2).
+
+TPU-native design notes (the FPGA → TPU hardware adaptation):
+
+  - The FPGA role streams activations through DSP slices; the TPU analogue is
+    feeding the 128×128 MXU systolic array from VMEM.  Block shapes are
+    multiples of 128 on the M/N/K matmul dims so every pass fills the array.
+  - VMEM is the reconfigurable-region budget here: the working set per grid
+    step is ``bm*bk + bk*bn + bm*bn(acc)`` elements and must fit well inside
+    128 MiB; defaults (256, 256, 512) use ~1.6 MiB at bf16 — deliberately small
+    so several "roles" can stay co-resident, mirroring the paper's multi-role
+    regions.
+  - Accumulation is f32 in a VMEM scratch accumulator across the K grid axis
+    (K innermost → the accumulator is revisited, never spilled to HBM).
+  - ``activation`` fuses the epilogue (silu/gelu) into the same kernel — the
+    "fixed function" efficiency the paper gets from specialized roles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.registry import ResourceFootprint
+
+
+def _epilogue(acc: jax.Array, activation: str | None) -> jax.Array:
+    if activation is None:
+        return acc
+    if activation == "silu":
+        return acc * jax.nn.sigmoid(acc)
+    if activation == "gelu":
+        return jax.nn.gelu(acc)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, activation: str | None,
+               out_dtype) -> None:
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_idx == n_k - 1)
+    def _finalize():
+        o_ref[...] = _epilogue(acc_ref[...], activation).astype(out_dtype)
+
+
+def matmul(
+    x: jax.Array,                       # [M, K]
+    w: jax.Array,                       # [K, N]
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype: jnp.dtype | None = None,
+    activation: str | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(
+            f"shape ({M},{K})x({K},{N}) not divisible by blocks ({bm},{bn},{bk})"
+        )
+    out_dtype = out_dtype or x.dtype
+    n_k = K // bk
+
+    kernel = functools.partial(
+        _mm_kernel, n_k=n_k, activation=activation, out_dtype=out_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),                       # K innermost
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+
+
+def matmul_fixed_weight(
+    w: jax.Array,
+    **kw,
+) -> Callable[..., jax.Array]:
+    """Fixed-weight role factory: weights baked into the program (paper §IV).
+
+    The returned callable closes over ``w`` as a compile-time constant, so the
+    compiled executable is weight-specialized — one role per layer, faster
+    (weights pre-resident in the program image), but each layer now needs its
+    own region.  The role planner decides when this pays off.
+    """
+
+    def fixed(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+        return matmul(x, w, interpret=interpret, **kw)
+
+    fixed.__name__ = f"matmul_fixed_{w.shape[0]}x{w.shape[1]}"
+    return fixed
+
+
+def footprint(
+    block_m: int = 256, block_n: int = 256, block_k: int = 512,
+    itemsize: int = 2,
+) -> ResourceFootprint:
+    vmem = (
+        block_m * block_k * itemsize
+        + block_k * block_n * itemsize
+        + block_m * block_n * 4                 # f32 accumulator
+        + block_m * block_n * itemsize          # output block
+    )
+    return ResourceFootprint(
+        vmem_bytes=vmem,
+        mxu_tiles=(block_m // 128) * (block_n // 128) * (block_k // 128),
+    )

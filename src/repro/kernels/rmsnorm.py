@@ -1,0 +1,60 @@
+"""Fused RMSNorm kernel.
+
+One HBM round-trip instead of three (square-reduce, normalize, scale): rows
+are blocked into VMEM, statistics computed in f32 on-chip, and the scaled
+result written once.  The feature axis is kept whole per block (d_model up to
+8192 ≈ 32 KiB/row at f32 — trivially VMEM-resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.registry import ResourceFootprint
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float) -> None:
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,                  # [..., D]
+    weight: jax.Array,             # [D]
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, D)
+    br = min(block_rows, rows)
+    if rows % br:
+        # fall back to a row count that divides; pallas grids must tile exactly
+        br = 1
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, D), x.dtype),
+        interpret=interpret,
+    )(x2, weight)
+    return out.reshape(orig_shape)
+
+
+def footprint(block_rows: int = 256, d: int = 8192, itemsize: int = 2) -> ResourceFootprint:
+    return ResourceFootprint(vmem_bytes=block_rows * d * (itemsize + 4) + d * itemsize)

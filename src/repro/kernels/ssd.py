@@ -1,0 +1,141 @@
+"""Mamba-2 SSD (state-space duality) chunked-scan kernel.
+
+The SSD insight: a selective-SSM recurrence over a chunk of Q tokens is a
+*masked matmul* (quadratic-in-Q, MXU-friendly) plus a rank-1 state carry across
+chunks (linear in sequence).  That is exactly the right decomposition for the
+TPU: intra-chunk work fills the 128×128 MXU; the inter-chunk state ([P, N] per
+head) lives in VMEM scratch and is carried across the chunk grid axis
+(innermost), so the sequential part never touches HBM.
+
+Per chunk (all f32, decay factors are ≤ 1 so no overflow):
+
+  cum[i]   = Σ_{k≤i} dt_k·a_log                       (running log-decay)
+  M[i,j]   = (C_i·B_j) · exp(cum[i] − cum[j]) · 1[i≥j]
+  Y_intra  = M @ (dt ⊙ X)                              [Q,Q]@[Q,P]
+  Y_inter  = exp(cum) ⊙ (C @ h_prevᵀ)                  [Q,N]@[N,P]
+  h_new    = exp(cum[Q−1])·h_prev + (w ⊙ dt ⊙ X)ᵀ @ B  [P,Q]@[Q,N],
+             w_j = exp(cum[Q−1] − cum[j])
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.registry import ResourceFootprint
+
+
+def _ssd_kernel(
+    x_ref, b_ref, c_ref, dt_ref, alog_ref,
+    y_ref, state_ref,
+    h_scratch,
+    *,
+    chunk: int,
+    n_chunks: int,
+) -> None:
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)          # [Q, P]
+    b = b_ref[0, :, 0].astype(jnp.float32)          # [Q, N]
+    c = c_ref[0, :, 0].astype(jnp.float32)          # [Q, N]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # [Q]
+    a_log = alog_ref[0].astype(jnp.float32)         # scalar
+
+    cum = jnp.cumsum(dt * a_log)                    # [Q], non-increasing
+    dtx = x * dt[:, None]                           # [Q, P]
+
+    # intra-chunk masked matmul (exponent clamped: see ops.xla_ssd note)
+    g = jnp.dot(c, b.T, preferred_element_type=jnp.float32)          # [Q, Q]
+    decay = jnp.exp(jnp.minimum(cum[:, None] - cum[None, :], 0.0))   # [Q, Q]
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    m = jnp.where(i_idx >= j_idx, g * decay, 0.0)
+    y = jnp.dot(m, dtx, preferred_element_type=jnp.float32)          # [Q, P]
+
+    # inter-chunk contribution from carried state
+    h_prev = h_scratch[...]                                          # [P, N]
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        c, h_prev.T, preferred_element_type=jnp.float32
+    )
+
+    # state carry
+    w = jnp.exp(cum[-1] - cum)                                       # [Q]
+    h_scratch[...] = jnp.exp(cum[-1]) * h_prev + jnp.dot(
+        (dtx * w[:, None]).T, b, preferred_element_type=jnp.float32
+    )
+
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_ref[0, 0] = h_scratch[...]
+
+
+def ssd(
+    x: jax.Array,                   # [B, S, H, P]
+    a_log: jax.Array,               # [H]
+    b: jax.Array,                   # [B, S, G, N]
+    c: jax.Array,                   # [B, S, G, N]
+    dt: jax.Array,                  # [B, S, H]
+    *,
+    chunk: int = 256,
+    return_state: bool = False,
+    interpret: bool = False,
+):
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert H % G == 0, (H, G)
+    rep = H // G
+    q = min(chunk, S)
+    if S % q:
+        raise ValueError(f"S={S} not divisible by chunk={q}")
+    n_chunks = S // q
+
+    kernel = functools.partial(_ssd_kernel, chunk=q, n_chunks=n_chunks)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),                      # chunk innermost
+        in_specs=[
+            pl.BlockSpec((1, q, 1, P), lambda bb, h, cc: (bb, cc, h, 0)),
+            pl.BlockSpec((1, q, 1, N), lambda bb, h, cc: (bb, cc, h // rep, 0)),
+            pl.BlockSpec((1, q, 1, N), lambda bb, h, cc: (bb, cc, h // rep, 0)),
+            pl.BlockSpec((1, q, 1), lambda bb, h, cc: (bb, cc, h)),
+            pl.BlockSpec((1,), lambda bb, h, cc: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, P), lambda bb, h, cc: (bb, cc, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bb, h, cc: (bb, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, dt, a_log)
+    if return_state:
+        return y, state
+    return y
+
+
+def footprint(chunk: int = 256, p: int = 64, n: int = 128,
+              itemsize: int = 2) -> ResourceFootprint:
+    vmem = (
+        chunk * p * itemsize          # x tile
+        + 2 * chunk * n * itemsize    # b, c tiles
+        + chunk * chunk * 4           # masked matmul tile
+        + p * n * 4                   # carried state
+        + chunk * p * 4               # y accumulator
+    )
+    return ResourceFootprint(
+        vmem_bytes=vmem,
+        mxu_tiles=3 * (chunk // 128) * max(1, n // 128),
+    )

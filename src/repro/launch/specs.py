@@ -1,0 +1,60 @@
+"""Abstract input specs for every (arch × shape) cell.
+
+ShapeDtypeStruct stand-ins only — weak-type-correct, shardable, zero device
+allocation.  ``step_kind`` decides which program the cell lowers:
+train_* → train_step, prefill_* → prefill_step, decode_*/long_* → decode_step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.layers import COMPUTE_DTYPE
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Inputs for train/prefill programs."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_seq, cfg.d_model), COMPUTE_DTYPE
+        )
+    if cfg.frontend == "audio_frames":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_seq, cfg.d_model), COMPUTE_DTYPE
+        )
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig, model) -> tuple[dict, dict]:
+    """(tokens, cache) for decode programs: 1 new token, seq_len-deep cache."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache = model.cache_specs(B, S)
+    return tokens, cache
+
+
+def abstract_opt_state(opt_cfg, abstract_params):
+    from repro.optim.adamw import opt_init
+
+    return jax.eval_shape(lambda p: opt_init(opt_cfg, p), abstract_params)
+
+
+def pick_opt(cfg: ArchConfig):
+    """Optimizer memory ladder for a 16 GB/chip budget:
+
+    <20B: AdamW (f32 moments).  20–300B: Adafactor (bf16 momentum, factored
+    second moment).  >300B: classic momentum-free Adafactor + bf16 microbatch
+    gradient accumulation — the DeepSeek-scale configuration.
+    """
+    from repro.optim.adamw import OptConfig
+
+    total = cfg.total_params()
+    if total > 300e9:
+        return OptConfig(kind="adafactor", b1=0.0, accum_dtype="bfloat16")
+    if total > 20e9:
+        return OptConfig(kind="adafactor")
+    return OptConfig(kind="adamw")

@@ -1,0 +1,5 @@
+"""Model zoo: 10 assigned architectures from shared, dispatch-routed blocks."""
+
+from repro.models.model import DecoderLM, EncDecLM, build_model, plan_segments
+
+__all__ = ["DecoderLM", "EncDecLM", "build_model", "plan_segments"]

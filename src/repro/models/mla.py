@@ -1,0 +1,194 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+KV is compressed to a per-token latent ``c_kv`` of kv_lora_rank floats plus a
+shared rotary key of qk_rope_dim floats — the decode cache is 576 B/token
+instead of 2·128·128 = 32 KiB/token.  Train/prefill expand the latents to full
+keys/values and run flash attention (qk dim 192, v dim 128); decode uses the
+**absorbed-weight** formulation (W_UK folded into the query, W_UV applied to
+the attended latent), never materializing per-head keys.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import dispatch
+from repro.dist.act import shard_act
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+Params = Any
+
+
+def mla_specs(cfg: ArchConfig) -> Params:
+    m = cfg.mla
+    assert m is not None
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    s = 1.0 / np.sqrt(d)
+    return {
+        "wq_a": ParamSpec((d, m.q_lora_rank), ("embed", "q_lora"), scale=s),
+        "q_norm": layers.norm_spec(m.q_lora_rank),
+        "wq_b": ParamSpec((m.q_lora_rank, H * qk), ("q_lora", "heads"),
+                          scale=1.0 / np.sqrt(m.q_lora_rank)),
+        "wkv_a": ParamSpec((d, m.kv_lora_rank + m.qk_rope_dim), ("embed", None),
+                           scale=s),
+        "kv_norm": layers.norm_spec(m.kv_lora_rank),
+        "wkv_b": ParamSpec(
+            (m.kv_lora_rank, H * (m.qk_nope_dim + m.v_head_dim)),
+            ("q_lora", "heads"), scale=1.0 / np.sqrt(m.kv_lora_rank),
+        ),
+        "wo": ParamSpec((H * m.v_head_dim, d), ("heads", "embed"),
+                        scale=1.0 / np.sqrt(H * m.v_head_dim)),
+    }
+
+
+def _queries(p: Params, x: jax.Array, cfg: ArchConfig):
+    """x [B,S,d] -> q_nope [B,S,H,nope], q_rope [B,S,H,rope] (pre-rotation)."""
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    cq = layers.apply_norm(p["q_norm"], dispatch.op("matmul", x, p["wq_a"]),
+                           cfg.norm_eps)
+    q = dispatch.op("matmul", cq, p["wq_b"]).reshape(
+        B, S, H, m.qk_nope_dim + m.qk_rope_dim
+    )
+    q = shard_act(q, "batch", None, "heads", None)
+    return q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+
+
+def _latents(p: Params, x: jax.Array, cfg: ArchConfig):
+    """x -> (c_kv [B,S,r], k_rope [B,S,rope]) with c_kv normalized."""
+    m = cfg.mla
+    ckv = dispatch.op("matmul", x, p["wkv_a"])
+    c_kv, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    return layers.apply_norm(p["kv_norm"], c_kv, cfg.norm_eps), k_rope
+
+
+def mla_full(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Train/prefill. Returns (y, c_kv, k_rope[rotated]) for the cache."""
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    q_nope, q_rope = _queries(p, x, cfg)
+    c_kv, k_rope = _latents(p, x, cfg)
+
+    cos, sin = layers.rope_table(positions, m.qk_rope_dim, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos, sin)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], cos, sin)   # [B,S,1,rope]
+
+    kv = dispatch.op("matmul", c_kv, p["wkv_b"]).reshape(
+        B, S, H, m.qk_nope_dim + m.v_head_dim
+    )
+    kv = shard_act(kv, "batch", None, "heads", None)
+    k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_dim))], axis=-1
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    out = dispatch.op(
+        "flash_attention",
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=True,
+        scale=1.0 / float(np.sqrt(m.qk_nope_dim + m.qk_rope_dim)),
+    ).swapaxes(1, 2)
+    y = dispatch.op("matmul", out.reshape(B, S, -1), p["wo"])
+    return y, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_decode_attention(
+    q_nope: jax.Array,                 # [B, H, nope]
+    q_rope: jax.Array,                 # [B, H, rope] (rotated)
+    c_kv: jax.Array,                   # [B, T, r] latent cache
+    k_rope: jax.Array,                 # [B, T, rope] rotated shared keys
+    w_uk: jax.Array,                   # [r, H, nope]
+    w_uv: jax.Array,                   # [r, H, v]
+    length: jax.Array,
+    *,
+    scale: float,
+) -> jax.Array:
+    """Absorbed MLA decode: O(T·r) per head-group, no key expansion.
+
+    The latent cache is read in its storage dtype with f32 accumulation
+    (upcasting it first doubled per-token cache traffic — §Perf iteration 2).
+    """
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32)
+    logits = jnp.einsum("bhr,btr->bht", q_abs.astype(c_kv.dtype), c_kv,
+                        preferred_element_type=jnp.float32)
+    logits += jnp.einsum("bhp,btp->bht", q_rope.astype(k_rope.dtype), k_rope,
+                         preferred_element_type=jnp.float32)
+    logits *= scale
+    T = c_kv.shape[1]
+    length = jnp.asarray(length)
+    if length.ndim == 1:                            # per-sequence lengths [B]
+        length = length[:, None, None]
+    valid = jnp.arange(T)[None, None, :] < length
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", probs.astype(c_kv.dtype), c_kv,
+                     preferred_element_type=jnp.float32)
+    return jnp.einsum("bhr,rhv->bhv", ctx.astype(w_uv.dtype), w_uv,
+                      preferred_element_type=jnp.float32)
+
+
+def mla_decode(
+    p: Params,
+    x: jax.Array,                      # [B, 1, d]
+    cache_ckv: jax.Array,              # [B, T, r]
+    cache_krope: jax.Array,            # [B, T, rope]
+    pos: jax.Array,
+    cfg: ArchConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    m, H = cfg.mla, cfg.num_heads
+    B = x.shape[0]
+    q_nope, q_rope = _queries(p, x, cfg)
+    c_kv, k_rope = _latents(p, x, cfg)
+
+    cos, sin = layers.rope_table(layers.decode_positions(pos), m.qk_rope_dim,
+                                 cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos, sin)[:, 0]            # [B,H,rope]
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], cos, sin)[:, 0, 0]  # [B,rope]
+
+    if pos.ndim == 0:
+        cache_ckv = jax.lax.dynamic_update_slice(
+            cache_ckv, c_kv.astype(cache_ckv.dtype), (0, pos, 0)
+        )
+        cache_krope = jax.lax.dynamic_update_slice(
+            cache_krope, k_rope[:, None, :].astype(cache_krope.dtype), (0, pos, 0)
+        )
+    else:                                            # per-sequence positions
+        idx = jnp.arange(B)
+        cache_ckv = cache_ckv.at[idx, pos].set(c_kv[:, 0].astype(cache_ckv.dtype))
+        cache_krope = cache_krope.at[idx, pos].set(k_rope.astype(cache_krope.dtype))
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
+    w_uk, w_uv = wkv_b[..., : m.qk_nope_dim], wkv_b[..., m.qk_nope_dim:]
+    out = dispatch.op(
+        "mla_decode_attention",
+        q_nope[:, 0], q_rope, cache_ckv, cache_krope, w_uk, w_uv, pos + 1,
+        scale=1.0 / float(np.sqrt(m.qk_nope_dim + m.qk_rope_dim)),
+    )
+    y = dispatch.op("matmul", out.reshape(B, -1), p["wo"])
+    return y[:, None, :].astype(x.dtype), cache_ckv, cache_krope
+
+
+# register the absorbed decode as a dispatchable op
+from repro.core.registry import GLOBAL_REGISTRY, KernelImpl  # noqa: E402
+
+for _src in ("reference", "xla"):
+    GLOBAL_REGISTRY.register(
+        KernelImpl(op="mla_decode_attention", device_kind="any", source=_src,
+                   fn=mla_decode_attention),
+        allow_override=True,
+    )

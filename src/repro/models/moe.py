@@ -1,0 +1,310 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Two EP layouts, chosen per arch (see dist/sharding.py):
+
+  - ``all`` (high fanout, e.g. DeepSeek-V3 256e top-8): experts sharded over
+    ("data","model") — one expert per chip at the production mesh.  Tokens are
+    resharded so every chip holds T/(P) tokens, dispatched into per-expert
+    capacity buffers, exchanged with **all_to_all**, expert-FFN'd, and
+    exchanged back.  Cross-pod traffic is avoided: the all_to_all axis group
+    excludes "pod", so each pod runs an independent EP exchange (DCN carries
+    only gradient all-reduce).
+
+  - ``tp`` (low fanout, e.g. Llama-4 top-1): experts sharded over ("model",)
+    with tokens replicated along it; each chip computes its local experts'
+    contribution and a single **psum** over "model" combines — one collective
+    instead of two all_to_alls, the right trade at top-1.
+
+Dispatch uses GShard-style capacity buffers (scatter by expert rank with
+overflow dropping, capacity_factor configurable); the dropped fraction is
+reported in aux metrics.  Everything is differentiable (scatter-add / gather).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.core import dispatch
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+Params = Any
+
+
+def moe_specs(cfg: ArchConfig) -> Params:
+    m = cfg.moe
+    assert m is not None
+    d, f = cfg.d_model, m.d_ff_expert
+    scale = 1.0 / np.sqrt(d)
+    p: dict[str, Any] = {
+        "router": ParamSpec((d, m.num_experts), ("embed", None), scale=scale,
+                            dtype=jnp.float32),
+        "experts": {
+            "wg": ParamSpec((m.num_experts, d, f),
+                            ("expert", "expert_embed", "expert_ff"), scale=scale),
+            "wu": ParamSpec((m.num_experts, d, f),
+                            ("expert", "expert_embed", "expert_ff"), scale=scale),
+            "wd": ParamSpec((m.num_experts, f, d),
+                            ("expert", "expert_ff", "expert_embed"),
+                            scale=1.0 / np.sqrt(f)),
+        },
+    }
+    if m.num_shared_experts:
+        p["shared"] = layers.mlp_specs(cfg, m.d_ff_expert * m.num_shared_experts)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# local building blocks (used both standalone and inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def _route(x: jax.Array, router_w: jax.Array, m: MoEConfig):
+    """Top-k routing. Returns (weights [T,k], ids [T,k], aux dict)."""
+    logits = jnp.dot(x.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # [T, E]
+    weights, ids = jax.lax.top_k(probs, m.experts_per_token)     # [T, k]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    T, E = logits.shape
+    counts = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac = counts / (T * m.experts_per_token)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux_lb = E * jnp.sum(frac * mean_prob)
+    z = jax.scipy.special.logsumexp(logits, axis=-1)
+    aux_z = jnp.mean(z * z)
+    return weights, ids, {"load_balance": aux_lb, "router_z": aux_z}
+
+
+def _dispatch_indices(ids: jax.Array, E: int, C: int):
+    """Slot assignment: for each (token, choice) its rank within the expert.
+
+    Sort-based (megablocks-style): stable-sort choices by expert id; within
+    the sorted array, rank = position − first-occurrence-of-my-expert
+    (a vectorized searchsorted), then scatter ranks back.  O(n log n) in both
+    time and cost-model bytes — the previous one-hot cumsum formulation was
+    cost-modeled as an O(n²) reduce-window and dominated the *entire* MoE
+    training byte budget (see EXPERIMENTS §Perf, deepseek-v3 iteration 1).
+    Ranking prefers earlier tokens on overflow, same as the cumsum form.
+    """
+    T, k = ids.shape
+    n = T * k
+    flat = ids.reshape(-1)                                       # [T*k]
+    order = jnp.argsort(flat, stable=True)
+    sorted_e = flat[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")    # run starts
+    rank_sorted = jnp.arange(n) - first
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32)
+    )
+    keep = rank < C
+    slot = flat * C + jnp.minimum(rank, C - 1)                   # [T*k]
+    return slot, keep
+
+
+def _dispatch(x: jax.Array, slot: jax.Array, keep: jax.Array, E: int, C: int):
+    """Scatter token copies into [E*C, d] capacity buffers."""
+    T = x.shape[0]
+    k = slot.shape[0] // T
+    src = jnp.repeat(x, k, axis=0) * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E * C, x.shape[1]), x.dtype)
+    return buf.at[slot].add(src, mode="drop")
+
+
+def _combine(buf_out: jax.Array, slot: jax.Array, keep: jax.Array,
+             weights: jax.Array, T: int):
+    """Gather expert outputs back to tokens, weighted by router weights."""
+    k = weights.shape[1]
+    gathered = buf_out[slot]                                     # [T*k, d]
+    gathered = gathered * (keep[:, None] * weights.reshape(-1, 1)).astype(
+        gathered.dtype
+    )
+    return jnp.sum(gathered.reshape(T, k, -1), axis=1)
+
+
+def _expert_ffn(xin: jax.Array, experts: Params) -> jax.Array:
+    """Batched SwiGLU over local experts: xin [E_loc, C', d]."""
+    g = jnp.einsum("ecd,edf->ecf", xin, experts["wg"])
+    g = g * jax.nn.sigmoid(g.astype(jnp.float32)).astype(g.dtype)
+    u = jnp.einsum("ecd,edf->ecf", xin, experts["wu"])
+    return jnp.einsum("ecf,efd->ecd", g * u, experts["wd"])
+
+
+# ---------------------------------------------------------------------------
+# execution modes
+# ---------------------------------------------------------------------------
+
+
+def _capacity(T: int, m: MoEConfig, dropless: bool) -> int:
+    """Tokens-per-expert buffer depth.
+
+    ``dropless=True`` (decode/serving): C = T·k guarantees no token is ever
+    dropped — mandatory when T is small (a single decode step routes only a
+    handful of tokens and capacity-dropping would corrupt generations).
+    Training uses the GShard capacity factor.
+    """
+    if dropless:
+        return T * m.experts_per_token
+    return max(1, int(np.ceil(T * m.experts_per_token * m.capacity_factor
+                              / m.num_experts)))
+
+
+def _moe_local(x: jax.Array, p: Params, m: MoEConfig,
+               dropless: bool = False) -> tuple[jax.Array, dict]:
+    """Single-device path (smoke tests, CPU examples)."""
+    T, d = x.shape
+    E = m.num_experts
+    C = _capacity(T, m, dropless)
+    weights, ids, aux = _route(x, p["router"], m)
+    slot, keep = _dispatch_indices(ids, E, C)
+    buf = _dispatch(x, slot, keep, E, C)
+    out = _expert_ffn(buf.reshape(E, C, d), p["experts"]).reshape(E * C, d)
+    y = _combine(out, slot, keep, weights, T)
+    aux["dropped_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, aux
+
+
+def _moe_ep_all_to_all(
+    x: jax.Array, p: Params, m: MoEConfig, ep_axes: tuple[str, ...],
+    dropless: bool = False, mesh_axes: tuple[str, ...] = (),
+) -> tuple[jax.Array, dict]:
+    """shard_map body: tokens and experts both sharded over ep_axes."""
+    T_loc, d = x.shape
+    E = m.num_experts
+    P_ep = int(np.prod([jax.lax.axis_size(a) for a in ep_axes]))
+    E_loc = E // P_ep
+    C = _capacity(T_loc, m, dropless)
+
+    weights, ids, aux = _route(x, p["router"], m)
+    slot, keep = _dispatch_indices(ids, E, C)
+    buf = _dispatch(x, slot, keep, E, C)                          # [E*C, d]
+    buf = buf.reshape(P_ep, E_loc * C, d)
+    recv = jax.lax.all_to_all(buf, ep_axes, split_axis=0, concat_axis=0,
+                              tiled=False)                        # [P, E_loc*C, d]
+    xin = recv.reshape(P_ep, E_loc, C, d).transpose(1, 0, 2, 3).reshape(
+        E_loc, P_ep * C, d
+    )
+    out = _expert_ffn(xin, p["experts"])                          # [E_loc, P*C, d]
+    out = out.reshape(E_loc, P_ep, C, d).transpose(1, 0, 2, 3)    # [P, E_loc, C, d]
+    back = jax.lax.all_to_all(out.reshape(P_ep, E_loc * C, d), ep_axes,
+                              split_axis=0, concat_axis=0, tiled=False)
+    y = _combine(back.reshape(E * C, d), slot, keep, weights, T_loc)
+    aux["dropped_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {k: jax.lax.pmean(v, mesh_axes or ep_axes) for k, v in aux.items()}
+    return y, aux
+
+
+def _moe_ep_tp(
+    x: jax.Array, p: Params, m: MoEConfig, ep_axes: tuple[str, ...],
+    dropless: bool = False, mesh_axes: tuple[str, ...] = (),
+    psum_axes: tuple[str, ...] | None = None,
+) -> tuple[jax.Array, dict]:
+    """shard_map body: tokens replicated over ep_axes, experts sharded.
+
+    Each chip dispatches only to its local experts and a psum combines.
+    ``psum_axes`` may exceed ``ep_axes`` when the expert FFN dim is
+    additionally sharded (serving mode: partial-f contributions also sum).
+    """
+    T, d = x.shape
+    E = m.num_experts
+    P_ep = int(np.prod([jax.lax.axis_size(a) for a in ep_axes]))
+    E_loc = E // P_ep
+    my = jax.lax.axis_index(ep_axes[0]) if len(ep_axes) == 1 else (
+        jax.lax.axis_index(ep_axes[0]) * jax.lax.axis_size(ep_axes[1])
+        + jax.lax.axis_index(ep_axes[1])
+    )
+    e_lo = my * E_loc
+
+    weights, ids, aux = _route(x, p["router"], m)
+    C = _capacity(T, m, dropless)
+    slot, keep = _dispatch_indices(ids, E, C)
+    # keep only slots belonging to my experts, re-based to local ids
+    flat_e = ids.reshape(-1)
+    mine = (flat_e >= e_lo) & (flat_e < e_lo + E_loc)
+    keep_loc = keep & mine
+    slot_loc = jnp.where(mine, slot - e_lo * C, 0)
+    buf = _dispatch(x, slot_loc, keep_loc, E_loc, C)              # [E_loc*C, d]
+    out = _expert_ffn(buf.reshape(E_loc, C, d), p["experts"]).reshape(E_loc * C, d)
+    y_part = _combine(out, slot_loc, keep_loc, weights, T)
+    y = jax.lax.psum(y_part, psum_axes or ep_axes)
+    aux["dropped_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    if mesh_axes:
+        aux = {k: jax.lax.pmean(v, mesh_axes) for k, v in aux.items()}
+    return y, aux
+
+
+def apply_moe(
+    p: Params,
+    x: jax.Array,                      # [B, S, d]
+    cfg: ArchConfig,
+    *,
+    mesh_info: "MoeMeshInfo | None" = None,
+    dropless: bool = False,
+) -> tuple[jax.Array, dict]:
+    """Routed experts (+ shared experts added on top)."""
+    m = cfg.moe
+    assert m is not None
+    B, S, d = x.shape
+
+    if mesh_info is None:
+        y, aux = _moe_local(x.reshape(B * S, d), p, m, dropless)
+        y = y.reshape(B, S, d)
+    else:
+        # [B, S, d] enters the shard_map directly (B over dp, S over model for
+        # EP-all): the token flatten happens per-device, avoiding the global
+        # reshape+reshard XLA cannot partition efficiently.
+        y, aux = mesh_info.run(p, x, m, dropless)
+    y = y.astype(x.dtype)                    # residual-stream dtype stability
+
+    if "shared" in p:
+        y = y + layers.apply_mlp(p["shared"], x)
+    return y, aux
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeMeshInfo:
+    """How to execute MoE under the active mesh (built by the step builder)."""
+
+    mesh: Any
+    ep_axes: tuple[str, ...]
+    mode: str                          # "all" | "tp"
+    token_spec: Any                    # P spec for [B, S, d] tokens in shard_map
+    expert_spec_tree: Any              # P specs for the MoE param subtree
+    psum_axes: tuple[str, ...] | None = None   # tp mode: combine axes if wider
+
+    def run(self, p: Params, x: jax.Array, m: MoEConfig, dropless: bool = False):
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+
+        mesh_axes = tuple(self.mesh.axis_names)
+
+        if self.mode == "all":
+            def body(xt, params):
+                return _moe_ep_all_to_all(xt, params, m, self.ep_axes,
+                                          dropless, mesh_axes)
+        else:
+            def body(xt, params):
+                return _moe_ep_tp(xt, params, m, self.ep_axes, dropless,
+                                  mesh_axes, self.psum_axes)
+
+        def fn(params, xb):
+            bl, sl, d = xb.shape
+            y, aux = body(xb.reshape(bl * sl, d), params)
+            return y.reshape(bl, sl, d), aux
+
+        routed = {"router": p["router"], "experts": p["experts"]}
+        aux_spec = {k: P() for k in ("load_balance", "router_z", "dropped_frac")}
+        y, aux = shard_map(
+            fn,
+            mesh=self.mesh,
+            in_specs=(self.expert_spec_tree, self.token_spec),
+            out_specs=(self.token_spec, aux_spec),
+            check_rep=False,
+        )(routed, x)
+        return y, aux

@@ -1,0 +1,98 @@
+"""Parameter descriptor system.
+
+Models declare their parameters as trees of :class:`ParamSpec` (shape + dtype +
+*logical* sharding axes + init law).  From one descriptor tree we derive:
+
+  - ``init_params``      → concrete arrays (smoke tests, examples),
+  - ``abstract_params``  → ShapeDtypeStructs (dry-run: zero allocation),
+  - ``pspec_tree``       → PartitionSpecs via the sharding rules (dist/).
+
+This is what lets the 671B config lower on a CPU container: nothing is ever
+materialized for the production shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]          # logical axis name per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                     # normal | zeros | ones | ssm_a | uniform
+    scale: float = 0.02
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"shape {self.shape} vs logical {self.logical}")
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(
+            spec.dtype
+        )
+    if spec.init == "ssm_a":                 # log of -a in (log 1, log 16): a in (-16,-1)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return -u.astype(spec.dtype)         # stored as a_log (negative)
+    if spec.init == "uniform":
+        return jax.random.uniform(
+            key, spec.shape, jnp.float32, -spec.scale, spec.scale
+        ).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(tree: Any, rng: jax.Array) -> Any:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(leaf, k) for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree, is_leaf=is_spec
+    )
+
+
+def stack_specs(tree: Any, n: int, logical: str | None = None) -> Any:
+    """Prepend a stacking (scan) dimension to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            shape=(n, *s.shape),
+            logical=(logical, *s.logical),
+            dtype=s.dtype,
+            init=s.init,
+            scale=s.scale,
+        ),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def count_params(tree: Any) -> int:
+    return sum(
+        int(np.prod(s.shape)) for s in jax.tree.leaves(tree, is_leaf=is_spec)
+    )
+
+
+def bytes_params(tree: Any) -> int:
+    return sum(
+        int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(tree, is_leaf=is_spec)
+    )

@@ -1,0 +1,167 @@
+"""Mamba-2 block (SSD core + depthwise causal conv + gated norm).
+
+Layer structure (arXiv:2405.21060):
+
+  u = in_proj(x)          -> [z | xBC | dt]
+  xBC = silu(causal_conv1d(xBC))           (kernel 4, depthwise)
+  y = SSD(x_heads, a_log, B, C, softplus(dt + dt_bias)) + D ⊙ x_heads
+  out = out_proj(rmsnorm(y ⊙ silu(z)))
+
+Decode carries two state tensors: the SSD state [B, H, P, N] and the conv
+tail [B, K-1, conv_channels].
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.core import dispatch
+from repro.dist.act import shard_act
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+Params = Any
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.d_inner(cfg.d_model)
+    H = s.num_heads(cfg.d_model)
+    conv_ch = d_in + 2 * s.num_groups * s.state_dim
+    return s, d_in, H, conv_ch
+
+
+def ssm_specs(cfg: ArchConfig) -> Params:
+    s, d_in, H, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * s.num_groups * s.state_dim + H
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "ssm_inner"),
+                             scale=1.0 / np.sqrt(d)),
+        "conv_w": ParamSpec((s.conv_kernel, conv_ch), (None, "ssm_inner"),
+                            scale=1.0 / np.sqrt(s.conv_kernel)),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((H,), (None,), init="ssm_a", dtype=jnp.float32),
+        "skip_d": ParamSpec((H,), (None,), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamSpec((H,), (None,), init="zeros", dtype=jnp.float32),
+        "norm": layers.norm_spec(d_in),
+        "out_proj": ParamSpec((d_in, d), ("ssm_inner", "embed"),
+                              scale=1.0 / np.sqrt(d_in)),
+    }
+
+
+def _split_proj(u: jax.Array, cfg: ArchConfig):
+    s, d_in, H, _ = _dims(cfg)
+    gn = s.num_groups * s.state_dim
+    z = u[..., :d_in]
+    xbc = u[..., d_in: 2 * d_in + 2 * gn]
+    dt = u[..., 2 * d_in + 2 * gn:]
+    return z, xbc, dt
+
+
+def _conv_full(xbc: jax.Array, w: jax.Array, b: jax.Array, K: int) -> jax.Array:
+    """Causal depthwise conv over [B, S, C] with small static kernel K."""
+    pads = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    S = xbc.shape[1]
+    acc = jnp.zeros_like(xbc, shape=xbc.shape).astype(jnp.float32)
+    for i in range(K):                       # static unroll, K = 4
+        acc = acc + pads[:, i: i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = acc + b.astype(jnp.float32)
+    return (y * jax.nn.sigmoid(y)).astype(xbc.dtype)            # silu
+
+
+def _post(p: Params, y_heads: jax.Array, z: jax.Array, cfg: ArchConfig):
+    """Skip, gated norm, output projection. y_heads [..., H, P]."""
+    s, d_in, _, _ = _dims(cfg)
+    y = y_heads.reshape(*y_heads.shape[:-2], d_in)
+    zf = z.astype(jnp.float32)
+    gated = y.astype(jnp.float32) * (zf * jax.nn.sigmoid(zf))
+    normed = layers.apply_norm(p["norm"], gated.astype(y.dtype), cfg.norm_eps)
+    return dispatch.op("matmul", normed, p["out_proj"])
+
+
+def ssm_full(
+    p: Params,
+    x: jax.Array,                      # [B, S, d]
+    cfg: ArchConfig,
+    *,
+    return_state: bool = False,
+):
+    """Train/prefill path via the chunked SSD op."""
+    s, d_in, H, conv_ch = _dims(cfg)
+    B, S, _ = x.shape
+    u = dispatch.op("matmul", x, p["in_proj"])
+    u = shard_act(u, "batch", None, "ssm_inner")
+    z, xbc, dt = _split_proj(u, cfg)
+    conv_tail = xbc[:, -(s.conv_kernel - 1):, :]                 # pre-activation tail
+    xbc = _conv_full(xbc, p["conv_w"], p["conv_b"], s.conv_kernel)
+    gn = s.num_groups * s.state_dim
+    xs, bc = xbc[..., :d_in], xbc[..., d_in:]
+    bmat = bc[..., :gn].reshape(B, S, s.num_groups, s.state_dim)
+    cmat = bc[..., gn:].reshape(B, S, s.num_groups, s.state_dim)
+    x_heads = shard_act(
+        xs.reshape(B, S, H, s.head_dim), "batch", None, "ssm_heads", None
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    res = dispatch.op(
+        "ssd", x_heads, p["a_log"], bmat, cmat, dt,
+        chunk=s.chunk, return_state=return_state,
+    )
+    if return_state:
+        y, state = res
+    else:
+        y, state = res, None
+    y = y + (p["skip_d"][:, None] * x_heads.astype(jnp.float32)).astype(y.dtype)
+    out = _post(p, y, z, cfg)
+    if return_state:
+        return out, state, conv_tail
+    return out
+
+
+def ssm_decode(
+    p: Params,
+    x: jax.Array,                      # [B, 1, d]
+    ssm_state: jax.Array,              # [B, H, P, N] f32
+    conv_tail: jax.Array,              # [B, K-1, conv_ch] (pre-activation)
+    cfg: ArchConfig,
+):
+    from repro.kernels.ops import ssd_step
+
+    s, d_in, H, conv_ch = _dims(cfg)
+    B = x.shape[0]
+    u = dispatch.op("matmul", x[:, 0], p["in_proj"])             # [B, proj]
+    z, xbc_t, dt = _split_proj(u, cfg)
+    window = jnp.concatenate([conv_tail, xbc_t[:, None, :]], axis=1)  # [B, K, C]
+    yconv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(
+        jnp.float32
+    )
+    yconv = (yconv * jax.nn.sigmoid(yconv)).astype(x.dtype)
+    gn = s.num_groups * s.state_dim
+    xs, bc = yconv[..., :d_in], yconv[..., d_in:]
+    bvec = bc[..., :gn].reshape(B, s.num_groups, s.state_dim)
+    cvec = bc[..., gn:].reshape(B, s.num_groups, s.state_dim)
+    x_heads = xs.reshape(B, H, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    new_state, y = ssd_step(ssm_state, x_heads, p["a_log"], bvec, cvec, dt)
+    y = y + (p["skip_d"][:, None] * x_heads.astype(jnp.float32)).astype(y.dtype)
+    out = _post(p, y[:, None], z[:, None], cfg)
+    new_tail = window[:, 1:, :].astype(conv_tail.dtype)
+    return out, new_state, new_tail
+
+
+def init_ssm_cache_specs(cfg: ArchConfig, batch: int):
+    """ShapeDtypeStructs for one layer's SSM cache."""
+    s, d_in, H, conv_ch = _dims(cfg)
+    return {
+        "ssm_state": jax.ShapeDtypeStruct((batch, H, s.head_dim, s.state_dim),
+                                          jnp.float32),
+        "conv_tail": jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, conv_ch),
+                                          layers.COMPUTE_DTYPE),
+    }

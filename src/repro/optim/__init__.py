@@ -1,0 +1,1 @@
+from repro.optim.adamw import OptConfig, opt_init, opt_state_specs, opt_update, lr_schedule

@@ -1,0 +1,166 @@
+"""Roofline analysis from compiled artifacts (no hardware required).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step at the TPU v5e
+target:
+
+  compute    = FLOPs_per_device / peak_bf16_FLOP/s
+  memory     = bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / ICI_link_bw
+
+``cost_analysis()`` is per-device (the partitioned module), so dividing by
+per-chip peaks directly gives the per-step time bound; multiplying numerator
+and denominator by `chips` recovers the brief's global formulation exactly.
+
+collective_bytes is not in cost_analysis: we parse the compiled HLO and sum
+the **operand** bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.hw import TPU_V5E
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.  "bf16[16,1024,128]{2,1,0}"  — capture dtype + dims
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# "%x = <shape(s)> all-reduce(%a, %b), ..." — LHS shape(s), op name
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+# "replica_groups=[128,2]<=..."  (iota form: G groups × M members)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# "replica_groups={{0,16,32},{...}}" (explicit form: count first group)
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return 2
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, Any]:
+    """Per-device link traffic of every collective, ring-cost model.
+
+    Uses the instruction's **output** shape B and replica-group size M:
+
+      all-gather          B·(M−1)/M      (receive all shards but your own)
+      reduce-scatter      B·(M−1)        (input is M·B; send (M−1)/M of it)
+      all-reduce          2·B·(M−1)/M    (ring = reduce-scatter + all-gather)
+      all-to-all          B·(M−1)/M
+      collective-permute  B
+
+    ``-done`` halves of async pairs are skipped.
+    """
+    by_kind: dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    counts: dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        if m.group(3) == "-start":
+            b = b // 2                       # start tuples carry (in, out)
+        msize = _group_size(line)
+        if kind == "all-gather":
+            traffic = b * (msize - 1) / msize
+        elif kind == "reduce-scatter":
+            traffic = b * (msize - 1)
+        elif kind == "all-reduce":
+            traffic = 2 * b * (msize - 1) / msize
+        elif kind == "all-to-all":
+            traffic = b * (msize - 1) / msize
+        else:                                # collective-permute
+            traffic = b
+        by_kind[kind] += traffic
+        counts[kind] += 1
+    total = sum(by_kind.values())
+    return {
+        "total": float(total),
+        "by_kind": {k: float(v) for k, v in by_kind.items() if v},
+        "counts": {k: v for k, v in counts.items() if v},
+    }
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D; D = tokens this step."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0                      # forward only
+    else:
+        tokens = shape.global_batch     # one token per sequence
+        mult = 2.0
+    n = cfg.active_params()
+    return mult * n * tokens
+
+
+def roofline_terms(*, flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float, cfg: ArchConfig,
+                   shape: ShapeConfig, chips: int) -> dict:
+    chip = TPU_V5E
+    compute_s = flops_per_device / chip.peak_bf16_flops
+    memory_s = bytes_per_device / chip.hbm_bw
+    collective_s = collective_bytes_per_device / chip.ici_bw_per_link
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_flops_global = flops_per_device * chips
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": (mf / hlo_flops_global) if hlo_flops_global else 0.0,
+        "step_bound_s": max(terms.values()),
+        "roofline_fraction": (
+            compute_s / max(terms.values()) if max(terms.values()) > 0 else 0.0
+        ),
+    }

@@ -1,0 +1,117 @@
+"""Per-layer cost extrapolation.
+
+``cost_analysis`` on a scanned model counts each scan body once.  We recover
+true costs by lowering small **unrolled** variants with varied segment counts
+and solving the affine system
+
+    measured_j = outside + Σ_i counts_{ji} · segment_i
+
+then evaluating at the real segment counts.  Variants: all-ones baseline plus
+one count incremented per segment (k+1 lowers for k segment types; k ≤ 2 for
+every assigned arch).  Inner loops (attention block-map, chunked CE) unroll
+under the same context so their FLOPs are counted too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import ShardingRules
+from repro.launch.specs import abstract_opt_state, batch_specs, decode_specs, pick_opt
+from repro.models import build_model
+from repro.models.model import Segment, plan_segments
+from repro.models.params import abstract_params
+from repro.roofline.analysis import collective_bytes_from_hlo
+from repro.roofline.unrolling import unroll_inner_loops
+
+METRICS = ("flops", "bytes", "coll")
+
+
+def _measure(cfg: ArchConfig, shape: ShapeConfig, rules: ShardingRules,
+             plan: list[Segment] | None, enc_dec_counts=None) -> dict[str, float]:
+    """Lower+compile one unrolled variant; return per-device cost metrics."""
+    vcfg = cfg
+    if enc_dec_counts is not None:
+        vcfg = dataclasses.replace(cfg, encoder_layers=enc_dec_counts[0],
+                                   num_layers=enc_dec_counts[1])
+    model = build_model(vcfg, plan=plan, unroll=True)
+    p_abs = abstract_params(model.param_specs())
+
+    with jax.set_mesh(rules.mesh), unroll_inner_loops():
+        if shape.kind == "train":
+            from repro.train.step import make_train_step
+
+            opt_cfg = pick_opt(cfg)
+            step, *_ = make_train_step(model, opt_cfg, rules,
+                                       global_batch=shape.global_batch,
+                                       donate=False)
+            o_abs = abstract_opt_state(opt_cfg, p_abs)
+            lowered = step.lower(p_abs, o_abs, batch_specs(vcfg, shape))
+        elif shape.kind == "prefill":
+            from repro.serve.engine import make_prefill_step
+
+            step, *_ = make_prefill_step(model, rules,
+                                         global_batch=shape.global_batch)
+            lowered = step.lower(p_abs, batch_specs(vcfg, shape))
+        else:
+            from repro.serve.engine import make_decode_step
+
+            step, *_ = make_decode_step(model, rules,
+                                        global_batch=shape.global_batch,
+                                        cache_len=shape.seq_len,
+                                        donate_cache=False)
+            tokens, cache = decode_specs(vcfg, shape, model)
+            lowered = step.lower(p_abs, tokens, cache)
+        compiled = lowered.compile()
+
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": coll["total"],
+    }
+
+
+def extrapolated_costs(cfg: ArchConfig, shape: ShapeConfig,
+                       rules: ShardingRules) -> dict[str, Any]:
+    """True per-device (flops, bytes, collective_bytes) for the full depth."""
+    if cfg.family == "audio":
+        # two stacks: encoder, decoder — vary each
+        variants = [(1, 1), (2, 1), (1, 2)]
+        true_counts = np.array([1.0, cfg.encoder_layers, cfg.num_layers])
+        rows = []
+        meas = []
+        for enc, dec in variants:
+            rows.append([1.0, enc, dec])
+            meas.append(_measure(cfg, shape, rules, None, (enc, dec)))
+    else:
+        plan = plan_segments(cfg)
+        k = len(plan)
+        count_vecs = [[1] * k]
+        for i in range(k):
+            v = [1] * k
+            v[i] = 2
+            count_vecs.append(v)
+        true_counts = np.array([1.0] + [float(s.count) for s in plan])
+        rows, meas = [], []
+        for counts in count_vecs:
+            vplan = [Segment(s.kinds, c) for s, c in zip(plan, counts)]
+            rows.append([1.0] + [float(c) for c in counts])
+            meas.append(_measure(cfg, shape, rules, vplan))
+
+    A = np.array(rows)
+    out: dict[str, Any] = {"variants": len(rows)}
+    for key in METRICS:
+        b = np.array([m[key] for m in meas])
+        x, *_ = np.linalg.lstsq(A, b, rcond=None)
+        x = np.maximum(x, 0.0)                 # clamp solver noise
+        out[key] = float(true_counts @ x)
+        out[f"{key}_outside"] = float(x[0])
+        out[f"{key}_per_segment"] = [float(v) for v in x[1:]]
+    return out

@@ -1,0 +1,31 @@
+"""Cost-mode unrolling flag.
+
+XLA's ``cost_analysis`` counts while-loop bodies **once** regardless of trip
+count, so any ``lax.scan``/``lax.map`` in the model hides work from the
+roofline.  During cost-extrapolation lowering this context makes the inner
+loops (attention q-block map, chunked-CE scan) unroll into straight-line HLO
+so every FLOP is counted.  Never enabled for the real compile-proof artifacts.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Iterator
+
+_UNROLL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_unroll_inner", default=False
+)
+
+
+@contextlib.contextmanager
+def unroll_inner_loops() -> Iterator[None]:
+    token = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def inner_loops_unrolled() -> bool:
+    return _UNROLL.get()

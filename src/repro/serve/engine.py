@@ -1,0 +1,254 @@
+"""Serving: cache sharding, jitted prefill/decode steps, batched engine.
+
+``decode_step`` is the program the decode_* dry-run shapes lower: one new
+token against a seq_len KV cache, fully sharded (batch over DP, heads/state
+over TP).  The :class:`ServeEngine` implements continuous-batching-lite over
+fixed slots — requests join free slots, finished slots are recycled — and can
+route its launches through the HSA queue so serving shares the accelerator
+with other producers (the paper's multi-tenancy story).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.dist import act
+from repro.dist.sharding import ShardingRules
+from repro.train.step import batch_shardings, moe_mesh_info
+
+
+# ---------------------------------------------------------------------------
+# cache sharding
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(cfg: ArchConfig, rules: ShardingRules, cache_tree: Any,
+                 global_batch: int) -> Any:
+    """PartitionSpec per cache leaf, by name + divisibility.
+
+    Layout [L, B, H, T, hd] (kv), [L, B, T, r] (latent), [L, B, H, P, N]
+    (ssm), [L, B, K-1, C] (conv).  B shards over DP when divisible.  For the
+    TP axis, the **first** non-batch dim divisible by the model-axis size is
+    sharded: heads when they divide, otherwise the cache time axis
+    (sequence-parallel KV — a kv=8 GQA cache at TP=16 must shard over T or a
+    32k cache replicates 16× and decode stops fitting).  Softmax statistics
+    over a T-sharded cache reduce with small [B, H] collectives — the standard
+    trade.
+    """
+    import jax.tree_util as jtu
+
+    mesh = rules.mesh
+    model_size = mesh.shape.get("model", 1)
+    dp_spec = rules.batch_pspec(global_batch, 0)[0]   # axis entry or None
+
+    def tp_first_divisible(shape, start: int) -> list:
+        parts: list = [None] * len(shape)
+        if model_size <= 1:
+            return parts
+        for i in range(start, len(shape)):
+            if shape[i] % model_size == 0 and shape[i] >= model_size:
+                parts[i] = "model"
+                break
+        return parts
+
+    def spec_for(path, leaf) -> P:
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if key == "pos":
+            return P()
+        shape = leaf.shape
+        if key in ("k", "v", "mem_k", "mem_v", "ssm_state", "ckv", "krope",
+                   "conv_tail"):
+            parts = tp_first_divisible(shape, 2)
+            parts[0] = None                       # layer-stack dim
+            parts[1] = dp_spec                    # batch dim
+            return P(*parts)
+        return P(*([None] * len(shape)))
+
+    return jtu.tree_map_with_path(spec_for, cache_tree)
+
+
+def cache_shardings(cfg, rules, cache_tree, global_batch):
+    pspecs = cache_pspecs(cfg, rules, cache_tree, global_batch)
+    return jax.tree.map(lambda ps: NamedSharding(rules.mesh, ps), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# jitted steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model, rules: ShardingRules, *, global_batch: int,
+                      cache_len: int | None = None):
+    cfg = model.cfg
+    mesh = rules.mesh
+    p_shard = rules.sharding_tree(model.param_specs())
+    b_shard = batch_shardings(cfg, rules, global_batch)
+    minfo = moe_mesh_info(cfg, rules)
+
+    def prefill(params, batch):
+        with act.use_rules(rules):
+            return model.prefill(params, batch, moe_info=minfo, cache_len=cache_len)
+
+    logits_shard = NamedSharding(mesh, rules.batch_pspec(global_batch, 1))
+    return jax.jit(
+        prefill,
+        in_shardings=(p_shard, b_shard),
+        out_shardings=(logits_shard, None),     # cache sharding propagated
+    ), p_shard, b_shard
+
+
+def make_decode_step(model, rules: ShardingRules, *, global_batch: int,
+                     cache_len: int, donate_cache: bool = True):
+    cfg = model.cfg
+    mesh = rules.mesh
+    p_shard = rules.sharding_tree(model.param_specs())
+    cache_tree = model.cache_specs(global_batch, cache_len)
+    c_shard = cache_shardings(cfg, rules, cache_tree, global_batch)
+    tok_shard = NamedSharding(mesh, rules.batch_pspec(global_batch, 1))
+    logits_shard = NamedSharding(mesh, rules.batch_pspec(global_batch, 1))
+    minfo = moe_mesh_info(cfg, rules, for_decode=True)
+
+    def decode(params, tokens, cache):
+        with act.use_rules(rules):
+            return model.decode_step(params, tokens, cache, moe_info=minfo)
+
+    step = jax.jit(
+        decode,
+        in_shardings=(p_shard, tok_shard, c_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(2,) if donate_cache else (),
+    )
+    return step, p_shard, c_shard, cache_tree
+
+
+# ---------------------------------------------------------------------------
+# batched serving engine (continuous-batching-lite)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-slot batched decoder with slot recycling.
+
+    Small-scale/CPU engine used by examples and tests: prompts are prefilled
+    one slot at a time into the shared batch cache, all live slots decode in
+    lock-step, finished slots free up for queued requests.  Sampling is greedy
+    or temperature-softmax.
+    """
+
+    def __init__(self, model, params, *, batch_slots: int = 4,
+                 max_len: int = 256, temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self._rng = np.random.default_rng(seed)
+        self._queue: list[Request] = []
+        self._active: dict[int, Request] = {}      # slot -> request
+        self._uid = 0
+        self._cache = None
+        self._pos = np.zeros(batch_slots, np.int64)
+
+    def submit(self, prompt: list[int], max_new_tokens: int = 32) -> int:
+        self._uid += 1
+        self._queue.append(
+            Request(self._uid, np.asarray(prompt, np.int32), max_new_tokens)
+        )
+        return self._uid
+
+    # -- internals ------------------------------------------------------------
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        logits, cache = self.model.prefill(self.params, batch,
+                                           cache_len=self.max_len)
+        tok = self._sample(np.asarray(logits, np.float32)[0])
+        req.generated.append(int(tok))
+        if self._cache is None:
+            # allocate the batched cache (batch axis 1 under the layer stack)
+            self._cache = {
+                "segments": jax.tree.map(
+                    lambda x: jnp.repeat(jnp.zeros_like(x), self.slots, axis=1),
+                    cache["segments"],
+                )
+            }
+        # splice the slot cache into the batch cache
+        def splice(full, one):
+            return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=1)
+
+        self._cache["segments"] = jax.tree.map(
+            splice, self._cache["segments"], cache["segments"]
+        )
+        self._pos[slot] = len(req.prompt)
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temperature <= 0:
+            return int(np.argmax(logits))
+        z = logits / self.temperature
+        z = z - z.max()
+        p = np.exp(z) / np.exp(z).sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    def step(self) -> list[Request]:
+        """Admit queued requests, decode one token for all live slots.
+
+        Returns requests completed this step.
+        """
+        for slot in range(self.slots):
+            if slot not in self._active and self._queue:
+                req = self._queue.pop(0)
+                self._prefill_slot(slot, req)
+                self._active[slot] = req
+        if not self._active:
+            return []
+
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot, req in self._active.items():
+            tokens[slot, 0] = req.generated[-1]
+        # per-slot positions: continuous batching — slots joined at different
+        # times decode against their own sequence positions
+        cache = {"pos": jnp.asarray(self._pos, jnp.int32),
+                 "segments": self._cache["segments"]}
+        logits, new_cache = self.model.decode_step(
+            self.params, jnp.asarray(tokens), cache
+        )
+        self._cache = {"segments": new_cache["segments"]}
+        self._pos += 1
+        logits = np.asarray(logits, np.float32)
+
+        finished = []
+        for slot, req in list(self._active.items()):
+            tok = self._sample(logits[slot])
+            req.generated.append(tok)
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                del self._active[slot]
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_steps):
+            done += self.step()
+            if not self._active and not self._queue:
+                break
+        return done

@@ -1,0 +1,2 @@
+from repro.train.loop import LoopConfig, LoopReport, TrainLoop
+from repro.train.step import init_train_state, make_train_step, moe_mesh_info

@@ -1,0 +1,295 @@
+"""Substrate tests: checkpointing, fault-tolerant loop, data pipeline,
+gradient compression, optimizers, serving engine."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.checkpoint import (
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.configs import ARCHS, reduced
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.dist.collectives import (
+    compression_ratio,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.models import build_model
+from repro.models.params import init_params
+from repro.optim.adamw import OptConfig, opt_init, opt_update
+from repro.serve.engine import ServeEngine
+from repro.train.loop import LoopConfig, TrainLoop
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.integers(0, 9, (3,)), jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    path = save_checkpoint(str(tmp_path), 7, tree)
+    restored, manifest = restore_checkpoint(path, tree)
+    assert manifest["step"] == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), tree, restored)
+
+
+def test_checkpoint_latest_and_retention(tmp_path):
+    tree = _tree()
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), step, tree, keep=2)
+    assert latest_checkpoint(str(tmp_path)).endswith("step_00000005")
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2
+
+
+def test_checkpoint_interrupted_write_is_invisible(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    # simulate a writer killed mid-flight: stray .tmp dir
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert latest_checkpoint(str(tmp_path)).endswith("step_00000001")
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    tree = _tree()
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    bad = {"a": jnp.zeros((2, 2)), "nested": {"b": jnp.zeros((3,), jnp.int32)}}
+    with pytest.raises(ValueError):
+        restore_checkpoint(path, bad)
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant loop
+# ---------------------------------------------------------------------------
+
+
+def _toy_step():
+    def step(params, opt_state, batch):
+        params = jax.tree.map(lambda p: p - 0.1 * batch["g"], params)
+        loss = jnp.sum(params["w"] ** 2)
+        return params, opt_state, {"loss": loss}
+    return step
+
+
+def test_loop_checkpoint_and_resume(tmp_path):
+    params = {"w": jnp.ones(4)}
+    cfg = LoopConfig(total_steps=10, ckpt_dir=str(tmp_path), ckpt_every=5,
+                     log_every=0)
+    batch_at = lambda s: {"g": jnp.full(4, 0.01)}
+
+    loop = TrainLoop(_toy_step(), batch_at, cfg, log=lambda s: None)
+    p1, _, rep1 = loop.run(params, {})
+    assert rep1.steps_run == 10
+
+    # a "restarted job" resumes from step 10 and does nothing more
+    loop2 = TrainLoop(_toy_step(), batch_at, cfg, log=lambda s: None)
+    p2, _, rep2 = loop2.run(params, {})
+    assert rep2.resumed_from == 10 and rep2.steps_run == 0
+    np.testing.assert_allclose(p1["w"], p2["w"])
+
+    # extending total_steps continues from the checkpoint
+    cfg3 = dataclasses.replace(cfg, total_steps=14)
+    loop3 = TrainLoop(_toy_step(), batch_at, cfg3, log=lambda s: None)
+    _, _, rep3 = loop3.run(params, {})
+    assert rep3.resumed_from == 10 and rep3.steps_run == 4
+
+
+def test_loop_nan_guard(tmp_path):
+    def bad_step(params, opt_state, batch):
+        return params, opt_state, {"loss": jnp.float32(float("nan"))}
+
+    loop = TrainLoop(bad_step, lambda s: {}, LoopConfig(total_steps=3,
+                                                        log_every=0),
+                     log=lambda s: None)
+    with pytest.raises(FloatingPointError):
+        loop.run({"w": jnp.ones(2)}, {})
+
+
+def test_loop_straggler_detection():
+    import time
+
+    def slow_step(params, opt_state, batch):
+        if batch["i"] == 7:
+            time.sleep(0.25)
+        return params, opt_state, {"loss": jnp.float32(1.0)}
+
+    loop = TrainLoop(slow_step, lambda s: {"i": s},
+                     LoopConfig(total_steps=12, log_every=0,
+                                straggler_factor=3.0),
+                     log=lambda s: None)
+    _, _, report = loop.run({"w": jnp.ones(2)}, {})
+    assert 7 in report.stragglers
+
+
+def test_loop_preemption_checkpoints(tmp_path):
+    cfg = LoopConfig(total_steps=100, ckpt_dir=str(tmp_path), ckpt_every=1000,
+                     log_every=0)
+    loop = TrainLoop(_toy_step(), lambda s: {"g": jnp.full(4, 0.01)}, cfg,
+                     log=lambda s: None)
+
+    orig = loop.step_fn
+
+    def step_then_preempt(params, opt_state, batch):
+        out = orig(params, opt_state, batch)
+        loop._preempt = True            # simulate SIGTERM arriving
+        return out
+
+    loop.step_fn = step_then_preempt
+    _, _, report = loop.run({"w": jnp.ones(4)}, {})
+    assert report.preempted and report.steps_run == 1
+    assert latest_checkpoint(str(tmp_path)).endswith("step_00000001")
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=4, seed=3)
+    a, b = SyntheticTokens(cfg), SyntheticTokens(cfg)
+    np.testing.assert_array_equal(a.batch_at(5)["tokens"], b.batch_at(5)["tokens"])
+    assert not np.array_equal(a.batch_at(5)["tokens"], a.batch_at(6)["tokens"])
+    assert a.batch_at(0)["tokens"].shape == (4, 64)
+    assert a.batch_at(0)["tokens"].max() < 1000
+
+
+def test_data_has_learnable_structure():
+    cfg = DataConfig(vocab_size=1000, seq_len=256, global_batch=32, seed=0,
+                     repeat_prob=1.0)
+    toks = SyntheticTokens(cfg).batch_at(0)["tokens"]
+    # with repeat_prob=1 every row is periodic with period 64
+    np.testing.assert_array_equal(toks[:, :64], toks[:, 64:128])
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=400), st.integers(min_value=0, max_value=99))
+def test_property_quantize_roundtrip_error_bounded(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * rng.uniform(0.1, 10), jnp.float32)
+    q, scale, shape = quantize_int8(x, block=64)
+    x2 = dequantize_int8(q, scale, shape)
+    # per-block error bounded by scale/2 = max|x_block|/254
+    err = np.abs(np.asarray(x - x2))
+    bound = np.abs(np.asarray(x)).max() / 127.0 + 1e-7
+    assert err.max() <= bound
+
+
+def test_error_feedback_unbiases_accumulation():
+    """With error feedback, the *sum* of compressed steps tracks the true sum."""
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(256, np.float32)
+    comp_sum = np.zeros(256, np.float32)
+    residual = jnp.zeros(256, jnp.float32)
+    for step in range(50):
+        g = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+        true_sum += np.asarray(g)
+        carried = g + residual
+        q, s, sh = quantize_int8(carried, block=64)
+        sent = dequantize_int8(q, s, sh)
+        residual = carried - sent
+        comp_sum += np.asarray(sent)
+    # the residual bounds the total drift (error feedback property)
+    drift = np.abs(true_sum - comp_sum)
+    assert drift.max() <= np.abs(np.asarray(residual)).max() + 1e-5
+
+
+def test_compression_ratio():
+    assert compression_ratio((1024, 1024)) > 1.8
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,b1", [("adamw", 0.9), ("adafactor", 0.9),
+                                     ("adafactor", 0.0)])
+def test_optimizers_reduce_quadratic(kind, b1):
+    cfg = OptConfig(kind=kind, lr=0.1, warmup_steps=1, decay_steps=200,
+                    weight_decay=0.0, b1=b1)
+    params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(256, 256)),
+                               jnp.float32)}
+    state = opt_init(cfg, params)
+    loss0 = float(jnp.mean(params["w"] ** 2))
+    for _ in range(30):
+        grads = jax.grad(lambda p: jnp.mean(p["w"] ** 2))(params)
+        params, state, m = opt_update(cfg, params, grads, state)
+    assert float(jnp.mean(params["w"] ** 2)) < 0.2 * loss0
+    assert np.isfinite(m["grad_norm"])
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+
+def _engine_model():
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(11))
+    return cfg, model, params
+
+
+def test_engine_matches_manual_decode():
+    cfg, model, params = _engine_model()
+    prompt = [3, 14, 15, 92]
+    n_new = 6
+
+    engine = ServeEngine(model, params, batch_slots=2, max_len=32)
+    engine.submit(prompt, max_new_tokens=n_new)
+    (req,) = engine.run_to_completion()
+
+    # manual greedy decode, single sequence
+    lg, cache = model.prefill(params, {"tokens": jnp.asarray([prompt])},
+                              cache_len=32)
+    toks = [int(np.argmax(np.asarray(lg, np.float32)[0]))]
+    for _ in range(n_new - 1):
+        lg, cache = model.decode_step(
+            params, jnp.asarray([[toks[-1]]]), cache
+        )
+        toks.append(int(np.argmax(np.asarray(lg, np.float32)[0])))
+    assert req.generated == toks
+
+
+def test_engine_continuous_batching_isolation():
+    """Requests admitted at different times produce the same generations as
+    they would alone (per-slot positions = continuous batching correctness)."""
+    cfg, model, params = _engine_model()
+    prompts = [[5, 6, 7], [100, 90], [1, 2, 3, 4, 5, 6]]
+
+    solo = []
+    for p in prompts:
+        e = ServeEngine(model, params, batch_slots=1, max_len=48)
+        e.submit(p, max_new_tokens=5)
+        (r,) = e.run_to_completion()
+        solo.append(r.generated)
+
+    e = ServeEngine(model, params, batch_slots=2, max_len=48)   # < len(prompts)
+    for p in prompts:
+        e.submit(p, max_new_tokens=5)
+    done = sorted(e.run_to_completion(), key=lambda r: r.uid)
+    assert [r.generated for r in done] == solo
