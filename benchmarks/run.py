@@ -13,7 +13,12 @@ def main() -> None:
     fast = "--fast" in sys.argv
     n = 100 if fast else 1000
 
-    from benchmarks import table1_utilization, table2_overhead, table3_efficiency
+    from benchmarks import (
+        table1_utilization,
+        table2_overhead,
+        table3_efficiency,
+        table4_multitenancy,
+    )
 
     print("name,us_per_call,derived")
     for row in table1_utilization.run():
@@ -21,6 +26,8 @@ def main() -> None:
     for row in table2_overhead.run(n=n):
         print(row)
     for row in table3_efficiency.run(n=n):
+        print(row)
+    for row in table4_multitenancy.run(n=min(n, 128)):
         print(row)
 
 

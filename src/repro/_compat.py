@@ -1,0 +1,66 @@
+"""Forward-compat aliases so the codebase runs on older jax (0.4.x).
+
+The code targets the modern mesh API (``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``).  On
+runtimes that predate it, install equivalent aliases once at package import.
+All shims are no-ops when the real API exists.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+import jax.sharding as _shd
+
+if not hasattr(_shd, "AxisType"):
+    try:
+        from jax._src import mesh as _mesh_lib
+
+        _shd.AxisType = _mesh_lib.AxisTypes
+    except (ImportError, AttributeError):  # pragma: no cover - very old jax
+        import enum
+
+        _shd.AxisType = enum.Enum("AxisType", ["Auto", "User", "Collective"])
+
+if not hasattr(jax, "set_mesh"):
+
+    @contextlib.contextmanager
+    def _set_mesh(mesh):
+        # Mesh is itself a context manager for the ambient physical mesh;
+        # explicit NamedShardings carry the mesh, so this is all we need.
+        with mesh:
+            yield mesh
+
+    jax.set_mesh = _set_mesh
+
+if not hasattr(jax.lax, "axis_size"):
+    def _axis_size(axis_name):
+        # psum of a unit constant folds to the static axis size
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = _axis_size
+
+if not hasattr(jax, "make_mesh"):            # pragma: no cover - very old jax
+
+    def _make_mesh_fallback(axis_shapes, axis_names, *, devices=None,
+                            axis_types=None):
+        del axis_types
+        import numpy as _np
+
+        devs = list(devices) if devices is not None else jax.devices()
+        return _shd.Mesh(
+            _np.asarray(devs[: int(_np.prod(axis_shapes))]).reshape(axis_shapes),
+            axis_names,
+        )
+
+    jax.make_mesh = _make_mesh_fallback
+elif "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+    _orig_make_mesh = jax.make_mesh
+
+    def _make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types                       # pre-AxisType jax: always Auto
+        return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = _make_mesh

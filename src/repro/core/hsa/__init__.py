@@ -1,6 +1,7 @@
-"""HSA-style runtime layer (agents, queues, signals, executor)."""
+"""HSA-style runtime layer (agents, queues, signals, scheduler, executor)."""
 
 from repro.core.hsa.agent import Agent, MemoryRegion
+from repro.core.hsa.clock import Clock, VirtualClock, WallClock
 from repro.core.hsa.executor import Executor, run_packet_sync
 from repro.core.hsa.queue import (
     BarrierAndPacket,
@@ -10,11 +11,20 @@ from repro.core.hsa.queue import (
     QueueFullError,
 )
 from repro.core.hsa.runtime import HsaSystem, hsa_init, hsa_shut_down, hsa_system
+from repro.core.hsa.scheduler import (
+    SchedEvent,
+    Scheduler,
+    SchedulerDeadlock,
+    QueueStats,
+)
 from repro.core.hsa.signal import Signal
 
 __all__ = [
     "Agent",
     "MemoryRegion",
+    "Clock",
+    "VirtualClock",
+    "WallClock",
     "Executor",
     "run_packet_sync",
     "BarrierAndPacket",
@@ -26,5 +36,9 @@ __all__ = [
     "hsa_init",
     "hsa_shut_down",
     "hsa_system",
+    "SchedEvent",
+    "Scheduler",
+    "SchedulerDeadlock",
+    "QueueStats",
     "Signal",
 ]

@@ -44,10 +44,12 @@ class Agent:
 
     # -- queues --------------------------------------------------------------
 
-    def create_queue(self, size: int = 256) -> "Any":
+    def create_queue(
+        self, size: int = 256, *, name: str | None = None, weight: int = 1
+    ) -> "Any":
         from repro.core.hsa.queue import Queue
 
-        q = Queue(agent=self, size=size)
+        q = Queue(agent=self, size=size, name=name, weight=weight)
         self._queues.append(q)
         return q
 

@@ -1,31 +1,20 @@
-"""Packet processor: the runtime half of transparent dispatch.
+"""Legacy single-queue executor, now a façade over the async scheduler.
 
-Consumes AQL packets from a queue and, for kernel dispatches:
-
-  1. resolves the role in the library,
-  2. ``RegionManager.ensure_resident`` — reconfigures (load + LRU evict) when
-     the role is not currently on the device, recording ledger RECONFIG,
-  3. launches the loaded executable (ledger DISPATCH = submit-to-launch time,
-     paper Table II row 3),
-  4. blocks for completion (ledger EXEC) and stores the result, then sets the
-     completion signal to 0.
-
-Supports synchronous draining (deterministic, used by tests/benchmarks) and a
-background worker thread (used by the serving engine so multiple producers can
-share the agent, per the paper's multi-tenancy claim).
+The synchronous ``Executor`` API (drain / start / stop) is kept for existing
+callers and benchmarks, but all packet processing lives in one place:
+:class:`repro.core.hsa.scheduler.Scheduler`.  ``drain`` is the cooperative
+single-consumer mode; ``start`` runs the scheduler's doorbell-driven worker
+thread so multiple producers can share the agent, per the paper's
+multi-tenancy claim.
 """
 
 from __future__ import annotations
 
-import threading
-import time
 from typing import Any
 
-import jax
-
-from repro.core import ledger as ledger_mod
 from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
-from repro.core.hsa.queue import BarrierAndPacket, KernelDispatchPacket, Packet, Queue
+from repro.core.hsa.queue import KernelDispatchPacket, Queue
+from repro.core.hsa.scheduler import Scheduler
 from repro.core.reconfig import RegionManager
 from repro.core.roles import RoleLibrary
 
@@ -37,74 +26,32 @@ class Executor:
         library: RoleLibrary,
         *,
         ledger: OverheadLedger = GLOBAL_LEDGER,
+        scheduler: Scheduler | None = None,
     ) -> None:
         self.regions = regions
         self.library = library
         self.ledger = ledger
-        self._worker: threading.Thread | None = None
-        self._stop = threading.Event()
-
-    # -- packet processing -------------------------------------------------------
-
-    def _process(self, pkt: Packet) -> None:
-        if isinstance(pkt, BarrierAndPacket):
-            for dep in pkt.deps:
-                dep.wait_eq(0)
-            if pkt.completion is not None:
-                pkt.completion.store(0)
-            return
-
-        assert isinstance(pkt, KernelDispatchPacket)
-        try:
-            role = self.library.get(pkt.role_key)
-            self.regions.ensure_resident(role)
-
-            t0 = time.perf_counter_ns()
-            out = role(*pkt.args)                      # async dispatch
-            t1 = time.perf_counter_ns()
-            self.ledger.record(
-                ledger_mod.DISPATCH, (t1 - t0) * 1e-9,
-                role=role.name, producer=pkt.producer,
-            )
-            out = jax.block_until_ready(out)
-            self.ledger.record(ledger_mod.EXEC, (time.perf_counter_ns() - t1) * 1e-9,
-                               role=role.name)
-            pkt.out.value = out
-        except BaseException as e:                      # surface to waiter, don't kill worker
-            pkt.out.error = e
-        finally:
-            if pkt.completion is not None:
-                pkt.completion.store(0)
+        self.scheduler = scheduler or Scheduler(regions, library, ledger=ledger)
+        self._running = False
 
     def drain(self, queue: Queue) -> int:
-        """Synchronously process everything currently in the queue."""
-        n = 0
-        while (pkt := queue.pop()) is not None:
-            self._process(pkt)
-            n += 1
-        return n
+        """Synchronously process everything currently submitted."""
+        return self.scheduler.drain(queue)
 
     # -- background mode ------------------------------------------------------------
 
     def start(self, queue: Queue, poll_s: float = 0.0005) -> None:
-        if self._worker is not None:
+        if self._running:
             raise RuntimeError("executor already running")
-        self._stop.clear()
-
-        def loop() -> None:
-            while not self._stop.is_set():
-                if queue.doorbell.wait_ge(1, timeout=poll_s):
-                    if self.drain(queue) == 0:
-                        queue.doorbell.store(0)
-
-        self._worker = threading.Thread(target=loop, name="hsa-executor", daemon=True)
-        self._worker.start()
+        if all(q is not queue for q in self.scheduler.queues):
+            self.scheduler.add_queue(queue)
+        self.scheduler.start(poll_s=poll_s)
+        self._running = True
 
     def stop(self) -> None:
-        if self._worker is not None:
-            self._stop.set()
-            self._worker.join(timeout=5.0)
-            self._worker = None
+        if self._running:
+            self.scheduler.stop()
+            self._running = False
 
 
 def run_packet_sync(executor: Executor, queue: Queue, pkt: KernelDispatchPacket) -> Any:

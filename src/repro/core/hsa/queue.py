@@ -1,21 +1,29 @@
 """User-mode queues with AQL-style packets.
 
 HSA dispatch works by writing an Architected Queuing Language packet into a
-user-mode ring buffer and ringing a doorbell signal.  The two packet types the
-paper's runtime needs are kernel-dispatch and barrier-AND (dependency fences) —
-both modeled here.  Multiple producers (the training engine, the serving
-engine, ad-hoc user code) may submit to the same queue: the paper's
-"simultaneously from other sources e.g. OpenCL/OpenMP" property.
+user-mode ring buffer and ringing a doorbell signal.  The packet types the
+paper's runtime needs are kernel-dispatch and barrier-AND (dependency
+fences) — both modeled here.  A kernel-dispatch packet may additionally
+carry its own dependency signals (AQL header barrier bit + implicit fence):
+the scheduler will not launch it until every dep reads 0.
+
+Multiple producers (the training engine, the serving engine, ad-hoc
+OpenCL/OpenMP-style user code) may submit to the same queue, and one agent
+may own many *soft queues* — the multi-tenancy substrate the async scheduler
+(:mod:`repro.core.hsa.scheduler`) round-robins across.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
 from repro.core.hsa.signal import Signal
 from repro.core.roles import RoleKey
+
+_QUEUE_IDS = itertools.count()
 
 
 class Box:
@@ -30,17 +38,38 @@ class Box:
 
 @dataclasses.dataclass
 class KernelDispatchPacket:
-    role_key: RoleKey
-    args: tuple[Any, ...]
+    """AQL kernel dispatch.
+
+    Either ``role_key`` (region-managed role, participates in reconfiguration)
+    or ``fn`` (pinned-shell service: executed directly, e.g. the serving
+    engine's decode step) must be set.
+    """
+
+    role_key: RoleKey | None = None
+    args: tuple[Any, ...] = ()
+    fn: Callable[..., Any] | None = None
+    deps: tuple[Signal, ...] = ()       # AQL barrier-bit dependencies
     completion: Signal | None = None
     out: Box = dataclasses.field(default_factory=Box)
-    producer: str = "tf"            # who enqueued: "tf" | "opencl" | "openmp" | ...
+    producer: str = "tf"                # who enqueued: "tf" | "opencl" | "openmp" | ...
+    enqueue_t: float | None = None      # stamped by Queue.submit when a clock is attached
+
+    def __post_init__(self) -> None:
+        if (self.role_key is None) == (self.fn is None):
+            raise ValueError("exactly one of role_key / fn required")
+
+    @property
+    def what(self) -> str:
+        return str(self.role_key) if self.role_key is not None else getattr(
+            self.fn, "__name__", "fn"
+        )
 
 
 @dataclasses.dataclass
 class BarrierAndPacket:
     deps: tuple[Signal, ...]
     completion: Signal | None = None
+    enqueue_t: float | None = None
 
 
 Packet = KernelDispatchPacket | BarrierAndPacket
@@ -51,29 +80,52 @@ class QueueFullError(RuntimeError):
 
 
 class Queue:
-    """Bounded ring buffer with a doorbell signal (single consumer)."""
+    """Bounded ring buffer with a doorbell signal (single consumer).
 
-    def __init__(self, agent: Any, size: int = 256) -> None:
+    ``name`` identifies the queue in scheduler event logs and the per-queue
+    ledger breakdown; ``weight`` is consumed by weighted scheduling policies
+    (a weight-2 queue gets two grants per round).
+    """
+
+    def __init__(
+        self,
+        agent: Any,
+        size: int = 256,
+        *,
+        name: str | None = None,
+        weight: int = 1,
+        clock: Any = None,
+    ) -> None:
         if size < 1:
             raise ValueError("queue size must be >= 1")
+        if weight < 1:
+            raise ValueError("queue weight must be >= 1")
         self.agent = agent
         self.size = size
+        self.name = name if name is not None else f"q{next(_QUEUE_IDS)}"
+        self.weight = weight
+        self.clock = clock                 # optional: stamps packet enqueue times
         self._ring: list[Packet | None] = [None] * size
         self._write = 0
         self._read = 0
         self._lock = threading.Lock()
-        self.doorbell = Signal(0, name="doorbell")
+        self.doorbell = Signal(0, name=f"doorbell:{self.name}")
+        self._notify: Any = None           # scheduler doorbell fan-in (set on add_queue)
 
     # -- producer side -----------------------------------------------------------
 
     def submit(self, packet: Packet) -> int:
+        if self.clock is not None and packet.enqueue_t is None:
+            packet.enqueue_t = self.clock.now()
         with self._lock:
             if self._write - self._read >= self.size:
-                raise QueueFullError(f"queue full ({self.size} packets)")
+                raise QueueFullError(f"queue {self.name} full ({self.size} packets)")
             idx = self._write
             self._ring[idx % self.size] = packet
             self._write += 1
         self.doorbell.store(self._write)      # ring the doorbell
+        if self._notify is not None:
+            self._notify()
         return idx
 
     def dispatch(
@@ -81,11 +133,31 @@ class Queue:
         role_key: RoleKey,
         *args: Any,
         producer: str = "tf",
+        deps: Sequence[Signal] = (),
     ) -> KernelDispatchPacket:
         pkt = KernelDispatchPacket(
             role_key=role_key,
             args=args,
+            deps=tuple(deps),
             completion=Signal(1, name=f"done:{role_key}"),
+            producer=producer,
+        )
+        self.submit(pkt)
+        return pkt
+
+    def call(
+        self,
+        fn: Callable[..., Any],
+        *args: Any,
+        producer: str = "tf",
+        deps: Sequence[Signal] = (),
+    ) -> KernelDispatchPacket:
+        """Dispatch a pinned-shell callable (no region management)."""
+        pkt = KernelDispatchPacket(
+            fn=fn,
+            args=args,
+            deps=tuple(deps),
+            completion=Signal(1, name=f"done:{getattr(fn, '__name__', 'fn')}"),
             producer=producer,
         )
         self.submit(pkt)
@@ -97,6 +169,13 @@ class Queue:
         return pkt
 
     # -- consumer side -----------------------------------------------------------
+
+    def peek(self) -> Packet | None:
+        """Head packet without consuming it (in-order queues never skip)."""
+        with self._lock:
+            if self._read >= self._write:
+                return None
+            return self._ring[self._read % self.size]
 
     def pop(self) -> Packet | None:
         with self._lock:
@@ -113,3 +192,6 @@ class Queue:
 
     def __len__(self) -> int:
         return self.pending()
+
+    def __repr__(self) -> str:
+        return f"Queue({self.name}, pending={self.pending()}, weight={self.weight})"

@@ -1,9 +1,15 @@
 """hsa_init / hsa_shut_down: system bring-up.
 
 One-time device/kernel setup (paper Table II row 1): enumerate agents, build
-the role library, create the default queue + executor + region manager per
-kernel-dispatch agent.  The measured setup time lands in the ledger's SETUP
-category.
+the role library, and create per kernel-dispatch agent:
+
+  - ``num_queues`` user-level soft queues (the paper's multi-producer story:
+    TensorFlow, OpenCL, OpenMP clients each get their own queue),
+  - one async multi-queue :class:`Scheduler` plus a legacy ``Executor``
+    façade over it,
+  - one :class:`RegionManager` (bounded residency, LRU).
+
+The measured setup time lands in the ledger's SETUP category.
 """
 
 from __future__ import annotations
@@ -16,6 +22,7 @@ from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
 from repro.core.hsa.agent import Agent
 from repro.core.hsa.executor import Executor
 from repro.core.hsa.queue import Queue
+from repro.core.hsa.scheduler import Scheduler
 from repro.core.reconfig import RegionManager
 from repro.core.roles import RoleLibrary
 
@@ -25,22 +32,38 @@ class HsaSystem:
         self,
         *,
         num_regions: int = 4,
+        num_queues: int = 1,
         ledger: OverheadLedger = GLOBAL_LEDGER,
         queue_size: int = 1024,
+        scheduler_policy: str = "round_robin",
     ) -> None:
         self.ledger = ledger
         with ledger.timed(ledger_mod.SETUP, what="hsa_init"):
             self.agents = Agent.discover(num_reconfig_regions=num_regions)
             self.library = RoleLibrary(ledger=ledger)
-            self.queues: dict[str, Queue] = {}
+            self.queues: dict[str, Queue] = {}             # default queue per agent
+            self.soft_queues: dict[str, list[Queue]] = {}  # all soft queues per agent
             self.executors: dict[str, Executor] = {}
+            self.schedulers: dict[str, Scheduler] = {}
             self.regions: dict[str, RegionManager] = {}
             for agent in self.agents:
-                q = agent.create_queue(queue_size)
                 rm = RegionManager(agent.num_reconfig_regions, ledger=ledger)
-                self.queues[agent.name] = q
+                sched = Scheduler(
+                    rm, self.library, ledger=ledger, policy=scheduler_policy
+                )
+                qs = [
+                    sched.add_queue(
+                        agent.create_queue(queue_size, name=f"{agent.name}/q{i}")
+                    )
+                    for i in range(max(1, num_queues))
+                ]
+                self.queues[agent.name] = qs[0]
+                self.soft_queues[agent.name] = qs
                 self.regions[agent.name] = rm
-                self.executors[agent.name] = Executor(rm, self.library, ledger=ledger)
+                self.schedulers[agent.name] = sched
+                self.executors[agent.name] = Executor(
+                    rm, self.library, ledger=ledger, scheduler=sched
+                )
 
     @property
     def default_agent(self) -> Agent:
@@ -53,15 +76,33 @@ class HsaSystem:
     def queue_of(self, agent: Agent) -> Queue:
         return self.queues[agent.name]
 
+    def queues_of(self, agent: Agent) -> list[Queue]:
+        return list(self.soft_queues[agent.name])
+
     def executor_of(self, agent: Agent) -> Executor:
         return self.executors[agent.name]
+
+    def scheduler_of(self, agent: Agent) -> Scheduler:
+        return self.schedulers[agent.name]
 
     def regions_of(self, agent: Agent) -> RegionManager:
         return self.regions[agent.name]
 
+    def create_queue(
+        self, agent: Agent, *, name: str | None = None, size: int = 256,
+        weight: int = 1,
+    ) -> Queue:
+        """Open an extra soft queue on ``agent`` (a new tenant)."""
+        q = agent.create_queue(size, name=name, weight=weight)
+        self.schedulers[agent.name].add_queue(q)
+        self.soft_queues[agent.name].append(q)
+        return q
+
     def shutdown(self) -> None:
         for ex in self.executors.values():
             ex.stop()
+        for sched in self.schedulers.values():
+            sched.stop()                 # idempotent; covers direct .start() users
         for rm in self.regions.values():
             rm.flush()
 

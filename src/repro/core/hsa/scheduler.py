@@ -1,0 +1,552 @@
+"""Async multi-queue packet scheduler — the runtime half of transparent dispatch.
+
+The paper's FPGA is shared dynamically at runtime: kernels arrive on HSA
+user-level queues from several producers at once (the TensorFlow engine,
+OpenCL/OpenMP clients), and the device reconfigures regions on demand.  This
+scheduler is that sharing layer:
+
+  - N *soft queues* per agent; AQL packets carry completion signals, and
+    kernel packets / barrier-AND packets carry dependency signals.
+  - A doorbell-driven loop round-robins (or weight-round-robins) *ready*
+    packets across queues: a packet is ready when its queue is not stalled
+    and every dependency signal reads 0.
+  - Reconfiguration stalls only the queue that missed residency.  The
+    reconfiguration engine (the FPGA's ICAP; here the XLA load path) is
+    modeled separately from the compute engine, so an independent queue keeps
+    executing while another queue's region loads.  ``overlap_reconfig=False``
+    recovers the synchronous baseline where reconfiguration occupies the
+    device — the comparison benchmarks/table4 measures.
+  - Per-queue wait / exec / reconfig time lands in the overhead ledger
+    (``queue=`` meta → ``OverheadLedger.queue_breakdown()``).
+
+Determinism: the scheduler takes an injectable clock.  With a
+:class:`~repro.core.hsa.clock.VirtualClock` the whole schedule is a
+discrete-event simulation — no threads, no sleeps — and the event log is
+bit-for-bit reproducible, which is what the interleaving tests assert.
+Durations on the virtual timeline come from ``cost_model(kind, what,
+measured_s)``; by default the actually-measured execution time is used.
+With a :class:`WallClock` the same code path runs threaded (``start()``)
+with reconfigurations offloaded to a background worker.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Iterable
+
+import jax
+
+from repro.core import ledger as ledger_mod
+from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
+from repro.core.hsa.clock import Clock, VirtualClock, WallClock
+from repro.core.hsa.queue import BarrierAndPacket, KernelDispatchPacket, Packet, Queue
+from repro.core.reconfig import RegionManager
+from repro.core.roles import RoleLibrary
+
+ROUND_ROBIN = "round_robin"
+WEIGHTED = "weighted"
+RANDOM = "random"
+POLICIES = (ROUND_ROBIN, WEIGHTED, RANDOM)
+
+
+class SchedulerDeadlock(RuntimeError):
+    """No packet can ever become ready (unsatisfiable dependency)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedEvent:
+    """One entry of the deterministic event log."""
+
+    t: float
+    kind: str  # exec_start | exec_end | reconfig_start | reconfig_end | barrier | error
+    queue: str
+    what: str
+    seq: int = 0
+
+    def brief(self) -> tuple[str, str, str]:
+        return (self.kind, self.queue, self.what)
+
+
+@dataclasses.dataclass
+class QueueStats:
+    wait_s: float = 0.0
+    exec_s: float = 0.0
+    reconfig_s: float = 0.0
+    dispatched: int = 0
+    barriers: int = 0
+    reconfigs: int = 0
+
+
+@dataclasses.dataclass
+class _Stall:
+    """An in-progress reconfiguration attributed to one queue."""
+
+    role_name: str
+    start_t: float
+    end_t: float                      # virtual end (cooperative) / inf (threaded)
+    future: Future | None = None      # threaded mode only
+    error: BaseException | None = None  # load failed: fail the head packet at retire
+
+
+def _default_cost(kind: str, what: str, measured_s: float) -> float:
+    del kind, what
+    return measured_s
+
+
+class Scheduler:
+    """Doorbell-driven multi-queue packet scheduler over one agent's engines."""
+
+    def __init__(
+        self,
+        regions: RegionManager,
+        library: RoleLibrary,
+        *,
+        ledger: OverheadLedger = GLOBAL_LEDGER,
+        clock: Clock | None = None,
+        policy: str = ROUND_ROBIN,
+        seed: int = 0,
+        cost_model: Callable[[str, str, float], float] | None = None,
+        overlap_reconfig: bool = True,
+        keep_events: int = 100_000,
+    ) -> None:
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; choose from {POLICIES}")
+        self.regions = regions
+        self.library = library
+        self.ledger = ledger
+        self.clock: Clock = clock if clock is not None else WallClock()
+        # honor the Clock protocol's `virtual` flag so user-supplied
+        # deterministic clocks get virtual-time semantics too
+        self._virtual = bool(getattr(self.clock, "virtual", False))
+        self.policy = policy
+        self.cost_model = cost_model or _default_cost
+        self.overlap_reconfig = overlap_reconfig
+        self.keep_events = keep_events
+
+        self.queues: list[Queue] = []
+        self.stats: dict[str, QueueStats] = {}
+        self.events: list[SchedEvent] = []
+        self.dropped_events = 0
+
+        self._rng = random.Random(seed)
+        self._grant_order: list[int] = []
+        self._grant_ptr = 0
+        self._stalls: dict[str, _Stall] = {}       # queue name -> reconfig in flight
+        self._seq = 0
+        self._t0 = self.clock.now()
+        self._compute_free_t = self._t0
+        self._reconfig_free_t = self._t0
+        self._busy_s = 0.0
+        self._completed = 0
+
+        self._doorbell_counter = 0
+        self._work = threading.Condition()
+        # serializes consumers: the worker thread and a legacy synchronous
+        # drain() may step concurrently; peek-then-pop must stay atomic
+        self._step_lock = threading.RLock()
+        self._worker: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._reconfig_pool: ThreadPoolExecutor | None = None
+
+    # -- queue management -----------------------------------------------------
+
+    def add_queue(self, queue: Queue) -> Queue:
+        if any(q.name == queue.name for q in self.queues):
+            raise ValueError(f"duplicate queue name {queue.name!r}")
+        queue.clock = self.clock
+        queue._notify = self._ring                 # doorbell fan-in
+        self.queues.append(queue)
+        self.stats[queue.name] = QueueStats()
+        self._rebuild_grants()
+        return queue
+
+    def create_queue(
+        self, agent: Any = None, *, name: str | None = None, size: int = 256,
+        weight: int = 1,
+    ) -> Queue:
+        return self.add_queue(Queue(agent, size, name=name, weight=weight))
+
+    def _rebuild_grants(self) -> None:
+        order: list[int] = []
+        for i, q in enumerate(self.queues):
+            order.extend([i] * (q.weight if self.policy == WEIGHTED else 1))
+        self._grant_order = order
+        self._grant_ptr = self._grant_ptr % max(1, len(order))
+
+    def _ring(self) -> None:
+        with self._work:
+            self._doorbell_counter += 1
+            self._work.notify_all()
+
+    # -- readiness ------------------------------------------------------------
+
+    def _deps_zero(self, deps: Iterable[Any]) -> bool:
+        return all(d.load() == 0 for d in deps)
+
+    def _deps_time(self, deps: Iterable[Any], now: float) -> float:
+        # completion times ride on the signal objects themselves: lifetime is
+        # exactly the signal's, so no unbounded id-keyed map / stale-id reuse
+        return max([now] + [getattr(d, "_complete_t", now) for d in deps])
+
+    def _complete(self, sig: Any, t: float) -> None:
+        if sig is not None:
+            sig._complete_t = t
+            sig.store(0)
+
+    def _log(self, t: float, kind: str, queue: str, what: str) -> SchedEvent:
+        ev = SchedEvent(t=t, kind=kind, queue=queue, what=what, seq=self._seq)
+        self._seq += 1
+        if len(self.events) < self.keep_events:
+            self.events.append(ev)
+        else:
+            self.dropped_events += 1
+        return ev
+
+    # -- the scheduling step ----------------------------------------------------
+
+    def step(self) -> SchedEvent | None:
+        """Process at most one packet (or retire one stall); None when idle.
+
+        Cooperative core shared by ``run_until_idle`` (virtual clock,
+        deterministic) and the background worker (wall clock).
+        """
+        with self._step_lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> SchedEvent | None:
+        now = self.clock.now()
+        n = len(self.queues)
+        if n == 0:
+            return None
+
+        # retire finished stalls first so their queues become eligible
+        for qname, stall in list(self._stalls.items()):
+            if stall.future is not None:
+                if not stall.future.done():
+                    continue
+                end = self.clock.now()
+                _, stall.error = stall.future.result()
+            elif stall.end_t <= now:
+                end = stall.end_t
+            else:
+                continue
+            del self._stalls[qname]
+            st = self.stats[qname]
+            st.reconfigs += 1
+            st.reconfig_s += end - stall.start_t
+            self._log(end, "reconfig_end", qname, stall.role_name)
+            if stall.error is not None:
+                # the load can never succeed (e.g. all regions pinned):
+                # surface it to the waiter instead of re-stalling forever
+                q = next(qq for qq in self.queues if qq.name == qname)
+                pkt = q.peek()
+                if isinstance(pkt, KernelDispatchPacket):
+                    return self._fail(q, pkt, stall.error, end)
+
+        order = self._grant_order
+        width = len(order)
+        if self.policy == RANDOM:
+            probes = list(range(width))
+            self._rng.shuffle(probes)          # seeded: reproducible schedules
+        else:
+            probes = [(self._grant_ptr + k) % width for k in range(width)]
+        for gi in probes:
+            qi = order[gi]
+            q = self.queues[qi]
+            if q.name in self._stalls:
+                continue
+            pkt = q.peek()
+            if pkt is None:
+                continue
+            if not self._deps_zero(pkt.deps):
+                continue
+            if self.policy != RANDOM:
+                self._grant_ptr = (gi + 1) % width
+            return self._process(q, pkt, now)
+
+        # nothing ready now: on a virtual clock, jump to the next stall retire
+        if self._virtual and self._stalls:
+            target = min(s.end_t for s in self._stalls.values())
+            self.clock.advance_to(target)
+            return self._step_locked()
+
+        if (
+            self._virtual
+            and not self._stalls
+            and any(q.pending() for q in self.queues)
+        ):
+            # on the virtual clock every producer has already run: a non-ready
+            # head can never become ready.  On a wall clock another producer
+            # thread may still satisfy the dependency — just report no progress.
+            heads = [
+                f"{q.name}:{q.peek().__class__.__name__}"
+                for q in self.queues if q.pending()
+            ]
+            raise SchedulerDeadlock(
+                f"pending packets can never become ready: {heads} "
+                "(dependency signal never reaches 0)"
+            )
+        return None
+
+    # -- packet processing -------------------------------------------------------
+
+    def _process(self, q: Queue, pkt: Packet, now: float) -> SchedEvent:
+        if isinstance(pkt, BarrierAndPacket):
+            q.pop()
+            t = self._deps_time(pkt.deps, now)
+            self.stats[q.name].barriers += 1
+            self._completed += 1
+            ev = self._log(t, "barrier", q.name, f"and[{len(pkt.deps)}]")
+            self._complete(pkt.completion, t)
+            return ev
+
+        assert isinstance(pkt, KernelDispatchPacket)
+        role = None
+        if pkt.role_key is not None:
+            try:
+                role = self.library.get(pkt.role_key)
+            except KeyError as e:
+                return self._fail(q, pkt, e, now)
+            if not self.regions.is_resident(role.key):
+                # not resident — even if a prior stall loaded it and another
+                # tenant evicted it since: stall (again) with full accounting
+                # rather than reloading invisibly at exec time
+                return self._begin_reconfig(q, pkt, role, now)
+        return self._exec(q, pkt, role, now)
+
+    def _fail(self, q: Queue, pkt: KernelDispatchPacket, err: BaseException,
+              now: float) -> SchedEvent:
+        q.pop()
+        pkt.out.error = err
+        self._completed += 1
+        ev = self._log(now, "error", q.name, pkt.what)
+        self._complete(pkt.completion, now)
+        return ev
+
+    def _begin_reconfig(self, q: Queue, pkt: KernelDispatchPacket, role: Any,
+                        now: float) -> SchedEvent:
+        """Stall *this queue only* while the role loads into a region."""
+        pkt._reconfigured = True
+        engine_free = (
+            self._reconfig_free_t if self.overlap_reconfig else self._compute_free_t
+        )
+        # deps gate the grant in *virtual* time too: eligibility is checked on
+        # live signal state, which runs ahead of the simulated timeline
+        start = max(now, engine_free, self._deps_time(pkt.deps, now))
+
+        if self._reconfig_pool is not None and not self._virtual:
+            fut = self._reconfig_pool.submit(self._do_reconfig, role, q.name)
+            self._stalls[q.name] = _Stall(role.name, start, float("inf"), future=fut)
+            return self._log(start, "reconfig_start", q.name, role.name)
+
+        measured, err = self._do_reconfig(role, q.name)
+        dur = self.cost_model("reconfig", role.name, measured)
+        end = start + dur
+        if self.overlap_reconfig:
+            self._reconfig_free_t = end
+        else:
+            self._compute_free_t = end        # sync baseline: device does the load
+        self._stalls[q.name] = _Stall(role.name, start, end, error=err)
+        return self._log(start, "reconfig_start", q.name, role.name)
+
+    def _do_reconfig(self, role: Any, qname: str) -> tuple[float, BaseException | None]:
+        """Load the role; returns (measured seconds, error-or-None)."""
+        try:
+            res = self.regions.ensure_resident(role, queue=qname)
+            return res.reconfig_s, None
+        except BaseException as e:
+            return 0.0, e
+
+    def _exec(self, q: Queue, pkt: KernelDispatchPacket, role: Any,
+              now: float) -> SchedEvent:
+        start = max(now, self._compute_free_t, self._deps_time(pkt.deps, now))
+        q.pop()
+        st = self.stats[q.name]
+        wait = max(0.0, start - (pkt.enqueue_t if pkt.enqueue_t is not None else start))
+        st.wait_s += wait
+        self.ledger.record(
+            ledger_mod.WAIT, wait, queue=q.name, what=pkt.what, producer=pkt.producer
+        )
+        self._log(start, "exec_start", q.name, pkt.what)
+
+        measured = 0.0
+        try:
+            t0 = time.perf_counter_ns()
+            if role is not None:
+                if getattr(pkt, "_reconfigured", False):
+                    # stall already accounted this packet's lookup; if the role
+                    # was evicted meanwhile (or its reconfig failed), re-load
+                    # properly instead of executing outside region management
+                    if not self.regions.touch(role.key):
+                        self.regions.ensure_resident(role, queue=q.name)
+                else:
+                    self.regions.ensure_resident(role, queue=q.name)
+                out = role(*pkt.args)
+            else:
+                out = pkt.fn(*pkt.args)
+            t1 = time.perf_counter_ns()
+            self.ledger.record(
+                ledger_mod.DISPATCH, (t1 - t0) * 1e-9,
+                role=pkt.what, producer=pkt.producer, queue=q.name,
+            )
+            out = jax.block_until_ready(out)
+            t2 = time.perf_counter_ns()
+            self.ledger.record(
+                ledger_mod.EXEC, (t2 - t1) * 1e-9, role=pkt.what, queue=q.name
+            )
+            measured = (t2 - t0) * 1e-9
+            pkt.out.value = out
+        except BaseException as e:          # surface to waiter, don't kill the loop
+            pkt.out.error = e
+
+        # keyed by role.name to match the reconfig path (calibration dicts use
+        # role names, not shape-specialized key strings)
+        dur = self.cost_model(
+            "exec", role.name if role is not None else pkt.what, measured
+        )
+        end = start + dur
+        self._compute_free_t = end
+        self._busy_s += dur
+        st.exec_s += dur
+        st.dispatched += 1
+        self._completed += 1
+        ev = self._log(end, "exec_end", q.name, pkt.what)
+        self._complete(pkt.completion, end)
+        return ev
+
+    # -- cooperative driving -------------------------------------------------------
+
+    def run_until_idle(self, max_steps: int = 1_000_000) -> int:
+        """Drive the loop until every queue is empty; returns packets completed."""
+        before = self._completed
+        for _ in range(max_steps):
+            ev = self.step()
+            if ev is None:
+                if self._await_stall():
+                    continue
+                if any(q.pending() for q in self.queues):
+                    # wall clock: a dependency owned by another producer thread
+                    # may clear any moment (legacy drain blocked here too)
+                    self.clock.sleep(0.0002)
+                    continue
+                break
+        else:
+            raise RuntimeError(f"scheduler did not go idle in {max_steps} steps")
+        return self._completed - before
+
+    def _await_stall(self) -> bool:
+        """Block on an in-flight threaded reconfig, if any (lock-safe peek)."""
+        with self._step_lock:
+            fut = next(
+                (s.future for s in self._stalls.values() if s.future is not None),
+                None,
+            )
+        if fut is None:
+            return False
+        fut.result()
+        return True
+
+    def drain(self, queue: Queue | None = None, max_steps: int = 1_000_000) -> int:
+        """Synchronously run until ``queue`` is empty (all queues when None).
+
+        Unlike ``run_until_idle`` this does not insist the *other* tenants'
+        queues go idle: a dep-blocked packet on someone else's queue must not
+        wedge this producer's drain.  Returns packets completed meanwhile
+        (other queues' packets may ride along — one compute engine).
+        """
+        if queue is None:
+            return self.run_until_idle(max_steps)
+        if all(q is not queue for q in self.queues):
+            self.add_queue(queue)
+        before = self._completed
+        for _ in range(max_steps):
+            if queue.pending() == 0 and queue.name not in self._stalls:
+                break
+            ev = self.step()
+            if ev is None and not self._await_stall():
+                self.clock.sleep(0.0002)      # wall clock: await foreign producer
+        else:
+            raise RuntimeError(f"queue {queue.name} did not drain in {max_steps} steps")
+        return self._completed - before
+
+    @property
+    def running(self) -> bool:
+        """True while the threaded worker owns the consume side."""
+        return self._worker is not None
+
+    # -- threaded driving ----------------------------------------------------------
+
+    def start(self, poll_s: float = 0.0005, reconfig_workers: int = 1) -> None:
+        if self._worker is not None:
+            raise RuntimeError("scheduler already running")
+        if self._virtual:
+            raise RuntimeError("threaded mode requires a wall clock")
+        self._stop.clear()
+        self._reconfig_pool = ThreadPoolExecutor(
+            max_workers=reconfig_workers, thread_name_prefix="hsa-reconfig"
+        )
+
+        def loop() -> None:
+            last = -1
+            while not self._stop.is_set():
+                try:
+                    progressed = self.step() is not None
+                except SchedulerDeadlock:
+                    progressed = False        # producers may still unblock us
+                if progressed:
+                    continue
+                with self._work:
+                    if self._doorbell_counter == last:
+                        self._work.wait(timeout=poll_s)
+                    last = self._doorbell_counter
+
+        self._worker = threading.Thread(target=loop, name="hsa-scheduler", daemon=True)
+        self._worker.start()
+
+    def stop(self) -> None:
+        if self._worker is not None:
+            self._stop.set()
+            self._ring()
+            self._worker.join(timeout=5.0)
+            self._worker = None
+        if self._reconfig_pool is not None:
+            self._reconfig_pool.shutdown(wait=True)
+            self._reconfig_pool = None
+
+    # -- reporting ------------------------------------------------------------------
+
+    def event_log(self) -> list[SchedEvent]:
+        """Events in timeline order (stable on simultaneous timestamps)."""
+        return sorted(self.events, key=lambda e: (e.t, e.seq))
+
+    def timeline(self) -> dict[str, float]:
+        """Makespan / busy / idle accounting for the device's compute engine."""
+        end = max(
+            [self._compute_free_t, self.clock.now()]
+            + [s.end_t for s in self._stalls.values() if s.end_t != float("inf")]
+        )
+        makespan = max(0.0, end - self._t0)
+        busy = self._busy_s
+        return {
+            "makespan_s": makespan,
+            "busy_s": busy,
+            "idle_s": max(0.0, makespan - busy),
+            "idle_fraction": (max(0.0, makespan - busy) / makespan) if makespan else 0.0,
+        }
+
+    def queue_report(self) -> dict[str, dict[str, float]]:
+        return {
+            name: {
+                "wait_s": st.wait_s,
+                "exec_s": st.exec_s,
+                "reconfig_s": st.reconfig_s,
+                "dispatched": float(st.dispatched),
+                "barriers": float(st.barriers),
+                "reconfigs": float(st.reconfigs),
+            }
+            for name, st in self.stats.items()
+        }

@@ -32,14 +32,16 @@ SETUP = "setup"
 RECONFIG = "reconfig"
 DISPATCH = "dispatch"
 EXEC = "exec"                 # kernel execution proper (not in Table II, kept for Table III)
+WAIT = "wait"                 # queue residency: submit -> launch grant (scheduler)
 
-CATEGORIES = (SETUP, RECONFIG, DISPATCH, EXEC)
+CATEGORIES = (SETUP, RECONFIG, DISPATCH, EXEC, WAIT)
 
 OCCURRENCE = {
     SETUP: "once",
     RECONFIG: "if not configured",
     DISPATCH: "every dispatch",
     EXEC: "every dispatch",
+    WAIT: "every dispatch",
 }
 
 
@@ -75,12 +77,16 @@ class OverheadLedger:
         self._lock = threading.Lock()
         self._stats: dict[str, Stat] = {c: Stat() for c in CATEGORIES}
         self._entries: list[Entry] | None = [] if keep_entries else None
+        self._by_queue: dict[str, dict[str, Stat]] = {}
 
     def record(self, category: str, seconds: float, **meta: Any) -> None:
         if category not in self._stats:
             raise ValueError(f"unknown ledger category {category!r}")
         with self._lock:
             self._stats[category].add(seconds)
+            if "queue" in meta and meta["queue"] is not None:
+                per_q = self._by_queue.setdefault(str(meta["queue"]), {})
+                per_q.setdefault(category, Stat()).add(seconds)
             if self._entries is not None:
                 self._entries.append(Entry(category, seconds, meta))
 
@@ -100,9 +106,19 @@ class OverheadLedger:
         with self._lock:
             return list(self._entries or ())
 
+    def queue_breakdown(self) -> dict[str, dict[str, Stat]]:
+        """Per-queue stats for entries recorded with ``queue=`` meta
+        (the scheduler's wait/exec/reconfig attribution)."""
+        with self._lock:
+            return {
+                q: {c: dataclasses.replace(s) for c, s in per_q.items()}
+                for q, per_q in self._by_queue.items()
+            }
+
     def reset(self) -> None:
         with self._lock:
             self._stats = {c: Stat() for c in CATEGORIES}
+            self._by_queue = {}
             if self._entries is not None:
                 self._entries = []
 

@@ -63,35 +63,51 @@ class RegionManager:
         self.stats = ResidencyStats()
         self._resident: "OrderedDict[RoleKey, Role]" = OrderedDict()  # LRU: oldest first
         self._pinned: set[RoleKey] = set()
+        # the scheduler's reconfig worker and exec path may race: one choke lock
+        import threading
+
+        self._lock = threading.RLock()
 
     # -- core protocol -------------------------------------------------------
 
-    def ensure_resident(self, role: Role) -> ResidencyResult:
-        key = role.key
-        if key in self._resident:
+    def ensure_resident(self, role: Role, *, queue: str | None = None) -> ResidencyResult:
+        with self._lock:
+            key = role.key
+            if key in self._resident:
+                self._resident.move_to_end(key)
+                self.stats.hits += 1
+                return ResidencyResult(role=role, hit=True)
+
+            self.stats.misses += 1
+            evicted: RoleKey | None = None
+            if len(self._resident) >= self.num_regions:
+                evicted = self._evict_one()
+                if evicted is None:
+                    raise RuntimeError(
+                        f"all {self.num_regions} regions pinned; cannot load {role.name}"
+                    )
+
+            import time
+
+            t0 = time.perf_counter_ns()
+            role.load()
+            dt = (time.perf_counter_ns() - t0) * 1e-9
+            self.ledger.record(
+                ledger_mod.RECONFIG, dt, role=role.name, evicted=str(evicted),
+                source=role.source, queue=queue,
+            )
+            self._resident[key] = role
+            return ResidencyResult(role=role, hit=False, evicted=evicted, reconfig_s=dt)
+
+    def touch(self, key: RoleKey) -> bool:
+        """Refresh LRU position without a stats lookup (scheduler exec path:
+        the preceding stall already accounted this packet's lookup).
+        Returns False when the role was evicted again in the meantime."""
+        with self._lock:
+            if key not in self._resident:
+                return False
             self._resident.move_to_end(key)
-            self.stats.hits += 1
-            return ResidencyResult(role=role, hit=True)
-
-        self.stats.misses += 1
-        evicted: RoleKey | None = None
-        if len(self._resident) >= self.num_regions:
-            evicted = self._evict_one()
-            if evicted is None:
-                raise RuntimeError(
-                    f"all {self.num_regions} regions pinned; cannot load {role.name}"
-                )
-
-        import time
-
-        t0 = time.perf_counter_ns()
-        role.load()
-        dt = (time.perf_counter_ns() - t0) * 1e-9
-        self.ledger.record(
-            ledger_mod.RECONFIG, dt, role=role.name, evicted=str(evicted), source=role.source
-        )
-        self._resident[key] = role
-        return ResidencyResult(role=role, hit=False, evicted=evicted, reconfig_s=dt)
+            return True
 
     def _evict_one(self) -> RoleKey | None:
         for key in self._resident:          # oldest-first iteration order
@@ -105,23 +121,28 @@ class RegionManager:
     # -- management ------------------------------------------------------------
 
     def pin(self, role: Role) -> None:
-        self.ensure_resident(role)
-        self._pinned.add(role.key)
+        with self._lock:                 # no eviction window between load and pin
+            self.ensure_resident(role)
+            self._pinned.add(role.key)
 
     def unpin(self, key: RoleKey) -> None:
-        self._pinned.discard(key)
+        with self._lock:
+            self._pinned.discard(key)
 
     def flush(self) -> None:
-        for role in self._resident.values():
-            role.unload()
-        self._resident.clear()
-        self._pinned.clear()
+        with self._lock:
+            for role in self._resident.values():
+                role.unload()
+            self._resident.clear()
+            self._pinned.clear()
 
     def resident_keys(self) -> list[RoleKey]:
-        return list(self._resident.keys())
+        with self._lock:
+            return list(self._resident.keys())
 
     def is_resident(self, key: RoleKey) -> bool:
-        return key in self._resident
+        with self._lock:
+            return key in self._resident
 
     def __len__(self) -> int:
         return len(self._resident)

@@ -1,0 +1,6 @@
+"""Distribution layer: sharding rules, activation constraints, collectives."""
+
+from repro.dist import act
+from repro.dist.sharding import ShardingRules
+
+__all__ = ["act", "ShardingRules"]

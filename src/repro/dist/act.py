@@ -1,0 +1,49 @@
+"""Activation sharding constraints.
+
+``shard_act(x, *logical)`` applies ``with_sharding_constraint`` using the
+active :class:`~repro.dist.sharding.ShardingRules` (scoped via ``use_rules``).
+Outside any rules scope — single-device tests, examples — it is an exact
+no-op, so model code carries its production sharding annotations everywhere
+without penalizing small-scale runs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Iterator
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar[Any] = contextvars.ContextVar(
+    "repro_act_rules", default=None
+)
+
+
+def current() -> Any:
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Any) -> Iterator[Any]:
+    token = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(token)
+
+
+def shard_act(x: jax.Array, *logical: str | None) -> jax.Array:
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"{len(logical)} logical axes for rank-{x.ndim} array")
+    entries = rules.act_pspec(x.shape, logical)
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*entries))
+    )

@@ -1,0 +1,133 @@
+"""Logical-axis sharding rules.
+
+Models annotate parameters and activations with *logical* axis names
+("batch", "heads", "mlp", "expert", ...).  :class:`ShardingRules` owns the
+single mapping from those names to physical mesh axes and derives every
+PartitionSpec in the system from it:
+
+  - ``pspec(spec)``        → parameter PartitionSpec (via ParamSpec.logical),
+  - ``sharding_tree(tree)``→ NamedSharding tree for a ParamSpec tree,
+  - ``act_pspec(...)``     → activation constraint specs (dist.act.shard_act),
+  - ``batch_pspec(...)``   → data-parallel batch specs for inputs/logits.
+
+Divisibility is checked per-dimension: an axis that does not evenly divide a
+dimension is dropped (replicated) rather than erroring, so reduced smoke
+configs and production configs share one rule set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _axes_size(mesh: Any, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping of logical axis names to physical mesh axes."""
+
+    mesh: Any
+    logical_to_physical: Mapping[str, tuple[str, ...]]
+    serving: bool = False
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def for_arch(cls, cfg: Any, mesh: Any, *, serving: bool = False) -> "ShardingRules":
+        """Standard layout: batch over (pod, data), tensor axes over model.
+
+        MoE expert placement: training with experts_per_token >= 4 selects the
+        EP-all layout (experts over data x model, tokens all_to_all'd); smaller
+        top-k keeps experts on the model axis and replicates tokens (TP mode).
+        Serving prefers expert-FFN sharding over data when the expert count
+        cannot cover the full mesh.
+        """
+        axes = mesh.axis_names
+        dp = tuple(a for a in ("pod", "data") if a in axes)
+        model = ("model",) if "model" in axes else ()
+
+        ep: tuple[str, ...] = model
+        ff: tuple[str, ...] = ()
+        moe = getattr(cfg, "moe", None)
+        if moe is not None:
+            full = tuple(a for a in ("data", "model") if a in axes)
+            if not serving and moe.experts_per_token >= 4 and len(full) > 1:
+                ep = full                                  # EP-all layout
+            elif serving and model:
+                total = _axes_size(mesh, full)
+                if moe.num_experts % max(total, 1) != 0 and "data" in axes:
+                    # can't cover the mesh with experts: E over model, f over data
+                    ff = ("data",)
+
+        l2p: dict[str, tuple[str, ...]] = {
+            "batch": dp,
+            "embed": (),
+            "layers": (),
+            "vocab": model,
+            "heads": model,
+            "kv_heads": model,
+            "mlp": model,
+            "ssm_inner": model,
+            "ssm_heads": model,
+            "q_lora": (),
+            "kv_lora": (),
+            "expert": ep,
+            "expert_embed": (),
+            "expert_ff": ff,
+        }
+        return cls(mesh=mesh, logical_to_physical=l2p, serving=serving)
+
+    # -- core mapping ---------------------------------------------------------
+
+    def ep_axes(self) -> tuple[str, ...]:
+        return tuple(self.logical_to_physical.get("expert", ()))
+
+    def _entries(
+        self, shape: Sequence[int], logical: Sequence[str | None]
+    ) -> list[Any]:
+        """Per-dim physical entries with divisibility + duplicate-axis checks."""
+        used: set[str] = set()
+        entries: list[Any] = []
+        for dim, name in zip(shape, logical):
+            axes = tuple(self.logical_to_physical.get(name, ())) if name else ()
+            axes = tuple(a for a in axes if a in self.mesh.axis_names and a not in used)
+            size = _axes_size(self.mesh, axes)
+            if not axes or size <= 1 or dim % size != 0:
+                entries.append(None)
+                continue
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else axes[0])
+        return entries
+
+    def pspec(self, spec: Any) -> P:
+        """ParamSpec -> PartitionSpec (the ``pspec_of`` hook of the optimizer)."""
+        return P(*self._entries(spec.shape, spec.logical))
+
+    def act_pspec(self, shape: Sequence[int], logical: Sequence[str | None]) -> list[Any]:
+        return self._entries(shape, logical)
+
+    def sharding_tree(self, spec_tree: Any) -> Any:
+        import jax
+
+        from repro.models.params import is_spec
+
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, self.pspec(s)),
+            spec_tree,
+            is_leaf=is_spec,
+        )
+
+    def batch_pspec(self, global_batch: int, extra_dims: int) -> P:
+        """P(dp_entry, None * extra_dims); dp dropped when batch not divisible."""
+        dp = tuple(self.logical_to_physical.get("batch", ()))
+        entry: Any = None
+        if dp and global_batch % _axes_size(self.mesh, dp) == 0:
+            entry = dp if len(dp) > 1 else dp[0]
+        return P(entry, *([None] * extra_dims))

@@ -154,7 +154,8 @@ class ServeEngine:
     """
 
     def __init__(self, model, params, *, batch_slots: int = 4,
-                 max_len: int = 256, temperature: float = 0.0, seed: int = 0):
+                 max_len: int = 256, temperature: float = 0.0, seed: int = 0,
+                 hsa_queue=None, hsa_scheduler=None, producer: str = "tf-serving"):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -167,6 +168,36 @@ class ServeEngine:
         self._uid = 0
         self._cache = None
         self._pos = np.zeros(batch_slots, np.int64)
+        # optional HSA routing: prefill/decode launches become queue packets so
+        # serving shares the agent with other producers (paper multi-tenancy)
+        if (hsa_queue is None) != (hsa_scheduler is None):
+            raise ValueError("hsa_queue and hsa_scheduler must be given together")
+        self._hsa_queue = hsa_queue
+        self._hsa_scheduler = hsa_scheduler
+        self._producer = producer
+
+    def _launch(self, fn, *args, **kwargs):
+        """Run a model step directly, or as an AQL packet through the HSA queue."""
+        if self._hsa_queue is None:
+            return fn(*args, **kwargs)
+        if kwargs:
+            def call(*a):
+                return fn(*a, **kwargs)
+            call.__name__ = getattr(fn, "__name__", "serve_step")
+        else:
+            call = fn
+        pkt = self._hsa_queue.call(call, *args, producer=self._producer)
+        if getattr(self._hsa_scheduler, "running", False):
+            # the scheduler's worker thread owns the consume side: never run
+            # the cooperative loop concurrently, just wait for completion
+            pkt.completion.wait_eq(0)
+        else:
+            # drain only our queue: another tenant's dep-blocked packet must
+            # not wedge (or deadlock) a decode step
+            self._hsa_scheduler.drain(self._hsa_queue)
+        if pkt.out.error is not None:
+            raise pkt.out.error
+        return pkt.out.value
 
     def submit(self, prompt: list[int], max_new_tokens: int = 32) -> int:
         self._uid += 1
@@ -179,8 +210,8 @@ class ServeEngine:
 
     def _prefill_slot(self, slot: int, req: Request) -> None:
         batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-        logits, cache = self.model.prefill(self.params, batch,
-                                           cache_len=self.max_len)
+        logits, cache = self._launch(self.model.prefill, self.params, batch,
+                                     cache_len=self.max_len)
         tok = self._sample(np.asarray(logits, np.float32)[0])
         req.generated.append(int(tok))
         if self._cache is None:
@@ -228,8 +259,8 @@ class ServeEngine:
         # times decode against their own sequence positions
         cache = {"pos": jnp.asarray(self._pos, jnp.int32),
                  "segments": self._cache["segments"]}
-        logits, new_cache = self.model.decode_step(
-            self.params, jnp.asarray(tokens), cache
+        logits, new_cache = self._launch(
+            self.model.decode_step, self.params, jnp.asarray(tokens), cache
         )
         self._cache = {"segments": new_cache["segments"]}
         self._pos += 1

@@ -1,0 +1,120 @@
+"""Shared test configuration.
+
+Optional-dependency shim: the suite's property tests use `hypothesis` when it
+is installed.  On minimal containers without it, a deterministic mini
+implementation (seeded RNG, fixed example counts) is registered under the
+same module names, so the property tests still *run* — with less adversarial
+generation — instead of failing at collection.
+"""
+
+from __future__ import annotations
+
+
+import sys
+import types
+
+import numpy as np
+
+
+class _Unsatisfied(Exception):
+    """Raised by stub assume() to discard one generated example."""
+
+
+def _install_hypothesis_stub() -> None:
+    class Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise _Unsatisfied
+            return Strategy(draw)
+
+    def integers(min_value=0, max_value=100):
+        return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def booleans():
+        return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def sampled_from(seq):
+        pool = list(seq)
+        return Strategy(lambda rng: pool[int(rng.integers(0, len(pool)))])
+
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+        return Strategy(draw)
+
+    def tuples(*strats):
+        return Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied
+        return True
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            # NB: no functools.wraps — pytest must see a zero-arg signature,
+            # not the wrapped test's drawn parameters (they are not fixtures)
+            def wrapper():
+                max_examples = getattr(wrapper, "_stub_max_examples", 25)
+                rng = np.random.default_rng(0xC0FFEE)
+                ran = 0
+                for _ in range(max_examples * 4):
+                    if ran >= max_examples:
+                        break
+                    try:
+                        extra = [s.example(rng) for s in arg_strats]
+                        kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                        fn(*extra, **kw)
+                        ran += 1
+                    except _Unsatisfied:
+                        continue
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.is_hypothesis_stub = True
+            return wrapper
+        return deco
+
+    def settings(max_examples=25, deadline=None, **_kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    st = types.ModuleType("hypothesis.strategies")
+    for name, fn in (
+        ("integers", integers), ("booleans", booleans), ("floats", floats),
+        ("sampled_from", sampled_from), ("lists", lists), ("tuples", tuples),
+    ):
+        setattr(st, name, fn)
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:                      # pragma: no cover - env dependent
+    _install_hypothesis_stub()

@@ -31,7 +31,10 @@ def run_case(body: str) -> None:
     proc = subprocess.run(
         [sys.executable, "-c", COMMON + body],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        # JAX_PLATFORMS pins backend discovery: without it jax probes for
+        # TPU/GPU plugins for minutes on network-less CI containers
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"

@@ -1,0 +1,377 @@
+"""Deterministic tests for the async multi-queue HSA scheduler.
+
+Everything here runs on the virtual clock: no wall-clock sleeps, no threads,
+no flakes.  Durations come from a fixed cost model, so tests assert *exact*
+event orders and timestamps; determinism itself is asserted by replaying
+identical workloads and comparing full event logs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.kernels  # noqa: F401
+from repro.core import ledger as ledger_mod
+from repro.core.hsa import (
+    Queue,
+    Scheduler,
+    SchedulerDeadlock,
+    Signal,
+    VirtualClock,
+)
+from repro.core.ledger import OverheadLedger
+from repro.core.reconfig import RegionManager
+from repro.core.registry import GLOBAL_REGISTRY
+from repro.core.roles import Role, RoleLibrary
+
+COST = {"reconfig": 10.0, "exec": 1.0}
+
+
+def _cost_model(kind, what, measured):
+    return COST[kind]
+
+
+def _mk_role(lib, n, name=None):
+    impl = GLOBAL_REGISTRY.resolve("matmul", "any", ("xla",))
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return lib.add(Role(impl, (a, a), name=name or f"mm{n}"))
+
+
+def _mk_sched(num_regions=2, policy="round_robin", cost=_cost_model, seed=0):
+    led = OverheadLedger()
+    lib = RoleLibrary(ledger=led)
+    rm = RegionManager(num_regions, ledger=led)
+    sched = Scheduler(
+        rm, lib, ledger=led, clock=VirtualClock(), cost_model=cost,
+        policy=policy, seed=seed,
+    )
+    return sched, lib, rm, led
+
+
+def _x(n):
+    return jnp.ones((n, n))
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+# ---------------------------------------------------------------------------
+
+
+def test_virtual_clock_is_monotonic_and_sleep_free():
+    clk = VirtualClock()
+    assert clk.now() == 0.0
+    clk.advance(2.5)
+    clk.sleep(1.5)                    # an advance, not a wall wait
+    assert clk.now() == 4.0
+    clk.advance_to(3.0)               # never goes backwards
+    assert clk.now() == 4.0
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+# ---------------------------------------------------------------------------
+# interleaving semantics
+# ---------------------------------------------------------------------------
+
+
+def test_barrier_serializes_dependents_exact_order():
+    sched, lib, rm, led = _mk_sched()
+    r8, r16 = _mk_role(lib, 8), _mk_role(lib, 16)
+    qa = sched.add_queue(Queue(None, 64, name="A"))
+
+    p1 = qa.dispatch(r8.key, _x(8), _x(8))
+    p2 = qa.dispatch(r8.key, _x(8), _x(8))
+    bar = qa.barrier([p1.completion, p2.completion])
+    p3 = qa.dispatch(r16.key, _x(16), _x(16), deps=[bar.completion])
+    sched.run_until_idle()
+
+    briefs = [e.brief() for e in sched.event_log()]
+    assert briefs == [
+        ("reconfig_start", "A", "mm8"),
+        ("reconfig_end", "A", "mm8"),
+        ("exec_start", "A", str(r8.key)),
+        ("exec_end", "A", str(r8.key)),
+        ("exec_start", "A", str(r8.key)),
+        ("exec_end", "A", str(r8.key)),
+        ("barrier", "A", "and[2]"),
+        ("reconfig_start", "A", "mm16"),
+        ("reconfig_end", "A", "mm16"),
+        ("exec_start", "A", str(r16.key)),
+        ("exec_end", "A", str(r16.key)),
+    ]
+    # dependent kernel strictly after the barrier; barrier after both deps
+    bar_t = next(e.t for e in sched.event_log() if e.kind == "barrier")
+    first_p3 = next(e for e in sched.event_log() if e.what == str(r16.key))
+    assert bar_t == 12.0 and first_p3.t >= bar_t
+    assert p3.out.error is None
+    np.testing.assert_allclose(np.asarray(p3.out.value)[0, 0], 16.0)
+
+
+def test_independent_queue_progresses_during_reconfig_stall():
+    """While queue A's role loads (t=0..10), queue B's resident work runs."""
+    sched, lib, rm, led = _mk_sched()
+    ra, rb = _mk_role(lib, 8, "roleA"), _mk_role(lib, 16, "roleB")
+    rm.ensure_resident(rb)                        # B starts resident
+    qa = sched.add_queue(Queue(None, 64, name="A"))
+    qb = sched.add_queue(Queue(None, 64, name="B"))
+
+    qa.dispatch(ra.key, _x(8), _x(8))
+    for _ in range(3):
+        qb.dispatch(rb.key, _x(16), _x(16))
+    sched.run_until_idle()
+
+    log = sched.event_log()
+    a_reconfig = next(e for e in log if e.kind == "reconfig_start" and e.queue == "A")
+    a_exec = next(e for e in log if e.kind == "exec_start" and e.queue == "A")
+    b_execs = [e for e in log if e.kind == "exec_start" and e.queue == "B"]
+    # B's three kernels all launch inside A's stall window [0, 10)
+    assert a_reconfig.t == 0.0
+    assert [e.t for e in b_execs] == [0.0, 1.0, 2.0]
+    assert all(e.t < 10.0 for e in b_execs)
+    assert a_exec.t == 10.0                       # A resumes exactly at stall end
+    # stall accounting went to A only
+    assert sched.stats["A"].reconfig_s == 10.0
+    assert sched.stats["B"].reconfig_s == 0.0
+
+
+def test_sync_baseline_reconfig_blocks_device():
+    """overlap_reconfig=False: the same workload serializes, device idles."""
+    def build(overlap):
+        sched, lib, rm, led = _mk_sched()
+        sched.overlap_reconfig = overlap
+        ra, rb = _mk_role(lib, 8, "roleA"), _mk_role(lib, 16, "roleB")
+        rm.ensure_resident(rb)
+        qa = sched.add_queue(Queue(None, 64, name="A"))
+        qb = sched.add_queue(Queue(None, 64, name="B"))
+        qa.dispatch(ra.key, _x(8), _x(8))
+        for _ in range(3):
+            qb.dispatch(rb.key, _x(16), _x(16))
+        sched.run_until_idle()
+        return sched.timeline()
+
+    t_async, t_sync = build(True), build(False)
+    assert t_async["busy_s"] == t_sync["busy_s"] == 4.0
+    assert t_async["makespan_s"] < t_sync["makespan_s"]
+    assert t_async["idle_fraction"] < t_sync["idle_fraction"]
+
+
+def test_doorbell_wakeups_not_lost_on_reentrant_submit():
+    """Work submitted *during* another packet's execution is still picked up."""
+    sched, lib, rm, led = _mk_sched()
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    seen = []
+
+    def chained(depth):
+        seen.append(depth)
+        if depth < 5:
+            q.call(chained, depth + 1)          # submit from inside execution
+        return depth
+
+    q.call(chained, 0)
+    completed = sched.run_until_idle()
+    assert seen == [0, 1, 2, 3, 4, 5]
+    assert completed == 6
+    assert q.pending() == 0
+    assert q.doorbell.load() == 6                # every submit rang the doorbell
+
+
+def test_cross_queue_dependency_orders_execution():
+    sched, lib, rm, led = _mk_sched()
+    r8 = _mk_role(lib, 8)
+    qa = sched.add_queue(Queue(None, 64, name="A"))
+    qb = sched.add_queue(Queue(None, 64, name="B"))
+    pa = qa.dispatch(r8.key, _x(8), _x(8))
+    pb = qb.dispatch(r8.key, _x(8), _x(8), deps=[pa.completion])
+    sched.run_until_idle()
+    log = sched.event_log()
+    end_a = next(e for e in log if e.kind == "exec_end" and e.queue == "A")
+    start_b = next(e for e in log if e.kind == "exec_start" and e.queue == "B")
+    assert start_b.t >= end_a.t
+    assert pb.out.error is None
+
+
+def test_unsatisfiable_dependency_raises_deadlock():
+    sched, lib, rm, led = _mk_sched()
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    never = Signal(1, name="never")
+    q.barrier([never])
+    with pytest.raises(SchedulerDeadlock):
+        sched.run_until_idle()
+
+
+def test_weighted_policy_grants_proportional_slots():
+    sched, lib, rm, led = _mk_sched(policy="weighted")
+    q_hi = sched.add_queue(Queue(None, 64, name="hi", weight=2))
+    q_lo = sched.add_queue(Queue(None, 64, name="lo", weight=1))
+    for _ in range(4):
+        q_hi.call(lambda: 1)
+        q_hi.call(lambda: 1)
+        q_lo.call(lambda: 1)
+    sched.run_until_idle()
+    order = [e.queue for e in sched.event_log() if e.kind == "exec_start"]
+    assert order == ["hi", "hi", "lo"] * 4       # 2:1 grant pattern, exactly
+
+
+def test_event_log_deterministic_across_replays():
+    """Same seed + same workload => bit-identical event logs, 5 runs."""
+    def one_run():
+        sched, lib, rm, led = _mk_sched(policy="random", seed=123)
+        r8, r16, r32 = _mk_role(lib, 8), _mk_role(lib, 16), _mk_role(lib, 32)
+        qa = sched.add_queue(Queue(None, 64, name="A"))
+        qb = sched.add_queue(Queue(None, 64, name="B"))
+        for i in range(6):
+            qa.dispatch((r8 if i % 2 else r16).key,
+                        *( (_x(8), _x(8)) if i % 2 else (_x(16), _x(16)) ))
+            qb.dispatch(r32.key, _x(32), _x(32))
+        sched.run_until_idle()
+        return [(e.t, e.brief()) for e in sched.event_log()]
+
+    runs = [one_run() for _ in range(5)]
+    assert all(r == runs[0] for r in runs[1:])
+
+
+def test_per_queue_ledger_breakdown_attributed():
+    sched, lib, rm, led = _mk_sched()
+    r8, r16 = _mk_role(lib, 8), _mk_role(lib, 16)
+    qa = sched.add_queue(Queue(None, 64, name="A"))
+    qb = sched.add_queue(Queue(None, 64, name="B"))
+    qa.dispatch(r8.key, _x(8), _x(8))
+    qa.dispatch(r8.key, _x(8), _x(8))
+    qb.dispatch(r16.key, _x(16), _x(16))
+    sched.run_until_idle()
+
+    bd = led.queue_breakdown()
+    assert bd["A"][ledger_mod.DISPATCH].count == 2
+    assert bd["A"][ledger_mod.RECONFIG].count == 1    # second dispatch was a hit
+    assert bd["B"][ledger_mod.DISPATCH].count == 1
+    assert bd["B"][ledger_mod.RECONFIG].count == 1
+    assert bd["A"][ledger_mod.WAIT].count == 2
+    # scheduler-side report agrees on packet counts
+    rep = sched.queue_report()
+    assert rep["A"]["dispatched"] == 2 and rep["B"]["dispatched"] == 1
+
+
+def test_reconfig_failure_surfaces_in_packet():
+    """All regions pinned: the load can never succeed — the error must land in
+    the packet's result box, not execute the role outside region management."""
+    sched, lib, rm, led = _mk_sched(num_regions=1)
+    pinned, other = _mk_role(lib, 8, "pinned"), _mk_role(lib, 16, "other")
+    sched.regions.pin(pinned)
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    pkt = q.dispatch(other.key, _x(16), _x(16))
+    sched.run_until_idle()
+    assert isinstance(pkt.out.error, RuntimeError)
+    assert "pinned" in str(pkt.out.error)
+    assert pkt.completion.load() == 0                 # waiter is released
+    assert not sched.regions.is_resident(other.key)   # cap never violated
+    assert not other.resident
+
+
+def test_eviction_between_stall_and_exec_restalls_with_accounting():
+    """If the just-loaded role is evicted again before the packet executes
+    (another tenant thrashing the regions), the packet re-stalls with proper
+    reconfig events instead of reloading invisibly at exec time."""
+    sched, lib, rm, led = _mk_sched(num_regions=1)
+    r8 = _mk_role(lib, 8)
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    pkt = q.dispatch(r8.key, _x(8), _x(8))
+
+    ev = sched.step()                              # begins the first stall
+    assert ev.kind == "reconfig_start"
+    rm.flush()                                     # foreign eviction mid-flight
+    sched.run_until_idle()
+
+    starts = [e for e in sched.event_log() if e.kind == "reconfig_start"]
+    assert len(starts) == 2                        # stall happened twice, visibly
+    assert pkt.out.error is None
+    np.testing.assert_allclose(np.asarray(pkt.out.value)[0, 0], 8.0)
+    assert sched.stats["A"].reconfigs == 2
+    assert led.stat(ledger_mod.RECONFIG).count == 2
+
+
+def test_errors_surface_without_killing_the_loop():
+    sched, lib, rm, led = _mk_sched()
+    r8 = _mk_role(lib, 8)
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    bad = q.dispatch(r8.key, _x(4), _x(4))       # wrong shapes
+    good = q.dispatch(r8.key, _x(8), _x(8))
+    sched.run_until_idle()
+    assert bad.out.error is not None
+    assert good.out.error is None
+    assert good.completion.load() == 0
+    np.testing.assert_allclose(np.asarray(good.out.value)[0, 0], 8.0)
+
+
+# ---------------------------------------------------------------------------
+# RegionManager LRU properties, driven through the scheduler on a virtual clock
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    budget=st.integers(min_value=1, max_value=4),
+    seq=st.lists(st.integers(min_value=0, max_value=5), min_size=1, max_size=40),
+)
+def test_property_scheduler_lru_matches_reference_model(budget, seq):
+    """Dispatching a random role sequence through the scheduler reproduces a
+    textbook LRU: hits/misses/evictions and final residency order."""
+    from collections import OrderedDict
+
+    sched, lib, rm0, led = _mk_sched(num_regions=budget)
+    sizes = [8, 16, 24, 32, 40, 48]
+    roles = [_mk_role(lib, sizes[i], f"r{i}") for i in range(6)]
+    q = sched.add_queue(Queue(None, 2048, name="A"))
+
+    for i in seq:
+        n = sizes[i]
+        q.dispatch(roles[i].key, _x(n), _x(n))
+    sched.run_until_idle()
+
+    # reference LRU
+    model: OrderedDict = OrderedDict()
+    hits = misses = evictions = 0
+    for i in seq:
+        k = roles[i].key
+        if k in model:
+            hits += 1
+            model.move_to_end(k)
+        else:
+            misses += 1
+            if len(model) >= budget:
+                model.popitem(last=False)
+                evictions += 1
+            model[k] = None
+        assert len(model) <= budget
+
+    assert sched.regions.stats.hits == hits
+    assert sched.regions.stats.misses == misses
+    assert sched.regions.stats.evictions == evictions
+    assert sched.regions.resident_keys() == list(model.keys())
+    lookups = sched.regions.stats.lookups
+    assert lookups == len(seq)
+    assert sched.regions.stats.hit_rate == (hits / lookups if lookups else 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seq=st.lists(st.integers(min_value=0, max_value=3), min_size=1, max_size=30),
+)
+def test_property_pinned_roles_never_evicted_under_load(seq):
+    sched, lib, rm0, led = _mk_sched(num_regions=2)
+    sizes = [8, 16, 24, 32]
+    roles = [_mk_role(lib, sizes[i], f"r{i}") for i in range(4)]
+    pinned = roles[0]
+    sched.regions.pin(pinned)
+    q = sched.add_queue(Queue(None, 2048, name="A"))
+
+    for i in seq:
+        n = sizes[i]
+        q.dispatch(roles[i].key, _x(n), _x(n))
+    sched.run_until_idle()
+
+    assert sched.regions.is_resident(pinned.key)
+    assert pinned.resident
+    assert len(sched.regions) <= 2

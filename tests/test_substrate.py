@@ -275,6 +275,51 @@ def test_engine_matches_manual_decode():
     assert req.generated == toks
 
 
+def test_engine_decode_via_hsa_queue_matches_direct():
+    """Routing decode launches through the async HSA scheduler (paper
+    multi-tenancy path) must not change generations — even with an
+    OpenCL-style background producer sharing the device."""
+    import repro.kernels  # noqa: F401
+    from repro.core.hsa import Queue, Scheduler, VirtualClock
+    from repro.core.ledger import OverheadLedger
+    from repro.core.reconfig import RegionManager
+    from repro.core.registry import GLOBAL_REGISTRY
+    from repro.core.roles import Role, RoleLibrary
+
+    cfg, model, params = _engine_model()
+    prompt = [3, 14, 15, 92]
+
+    direct = ServeEngine(model, params, batch_slots=2, max_len=32)
+    direct.submit(prompt, max_new_tokens=5)
+    (want,) = direct.run_to_completion()
+
+    led = OverheadLedger()
+    lib = RoleLibrary(ledger=led)
+    regions = RegionManager(2, ledger=led)
+    sched = Scheduler(regions, lib, ledger=led, clock=VirtualClock())
+    q_serve = sched.add_queue(Queue(None, 256, name="serve"))
+    q_bg = sched.add_queue(Queue(None, 256, name="opencl"))
+
+    # background tenant: a role cycling through the regions
+    impl = GLOBAL_REGISTRY.resolve("matmul", "any", ("xla",))
+    a = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    r = lib.add(Role(impl, (a, a), name="bg"))
+    for _ in range(4):
+        q_bg.dispatch(r.key, jnp.ones((8, 8)), jnp.ones((8, 8)), producer="opencl")
+
+    routed = ServeEngine(model, params, batch_slots=2, max_len=32,
+                         hsa_queue=q_serve, hsa_scheduler=sched)
+    routed.submit(prompt, max_new_tokens=5)
+    (got,) = routed.run_to_completion()
+    sched.run_until_idle()          # finish the background tenant's leftovers
+
+    assert got.generated == want.generated
+    rep = sched.queue_report()
+    assert rep["serve"]["dispatched"] >= 5       # prefill + decode steps
+    assert rep["opencl"]["dispatched"] == 4
+    assert led.queue_breakdown()["serve"]["wait"].count >= 5
+
+
 def test_engine_continuous_batching_isolation():
     """Requests admitted at different times produce the same generations as
     they would alone (per-slot positions = continuous batching correctness)."""
