@@ -73,6 +73,25 @@ def make_paper_roles(lib: RoleLibrary):
     return roles
 
 
+def calibrate_costs(roles) -> dict[tuple[str, str], float]:
+    """Measure one real load + exec per role; the measured seconds drive the
+    virtual timeline of the scheduling benchmarks (table4/table5)."""
+    import time
+
+    costs: dict[tuple[str, str], float] = {}
+    for name, (role, args) in roles.items():
+        role.synthesize()
+        t0 = time.perf_counter()
+        exe = role.load()
+        costs[("reconfig", role.name)] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = exe(*args)
+        jnp.asarray(out).block_until_ready()
+        costs[("exec", role.name)] = time.perf_counter() - t0
+        role.unload()
+    return costs
+
+
 def pallas_footprints():
     """Per-role VMEM/MXU claims of the Pallas (TPU-target) implementations."""
     return {

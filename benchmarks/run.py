@@ -1,16 +1,48 @@
 """Benchmark harness: one function per paper table.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Run with
-``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+``PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]``.
+
+``--json PATH`` additionally writes the rows as machine-readable JSON
+(schema 1: ``{"schema": 1, "fast": bool, "rows": [{"table", "metric",
+"value", "derived"}]}``) so CI can smoke-test the perf trajectory and
+downstream tooling can diff runs without re-parsing CSV.
 """
 
 from __future__ import annotations
 
+import json
 import sys
 
+JSON_SCHEMA = 1
 
-def main() -> None:
-    fast = "--fast" in sys.argv
+
+def parse_row(row: str) -> dict:
+    """Split one ``table,metric,value,derived`` CSV row; the derived field may
+    itself contain commas (it is everything after the third)."""
+    parts = row.split(",", 3)
+    table, metric = parts[0], parts[1] if len(parts) > 1 else ""
+    try:
+        value: float | None = float(parts[2]) if len(parts) > 2 else None
+    except ValueError:
+        value = None
+    return {
+        "table": table,
+        "metric": metric,
+        "value": value,
+        "derived": parts[3] if len(parts) > 3 else "",
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    fast = "--fast" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            raise SystemExit("--json requires a path argument")
+        json_path = argv[i + 1]
     n = 100 if fast else 1000
 
     from benchmarks import (
@@ -18,17 +50,34 @@ def main() -> None:
         table2_overhead,
         table3_efficiency,
         table4_multitenancy,
+        table5_prefetch,
     )
 
-    print("name,us_per_call,derived")
-    for row in table1_utilization.run():
-        print(row)
-    for row in table2_overhead.run(n=n):
-        print(row)
-    for row in table3_efficiency.run(n=n):
-        print(row)
-    for row in table4_multitenancy.run(n=min(n, 128)):
-        print(row)
+    suites = (
+        (table1_utilization.run, {}),
+        (table2_overhead.run, {"n": n}),
+        (table3_efficiency.run, {"n": n}),
+        (table4_multitenancy.run, {"n": min(n, 128)}),
+        (table5_prefetch.run, {"n": min(n, 64)}),
+    )
+    print("name,us_per_call,derived", flush=True)
+    rows: list[str] = []
+    for fn, kw in suites:          # stream per table: slow != wedged
+        table_rows = fn(**kw)
+        for row in table_rows:
+            print(row)
+        sys.stdout.flush()
+        rows += table_rows
+
+    if json_path is not None:
+        payload = {
+            "schema": JSON_SCHEMA,
+            "fast": fast,
+            "rows": [parse_row(r) for r in rows],
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {len(payload['rows'])} rows to {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -19,9 +19,7 @@ overhead ledger's queue breakdown.
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from benchmarks.common import make_paper_roles
+from benchmarks.common import calibrate_costs, make_paper_roles
 from repro.core import ledger as L
 from repro.core.hsa.clock import VirtualClock
 from repro.core.hsa.queue import Queue
@@ -32,24 +30,6 @@ from repro.core.roles import RoleLibrary
 
 # producer-cycle roles: 4 roles through 2 regions -> reconfig on every packet
 BG_ORDER = ("role3_conv5x5", "role4_conv3x3", "role1_fc", "role3_conv5x5")
-
-
-def _calibrate(lib: RoleLibrary, roles) -> dict[tuple[str, str], float]:
-    """Measure one real load + exec per role; these drive the virtual timeline."""
-    import time
-
-    costs: dict[tuple[str, str], float] = {}
-    for name, (role, args) in roles.items():
-        role.synthesize()
-        t0 = time.perf_counter()
-        exe = role.load()
-        costs[("reconfig", role.name)] = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        out = exe(*args)
-        jnp.asarray(out).block_until_ready()
-        costs[("exec", role.name)] = time.perf_counter() - t0
-        role.unload()
-    return costs
 
 
 def _decode_workload(engine_steps: int):
@@ -122,7 +102,7 @@ def run(n: int = 64) -> list[str]:
     probe_ledger = OverheadLedger()
     probe_lib = RoleLibrary(ledger=probe_ledger)
     roles = make_paper_roles(probe_lib)
-    costs = _calibrate(probe_lib, roles)
+    costs = calibrate_costs(roles)
 
     engine_steps = max(4, min(16, n // 8))
     sync_sched, _ = _run_schedule(

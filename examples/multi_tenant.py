@@ -41,7 +41,7 @@ def _mk_roles(lib: RoleLibrary):
     return roles
 
 
-def main() -> None:
+def _run(lookahead: int) -> Scheduler:
     ledger = OverheadLedger()
     lib = RoleLibrary(ledger=ledger)
     roles = _mk_roles(lib)
@@ -53,6 +53,7 @@ def main() -> None:
     sched = Scheduler(
         regions, lib, ledger=ledger, clock=VirtualClock(),
         cost_model=lambda kind, what, measured: cost[kind],
+        lookahead=lookahead,
     )
     q_tf = sched.add_queue(Queue(None, 256, name="tf-serving"))
     q_cl = sched.add_queue(Queue(None, 256, name="opencl"))
@@ -67,7 +68,11 @@ def main() -> None:
                       *(c5_args if step % 2 == 0 else c3_args), producer="opencl")
 
     sched.run_until_idle()
+    return sched
 
+
+def main() -> None:
+    sched = _run(lookahead=0)
     print("event log (virtual ms):")
     for ev in sched.event_log():
         print(f"  {ev.t*1e3:8.2f}  {ev.kind:15s} {ev.queue:11s} {ev.what}")
@@ -80,6 +85,15 @@ def main() -> None:
               f"wait {rep['wait_s']*1e3:6.1f} ms   "
               f"reconfig {rep['reconfig_s']*1e3:6.1f} ms   "
               f"({int(rep['dispatched'])} packets)")
+
+    # same workload with the reconfiguration-prefetch pipeline: conv loads
+    # start while the opencl queue is still stalled on the previous one
+    ahead = _run(lookahead=4)
+    print(f"\nlookahead=4: exposed reconfig "
+          f"{ahead.exposed_reconfig_s()*1e3:.1f} ms "
+          f"(reactive {sched.exposed_reconfig_s()*1e3:.1f} ms); "
+          f"prefetch events: "
+          f"{sum(1 for e in ahead.event_log() if e.kind.startswith('prefetch'))}")
 
 
 if __name__ == "__main__":

@@ -76,6 +76,16 @@ def main():
 
     print(f"served {len(done)} requests alongside {frames} conv frames "
           f"on one agent")
+    # prompt bucketing: power-of-two padded prefill lengths hit the jit cache
+    distinct = len({len(p) for p in prompts})
+    unbucketed = ServeEngine(model, params, batch_slots=4, max_len=96,
+                             bucket_prompts=False)
+    for p in prompts:
+        unbucketed.submit(p, max_new_tokens=1)
+    unbucketed.run_to_completion()
+    print(f"prefill traces: {engine.prefill_traces} bucketed vs "
+          f"{unbucketed.prefill_traces} unbucketed "
+          f"({distinct} distinct prompt lengths)")
     for req in sorted(done, key=lambda r: r.uid):
         print(f"  req {req.uid}: prompt={list(req.prompt)} -> "
               f"generated={req.generated}")

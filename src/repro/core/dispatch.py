@@ -29,11 +29,26 @@ class DispatchContext:
     registry: KernelRegistry = GLOBAL_REGISTRY
     interpret: bool = False          # forwarded to pallas impls (CPU validation)
     trace: "DispatchTrace | None" = None
+    # resolution memo: device_kind/prefer/registry are frozen per context, so
+    # (op, specialization) fully determines the resolved impl — hot trace
+    # loops (one dispatch.op per layer per step) stop re-walking the
+    # preference order.  Entries carry the registry version so a late
+    # registration invalidates them.
+    _resolve_cache: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False, hash=False
+    )
 
     def resolve(self, op: str, *, specialization: str | None = None) -> KernelImpl:
-        return self.registry.resolve(
+        key = (op, specialization)
+        version = self.registry.version
+        hit = self._resolve_cache.get(key)
+        if hit is not None and hit[0] == version:
+            return hit[1]
+        impl = self.registry.resolve(
             op, self.device_kind, self.prefer, specialization=specialization
         )
+        self._resolve_cache[key] = (version, impl)
+        return impl
 
 
 class DispatchTrace:

@@ -177,6 +177,17 @@ class Queue:
                 return None
             return self._ring[self._read % self.size]
 
+    def peek_window(self, n: int) -> list[Packet]:
+        """First ``n`` packets without consuming them — the scheduler's
+        lookahead window for reconfiguration prefetch.  Like ``peek`` this
+        never reorders: in-order queues expose, not skip, their future."""
+        with self._lock:
+            depth = min(n, self._write - self._read)
+            return [
+                self._ring[(self._read + i) % self.size]  # type: ignore[misc]
+                for i in range(max(0, depth))
+            ]
+
     def pop(self) -> Packet | None:
         with self._lock:
             if self._read >= self._write:

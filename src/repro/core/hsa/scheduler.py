@@ -16,8 +16,20 @@ scheduler is that sharing layer:
     executing while another queue's region loads.  ``overlap_reconfig=False``
     recovers the synchronous baseline where reconfiguration occupies the
     device — the comparison benchmarks/table4 measures.
+  - **Lookahead reconfiguration prefetch** (``lookahead=N``): whenever a
+    queue is blocked (stalled on a load, or its head waits on dependency
+    signals), the scheduler scans that queue's next N packets and issues
+    speculative loads on the reconfiguration engine for roles that would
+    miss — by the time the packet is granted its region is hot (ICAP
+    pipelining).  A demand miss that finds its role already in flight *joins*
+    the prefetch instead of double-loading; the victim search skips roles
+    referenced inside any lookahead window (an approximate Bélády oracle read
+    straight off the queues).  ``lookahead=0`` recovers the purely reactive
+    PR-1 scheduler; benchmarks/table5 sweeps the depth.
   - Per-queue wait / exec / reconfig time lands in the overhead ledger
-    (``queue=`` meta → ``OverheadLedger.queue_breakdown()``).
+    (``queue=`` meta → ``OverheadLedger.queue_breakdown()``), with
+    reconfiguration split into *exposed* (queue sat stalled) and *hidden*
+    (overlapped by prefetch) — paper Table II row 2, prefetch-refined.
 
 Determinism: the scheduler takes an injectable clock.  With a
 :class:`~repro.core.hsa.clock.VirtualClock` the whole schedule is a
@@ -44,6 +56,7 @@ from repro.core import ledger as ledger_mod
 from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
 from repro.core.hsa.clock import Clock, VirtualClock, WallClock
 from repro.core.hsa.queue import BarrierAndPacket, KernelDispatchPacket, Packet, Queue
+from repro.core.policy import PrefetchPolicy
 from repro.core.reconfig import RegionManager
 from repro.core.roles import RoleLibrary
 
@@ -62,7 +75,8 @@ class SchedEvent:
     """One entry of the deterministic event log."""
 
     t: float
-    kind: str  # exec_start | exec_end | reconfig_start | reconfig_end | barrier | error
+    kind: str  # exec_start | exec_end | reconfig_start | reconfig_end |
+    #            prefetch_start | prefetch_end | prefetch_hit | barrier | error
     queue: str
     what: str
     seq: int = 0
@@ -75,10 +89,13 @@ class SchedEvent:
 class QueueStats:
     wait_s: float = 0.0
     exec_s: float = 0.0
-    reconfig_s: float = 0.0
+    reconfig_s: float = 0.0           # exposed: time this queue sat stalled
+    reconfig_hidden_s: float = 0.0    # prefetched load time hidden behind compute
     dispatched: int = 0
     barriers: int = 0
     reconfigs: int = 0
+    prefetches: int = 0               # speculative loads issued for this queue
+    prefetch_hits: int = 0            # packets that found their role prefetched
 
 
 @dataclasses.dataclass
@@ -90,6 +107,25 @@ class _Stall:
     end_t: float                      # virtual end (cooperative) / inf (threaded)
     future: Future | None = None      # threaded mode only
     error: BaseException | None = None  # load failed: fail the head packet at retire
+    role_key: Any = None
+    joined: bool = False              # riding an in-flight prefetch, not a load
+    exposed_s: float = 0.0            # joined stalls: residual wait past compute
+
+
+@dataclasses.dataclass
+class _Prefetch:
+    """A speculative region load in flight on the reconfiguration engine."""
+
+    role: Any
+    role_key: Any
+    queue: str                        # beneficiary queue (whose window demanded it)
+    start_t: float
+    end_t: float                      # virtual end (cooperative) / inf (threaded)
+    future: Future | None = None
+    error: BaseException | None = None
+    started: bool = True              # begin_prefetch actually took a region
+    joined: bool = False              # a demand miss is riding this load
+    exposed_s: float = 0.0            # residual stall time claimed by joiners
 
 
 def _default_cost(kind: str, what: str, measured_s: float) -> float:
@@ -111,6 +147,7 @@ class Scheduler:
         seed: int = 0,
         cost_model: Callable[[str, str, float], float] | None = None,
         overlap_reconfig: bool = True,
+        lookahead: "PrefetchPolicy | int" = 0,
         keep_events: int = 100_000,
     ) -> None:
         if policy not in POLICIES:
@@ -125,6 +162,7 @@ class Scheduler:
         self.policy = policy
         self.cost_model = cost_model or _default_cost
         self.overlap_reconfig = overlap_reconfig
+        self.lookahead = PrefetchPolicy.of(lookahead).lookahead
         self.keep_events = keep_events
 
         self.queues: list[Queue] = []
@@ -136,6 +174,7 @@ class Scheduler:
         self._grant_order: list[int] = []
         self._grant_ptr = 0
         self._stalls: dict[str, _Stall] = {}       # queue name -> reconfig in flight
+        self._prefetches: dict[Any, _Prefetch] = {}  # role key -> speculative load
         self._seq = 0
         self._t0 = self.clock.now()
         self._compute_free_t = self._t0
@@ -223,22 +262,46 @@ class Scheduler:
         if n == 0:
             return None
 
-        # retire finished stalls first so their queues become eligible
+        # retire finished prefetches before stalls: a joined stall's packet
+        # must find its role resident when the grant loop re-reaches it
+        self._retire_prefetches(now)
+
+        # retire finished stalls so their queues become eligible
         for qname, stall in list(self._stalls.items()):
             if stall.future is not None:
                 if not stall.future.done():
                     continue
                 end = self.clock.now()
-                _, stall.error = stall.future.result()
+                stall.error = stall.future.result()[1]
             elif stall.end_t <= now:
                 end = stall.end_t
             else:
                 continue
             del self._stalls[qname]
             st = self.stats[qname]
-            st.reconfigs += 1
-            st.reconfig_s += end - stall.start_t
-            self._log(end, "reconfig_end", qname, stall.role_name)
+            if stall.joined:
+                # riding a prefetch: only the residual wait past compute
+                # availability is exposed; the load itself retires with the
+                # prefetch (reconfig_hidden).  No reconfig_end — the paired
+                # prefetch_end marks the load's completion on the timeline.
+                exposed = (
+                    stall.exposed_s if stall.future is None
+                    else max(0.0, end - stall.start_t)
+                )
+                st.reconfig_s += exposed
+                if exposed > 0.0:
+                    self.ledger.record(
+                        ledger_mod.RECONFIG_EXPOSED, exposed, queue=qname,
+                        role=stall.role_name, joined=True,
+                    )
+            else:
+                st.reconfigs += 1
+                st.reconfig_s += end - stall.start_t
+                self.ledger.record(
+                    ledger_mod.RECONFIG_EXPOSED, end - stall.start_t,
+                    queue=qname, role=stall.role_name,
+                )
+                self._log(end, "reconfig_end", qname, stall.role_name)
             if stall.error is not None:
                 # the load can never succeed (e.g. all regions pinned):
                 # surface it to the waiter instead of re-stalling forever
@@ -246,6 +309,14 @@ class Scheduler:
                 pkt = q.peek()
                 if isinstance(pkt, KernelDispatchPacket):
                     return self._fail(q, pkt, stall.error, end)
+
+        # speculate for blocked queues before granting: a prefetch issued at
+        # the same virtual instant never delays this step's grants, and the
+        # reconfiguration engine ordering still favors demand because flowing
+        # queues contribute no candidates
+        ev = self._issue_prefetches(now)
+        if ev is not None:
+            return ev
 
         order = self._grant_order
         width = len(order)
@@ -268,15 +339,20 @@ class Scheduler:
                 self._grant_ptr = (gi + 1) % width
             return self._process(q, pkt, now)
 
-        # nothing ready now: on a virtual clock, jump to the next stall retire
-        if self._virtual and self._stalls:
-            target = min(s.end_t for s in self._stalls.values())
+        # nothing ready now: on a virtual clock, jump to the next retire
+        # (stall or in-flight prefetch, whichever completes first)
+        if self._virtual and (self._stalls or self._prefetches):
+            target = min(
+                [s.end_t for s in self._stalls.values()]
+                + [p.end_t for p in self._prefetches.values()]
+            )
             self.clock.advance_to(target)
             return self._step_locked()
 
         if (
             self._virtual
             and not self._stalls
+            and not self._prefetches
             and any(q.pending() for q in self.queues)
         ):
             # on the virtual clock every producer has already run: a non-ready
@@ -291,6 +367,202 @@ class Scheduler:
                 "(dependency signal never reaches 0)"
             )
         return None
+
+    # -- reconfiguration prefetch (the lookahead pipeline) -----------------------
+
+    def _scan_windows(self) -> tuple[dict, list]:
+        """One pass over the stalls and every queue's lookahead window.
+
+        Returns ``(ranks, candidates)``: roles demanded by in-flight stalls
+        (rank -1) or queued packets, ranked by first-use distance (lower =
+        sooner) — the victim search avoids these, and when it can't, evicts
+        the one needed furthest in the future (approximate Bélády, the future
+        read straight off the queues) — plus the ``(queue, role_key)``
+        prefetch candidates from *blocked* queues (stalled, or head waiting
+        on dependency signals; a stalled head itself is excluded — its stall
+        already owns the load)."""
+        ranks: dict = {
+            s.role_key: -1 for s in self._stalls.values() if s.role_key is not None
+        }
+        candidates: list[tuple[Queue, Any]] = []
+        if self.lookahead > 0:
+            for q in self.queues:
+                pkts = q.peek_window(self.lookahead + 1)
+                if not pkts:
+                    continue
+                stalled = q.name in self._stalls
+                blocked = stalled or not self._deps_zero(pkts[0].deps)
+                for i, pkt in enumerate(pkts):
+                    rk = getattr(pkt, "role_key", None)
+                    if rk is None:
+                        continue
+                    if ranks.get(rk, i + 1) > i:
+                        ranks[rk] = i
+                    if blocked and not (i == 0 and stalled):
+                        candidates.append((q, rk))
+        return ranks, candidates
+
+    def _protected_keys(self) -> dict:
+        return self._scan_windows()[0]
+
+    def _issue_prefetches(self, now: float) -> SchedEvent | None:
+        """Issue at most one speculative load for a blocked queue's window.
+
+        Only queues that cannot grant right now (stalled, or head waiting on
+        dependency signals) contribute candidates: a flowing queue's next miss
+        is imminent demand, and speculation must not steal the reconfiguration
+        engine from it.  In-flight speculation is capped strictly below the
+        region count so a demand miss always finds an evictable slot (a
+        single-region device therefore never speculates).  The synchronous
+        baseline (``overlap_reconfig=False``) models a device with no
+        separate reconfiguration engine, so it never prefetches either.
+        """
+        la = self.lookahead
+        if la <= 0 or not self.queues or not self.overlap_reconfig:
+            return None
+        # the cap counts pinned slots too: slots that are pinned or mid-load
+        # can never be eviction victims, so leaving one evictable slot for
+        # demand requires in-flight < regions - pinned - 1
+        cap = self.regions.num_regions - self.regions.pinned_count - 1
+        if len(self._prefetches) >= cap:
+            return None
+        stalled_keys = {
+            s.role_key for s in self._stalls.values() if s.role_key is not None
+        }
+        protect, candidates = self._scan_windows()
+
+        for q, key in candidates:
+            if key in self._prefetches or key in stalled_keys:
+                continue
+            if self.regions.is_resident(key) or self.regions.is_prefetching(key):
+                continue
+            try:
+                role = self.library.get(key)
+            except KeyError:
+                continue                       # demand path surfaces unknown roles
+            start = max(now, self._reconfig_free_t)
+            if self._reconfig_pool is not None and not self._virtual:
+                fut = self._reconfig_pool.submit(
+                    self._do_prefetch, role, q.name, protect, protect.get(key)
+                )
+                self._prefetches[key] = _Prefetch(
+                    role=role, role_key=key, queue=q.name,
+                    start_t=start, end_t=float("inf"), future=fut,
+                )
+                self.stats[q.name].prefetches += 1
+                return self._log(start, "prefetch_start", q.name, role.name)
+            try:
+                res = self.regions.begin_prefetch(
+                    role, queue=q.name, protect=protect,
+                    target_rank=protect.get(key),
+                )
+            except RuntimeError:
+                continue    # structural (all pinned): the demand path fails it
+            if res is None:
+                continue    # no evictable region right now: best effort only
+            dur = self.cost_model("reconfig", role.name, res.reconfig_s)
+            end = start + dur
+            self._reconfig_free_t = end
+            self._prefetches[key] = _Prefetch(
+                role=role, role_key=key, queue=q.name, start_t=start, end_t=end,
+            )
+            self.stats[q.name].prefetches += 1
+            return self._log(start, "prefetch_start", q.name, role.name)
+        return None
+
+    def _do_prefetch(
+        self, role: Any, qname: str, protect: dict, target_rank: int | None = None
+    ) -> tuple[float, BaseException | None, bool]:
+        """Threaded speculative load; (measured seconds, error, started)."""
+        try:
+            res = self.regions.begin_prefetch(
+                role, queue=qname, protect=protect, target_rank=target_rank
+            )
+            if res is None:
+                return 0.0, None, False
+            return res.reconfig_s, None, True
+        except BaseException as e:
+            return 0.0, e, False
+
+    def _retire_prefetches(self, now: float) -> None:
+        for key, pf in list(self._prefetches.items()):
+            if pf.future is not None:
+                if not pf.future.done():
+                    continue
+                end = self.clock.now()
+                _, pf.error, pf.started = pf.future.result()
+            elif pf.end_t <= now:
+                end = pf.end_t
+            else:
+                continue
+            del self._prefetches[key]
+            self._finish_prefetch(pf, end)
+
+    def _finish_prefetch(self, pf: _Prefetch, end: float) -> None:
+        st = self.stats.get(pf.queue)
+        if pf.error is not None:
+            self.regions.abort_prefetch(pf.role_key)
+            self._log(end, "prefetch_end", pf.queue, f"{pf.role.name}!error")
+            return
+        if not pf.started:
+            if st is not None:
+                st.prefetches -= 1         # the worker declined: never issued
+            self._log(end, "prefetch_end", pf.queue, f"{pf.role.name}!skipped")
+            return
+        if not self.regions.complete_prefetch(pf.role_key, fresh=not pf.joined):
+            # the in-flight entry was flushed meanwhile: the load produced no
+            # resident role, so there is no hidden time to credit (flush
+            # already counted it as wasted)
+            self._log(end, "prefetch_end", pf.queue, f"{pf.role.name}!flushed")
+            return
+        if pf.future is not None:
+            # threaded joins can't precompute their exposure (the load's end
+            # is unknown at join time): claim it now from the live joined
+            # stalls so the overlap window isn't double-counted as both
+            # exposed and hidden
+            for stall in self._stalls.values():
+                if stall.joined and stall.role_key == pf.role_key:
+                    pf.exposed_s = max(pf.exposed_s, end - stall.start_t)
+        hidden = max(0.0, (end - pf.start_t) - pf.exposed_s)
+        self.ledger.record(
+            ledger_mod.RECONFIG_HIDDEN, hidden, queue=pf.queue, role=pf.role.name,
+        )
+        if st is not None:
+            st.reconfig_hidden_s += hidden
+        self._log(end, "prefetch_end", pf.queue, pf.role.name)
+
+    def _join_prefetch(
+        self, q: Queue, pkt: KernelDispatchPacket, role: Any, pf: _Prefetch,
+        now: float,
+    ) -> SchedEvent:
+        """A demand miss found its role already in flight: ride the prefetch
+        instead of double-loading (the lookahead pipeline's payoff)."""
+        pkt._reconfigured = True
+        self.stats[q.name].prefetch_hits += 1
+        start = max(now, self._deps_time(pkt.deps, now))
+        if pf.future is None and pf.end_t <= max(start, self._compute_free_t):
+            # load finishes before this packet could execute anyway: fully
+            # hidden.  Retire the prefetch (its end is in the causal past)
+            # and execute without stalling the queue.  First-touch accounting
+            # in the exec path counts the prefetch hit.
+            del self._prefetches[role.key]
+            self._finish_prefetch(pf, pf.end_t)
+            self._log(start, "prefetch_hit", q.name, role.name)
+            return self._exec(q, pkt, role, now)
+        pf.joined = True
+        self.regions.note_prefetch_join(role.key)
+        exposed = (
+            max(0.0, pf.end_t - max(start, self._compute_free_t))
+            if pf.future is None else 0.0
+        )
+        # every joiner's exposure window ends at pf.end_t, so overlapping
+        # joins nest: the union (max), not the sum, is what the load hid
+        pf.exposed_s = max(pf.exposed_s, exposed)
+        self._stalls[q.name] = _Stall(
+            role.name, start, pf.end_t, future=pf.future, role_key=role.key,
+            joined=True, exposed_s=exposed,
+        )
+        return self._log(start, "prefetch_hit", q.name, role.name)
 
     # -- packet processing -------------------------------------------------------
 
@@ -312,6 +584,9 @@ class Scheduler:
             except KeyError as e:
                 return self._fail(q, pkt, e, now)
             if not self.regions.is_resident(role.key):
+                pf = self._prefetches.get(role.key)
+                if pf is not None and pf.error is None:
+                    return self._join_prefetch(q, pkt, role, pf, now)
                 # not resident — even if a prior stall loaded it and another
                 # tenant evicted it since: stall (again) with full accounting
                 # rather than reloading invisibly at exec time
@@ -337,29 +612,36 @@ class Scheduler:
         # deps gate the grant in *virtual* time too: eligibility is checked on
         # live signal state, which runs ahead of the simulated timeline
         start = max(now, engine_free, self._deps_time(pkt.deps, now))
+        protect = self._protected_keys()
 
         if self._reconfig_pool is not None and not self._virtual:
-            fut = self._reconfig_pool.submit(self._do_reconfig, role, q.name)
-            self._stalls[q.name] = _Stall(role.name, start, float("inf"), future=fut)
+            fut = self._reconfig_pool.submit(self._do_reconfig, role, q.name, protect)
+            self._stalls[q.name] = _Stall(
+                role.name, start, float("inf"), future=fut, role_key=role.key,
+            )
             return self._log(start, "reconfig_start", q.name, role.name)
 
-        measured, err = self._do_reconfig(role, q.name)
+        measured, err, _ = self._do_reconfig(role, q.name, protect)
         dur = self.cost_model("reconfig", role.name, measured)
         end = start + dur
         if self.overlap_reconfig:
             self._reconfig_free_t = end
         else:
             self._compute_free_t = end        # sync baseline: device does the load
-        self._stalls[q.name] = _Stall(role.name, start, end, error=err)
+        self._stalls[q.name] = _Stall(
+            role.name, start, end, error=err, role_key=role.key,
+        )
         return self._log(start, "reconfig_start", q.name, role.name)
 
-    def _do_reconfig(self, role: Any, qname: str) -> tuple[float, BaseException | None]:
-        """Load the role; returns (measured seconds, error-or-None)."""
+    def _do_reconfig(
+        self, role: Any, qname: str, protect: dict | frozenset = frozenset()
+    ) -> tuple[float, BaseException | None, bool]:
+        """Load the role; returns (measured seconds, error-or-None, started)."""
         try:
-            res = self.regions.ensure_resident(role, queue=qname)
-            return res.reconfig_s, None
+            res = self.regions.ensure_resident(role, queue=qname, protect=protect)
+            return res.reconfig_s, None, True
         except BaseException as e:
-            return 0.0, e
+            return 0.0, e, False
 
     def _exec(self, q: Queue, pkt: KernelDispatchPacket, role: Any,
               now: float) -> SchedEvent:
@@ -382,9 +664,15 @@ class Scheduler:
                     # was evicted meanwhile (or its reconfig failed), re-load
                     # properly instead of executing outside region management
                     if not self.regions.touch(role.key):
-                        self.regions.ensure_resident(role, queue=q.name)
+                        # lazy protect: the window scan only runs if this
+                        # lookup actually misses and must evict
+                        self.regions.ensure_resident(
+                            role, queue=q.name, protect=self._protected_keys
+                        )
                 else:
-                    self.regions.ensure_resident(role, queue=q.name)
+                    self.regions.ensure_resident(
+                        role, queue=q.name, protect=self._protected_keys
+                    )
                 out = role(*pkt.args)
             else:
                 out = pkt.fn(*pkt.args)
@@ -439,10 +727,13 @@ class Scheduler:
         return self._completed - before
 
     def _await_stall(self) -> bool:
-        """Block on an in-flight threaded reconfig, if any (lock-safe peek)."""
+        """Block on an in-flight threaded reconfig or prefetch (lock-safe peek)."""
         with self._step_lock:
             fut = next(
                 (s.future for s in self._stalls.values() if s.future is not None),
+                None,
+            ) or next(
+                (p.future for p in self._prefetches.values() if p.future is not None),
                 None,
             )
         if fut is None:
@@ -544,9 +835,17 @@ class Scheduler:
                 "wait_s": st.wait_s,
                 "exec_s": st.exec_s,
                 "reconfig_s": st.reconfig_s,
+                "reconfig_hidden_s": st.reconfig_hidden_s,
                 "dispatched": float(st.dispatched),
                 "barriers": float(st.barriers),
                 "reconfigs": float(st.reconfigs),
+                "prefetches": float(st.prefetches),
+                "prefetch_hits": float(st.prefetch_hits),
             }
             for name, st in self.stats.items()
         }
+
+    def exposed_reconfig_s(self) -> float:
+        """Total queue-stalling (exposed) reconfiguration time — the quantity
+        the lookahead prefetcher drives toward zero (paper Table II row 2)."""
+        return sum(st.reconfig_s for st in self.stats.values())

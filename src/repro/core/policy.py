@@ -25,6 +25,33 @@ from repro.core.registry import FIXED_WEIGHT, GENERIC
 
 
 @dataclasses.dataclass(frozen=True)
+class PrefetchPolicy:
+    """Lookahead-depth knob for the reconfiguration-prefetch pipeline.
+
+    ``lookahead`` is how many queued packets (per queue, from the head) the
+    scheduler scans for roles to load ahead of demand — the software ICAP
+    pipeline depth.  0 recovers the purely reactive PR-1 scheduler.  The same
+    knob parameterizes :func:`simulate_lru`, so the role planner can predict
+    *exposed* (queue-stalling) rather than total reconfiguration cost when a
+    prefetching scheduler will run the plan.
+    """
+
+    lookahead: int = 0
+
+    def __post_init__(self) -> None:
+        if self.lookahead < 0:
+            raise ValueError(f"lookahead must be >= 0, got {self.lookahead}")
+
+    @classmethod
+    def of(cls, value: "PrefetchPolicy | int | None") -> "PrefetchPolicy":
+        if value is None:
+            return cls(0)
+        if isinstance(value, PrefetchPolicy):
+            return value
+        return cls(int(value))
+
+
+@dataclasses.dataclass(frozen=True)
 class Invocation:
     """One op call site in a model step: (op type, site id e.g. layer index)."""
 
@@ -52,6 +79,8 @@ class SimResult:
     hits: int
     misses: int
     distinct_roles: int
+    exposed_s: float = 0.0      # reconfig time the compute timeline waited on
+    hidden_s: float = 0.0       # reconfig time overlapped by lookahead prefetch
 
     @property
     def hit_rate(self) -> float:
@@ -82,28 +111,58 @@ def simulate_lru(
     op_of: dict[Hashable, str],
     *,
     repeats: int = 2,
+    lookahead: "PrefetchPolicy | int" = 0,
 ) -> SimResult:
     """Steady-state LRU simulation over ``repeats`` passes of the role sequence.
 
     The first pass is compulsory-miss dominated; reporting the *last* pass
     gives the steady-state step cost the planner optimizes.
+
+    With ``lookahead`` L > 0 the simulation models the prefetching scheduler's
+    two engines: a miss's load may start on the reconfiguration engine as soon
+    as the access entered the L-deep lookahead window, so only the part of the
+    load not overlapped by earlier compute is *exposed* on the compute
+    timeline, and the LRU victim search skips roles needed within the next L
+    accesses (the approximate Bélády oracle).  L = 0 reduces exactly to the
+    serial reactive model.
     """
+    depth = PrefetchPolicy.of(lookahead).lookahead
     resident: "OrderedDict[Hashable, None]" = OrderedDict()
     last = SimResult(0.0, 0, 0, len(set(roles)))
     for _ in range(max(1, repeats)):
-        total, hits, misses = 0.0, 0, 0
-        for r in roles:
+        compute_t = reconfig_free = 0.0
+        exposed = hidden = 0.0
+        hits, misses = 0, 0
+        starts: list[float] = []          # compute time when access i began
+        for i, r in enumerate(roles):
+            starts.append(compute_t)
             if r in resident:
                 resident.move_to_end(r)
                 hits += 1
             else:
                 misses += 1
                 if len(resident) >= budget:
-                    resident.popitem(last=False)
+                    upcoming = roles[i + 1 : i + 1 + depth] if depth else ()
+                    window: dict[Hashable, int] = {}
+                    for j, rr in enumerate(upcoming):
+                        window.setdefault(rr, j)
+                    victim = next((k for k in resident if k not in window), None)
+                    if victim is None:
+                        # every region demanded soon: evict the one needed
+                        # furthest in the future (Bélády, as the scheduler does)
+                        victim = max(resident, key=lambda k: window[k])
+                    resident.pop(victim)
+                visible_t = starts[max(0, i - depth)]
+                load_start = max(reconfig_free, visible_t)
+                ready = load_start + cost.reconfig_s
+                exp = max(0.0, ready - compute_t)
+                exposed += exp
+                hidden += max(0.0, cost.reconfig_s - exp)
+                compute_t = max(compute_t, ready)
+                reconfig_free = ready
                 resident[r] = None
-                total += cost.reconfig_s
-            total += cost.dispatch_s + cost.exec_s(op_of[r], spec_of[r])
-        last = SimResult(total, hits, misses, len(set(roles)))
+            compute_t += cost.dispatch_s + cost.exec_s(op_of[r], spec_of[r])
+        last = SimResult(compute_t, hits, misses, len(set(roles)), exposed, hidden)
     return last
 
 
@@ -122,6 +181,7 @@ def _evaluate(
     budget: int,
     cost: CostModel,
     repeats: int,
+    lookahead: "PrefetchPolicy | int" = 0,
 ) -> SimResult:
     roles = role_sequence(trace, assignment)
     spec_of = {}
@@ -129,7 +189,9 @@ def _evaluate(
     for inv, r in zip(trace, roles):
         spec_of[r] = assignment.get(inv.op, GENERIC)
         op_of[r] = inv.op
-    return simulate_lru(roles, budget, cost, spec_of, op_of, repeats=repeats)
+    return simulate_lru(
+        roles, budget, cost, spec_of, op_of, repeats=repeats, lookahead=lookahead
+    )
 
 
 def plan_roles(
@@ -139,8 +201,12 @@ def plan_roles(
     *,
     repeats: int = 2,
     exhaustive_limit: int = 12,
+    lookahead: "PrefetchPolicy | int" = 0,
 ) -> Plan:
-    """Choose generic vs fixed-weight per op type to minimize step latency."""
+    """Choose generic vs fixed-weight per op type to minimize step latency.
+
+    ``lookahead`` predicts the plan under a prefetching scheduler of that
+    depth (exposed reconfiguration only) instead of the reactive one."""
     ops = sorted({inv.op for inv in trace})
     best: tuple[float, dict[str, str], SimResult] | None = None
     alts: list[tuple[dict[str, str], float]] = []
@@ -149,14 +215,14 @@ def plan_roles(
         choices = itertools.product((GENERIC, FIXED_WEIGHT), repeat=len(ops))
         for combo in choices:
             assignment = dict(zip(ops, combo))
-            sim = _evaluate(trace, assignment, budget, cost, repeats)
+            sim = _evaluate(trace, assignment, budget, cost, repeats, lookahead)
             alts.append((assignment, sim.total_s))
             if best is None or sim.total_s < best[0]:
                 best = (sim.total_s, assignment, sim)
     else:
         # Greedy: start all-generic, flip the op with the best marginal gain.
         assignment = {op: GENERIC for op in ops}
-        sim = _evaluate(trace, assignment, budget, cost, repeats)
+        sim = _evaluate(trace, assignment, budget, cost, repeats, lookahead)
         best = (sim.total_s, dict(assignment), sim)
         improved = True
         while improved:
@@ -164,7 +230,7 @@ def plan_roles(
             for op in ops:
                 trial = dict(assignment)
                 trial[op] = FIXED_WEIGHT if trial[op] == GENERIC else GENERIC
-                s = _evaluate(trace, trial, budget, cost, repeats)
+                s = _evaluate(trace, trial, budget, cost, repeats, lookahead)
                 if s.total_s < best[0]:
                     best = (s.total_s, trial, s)
                     assignment = trial

@@ -1,4 +1,4 @@
-"""Region manager: bounded kernel residency with LRU eviction.
+"""Region manager: bounded kernel residency with prefetch-aware LRU eviction.
 
 The FPGA in the paper exposes a fixed number of reconfigurable regions; when a
 dispatched kernel's role is not loaded, the runtime reconfigures a region,
@@ -7,17 +7,47 @@ analogue manages a bounded set of device-loaded executables (program + weight
 residency).  ``ensure_resident`` is the single choke point the HSA executor
 calls before every kernel launch; it records reconfiguration costs in the
 overhead ledger (paper Table II row 2).
+
+Beyond plain LRU, a region slot can be in two additional states that the
+lookahead scheduler (:mod:`repro.core.hsa.scheduler`) drives:
+
+  - *prefetching* — a speculative load issued ahead of demand is in flight.
+    The slot is occupied but the role is not yet usable; it cannot be chosen
+    as an eviction victim (you cannot reprogram a region mid-bitstream).
+  - *reserved* — the role was loaded on behalf of a packet already sitting in
+    a queue (refcounted).  Reserved roles are skipped by the victim search so
+    a prefetched region is still hot when its packet is finally granted.
+
+Victim selection is tiered: prefer roles that are neither pinned, reserved,
+nor *protected* (referenced by a packet inside the scheduler's lookahead
+window — an approximate Bélády oracle read straight off the queues); fall
+back to protected, then to reserved (wasting the prefetch) under demand
+pressure; pinned roles are never evicted.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Iterator
+from typing import AbstractSet, Callable, Iterator, Mapping
 
 from repro.core import ledger as ledger_mod
 from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
 from repro.core.roles import Role, RoleKey
+
+# ``protect`` accepted by the eviction paths: a set of keys (all equally
+# urgent) or a mapping key -> first-use distance (lower = demanded sooner),
+# which lets the fallback tier evict the role needed furthest in the future.
+# A zero-arg callable returning either is evaluated only if eviction is
+# actually needed, so residency *hits* never pay for the window scan.
+Protection = Mapping[RoleKey, int] | AbstractSet[RoleKey]
+
+# region-slot states reported by RegionManager.state()
+RESIDENT = "resident"
+PREFETCHING = "prefetching"
+RESERVED = "reserved"
+
+_EMPTY: frozenset = frozenset()
 
 
 @dataclasses.dataclass
@@ -25,6 +55,9 @@ class ResidencyStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    prefetch_issued: int = 0
+    prefetch_hits: int = 0       # demand lookups served by a prefetched load
+    prefetch_wasted: int = 0     # prefetched but evicted/flushed before use
 
     @property
     def lookups(self) -> int:
@@ -63,6 +96,9 @@ class RegionManager:
         self.stats = ResidencyStats()
         self._resident: "OrderedDict[RoleKey, Role]" = OrderedDict()  # LRU: oldest first
         self._pinned: set[RoleKey] = set()
+        self._prefetching: dict[RoleKey, Role] = {}   # speculative loads in flight
+        self._reserved: dict[RoleKey, int] = {}       # refcount of queued demand
+        self._fresh: set[RoleKey] = set()             # prefetched, not yet demanded
         # the scheduler's reconfig worker and exec path may race: one choke lock
         import threading
 
@@ -70,33 +106,41 @@ class RegionManager:
 
     # -- core protocol -------------------------------------------------------
 
-    def ensure_resident(self, role: Role, *, queue: str | None = None) -> ResidencyResult:
+    def ensure_resident(
+        self,
+        role: Role,
+        *,
+        queue: str | None = None,
+        protect: "Protection | Callable[[], Protection]" = _EMPTY,
+    ) -> ResidencyResult:
+        """Demand path: make ``role`` usable now, evicting if necessary.
+
+        ``protect`` keys (roles demanded by packets inside the scheduler's
+        lookahead window) are only evicted when there is no other victim.
+        """
         with self._lock:
             key = role.key
             if key in self._resident:
                 self._resident.move_to_end(key)
                 self.stats.hits += 1
+                self._note_use(key)
                 return ResidencyResult(role=role, hit=True)
 
             self.stats.misses += 1
             evicted: RoleKey | None = None
-            if len(self._resident) >= self.num_regions:
-                evicted = self._evict_one()
+            if self._slots_used() >= self.num_regions:
+                if callable(protect):
+                    protect = protect()
+                evicted = self._evict_one(protect=protect, speculative=False)
                 if evicted is None:
                     raise RuntimeError(
-                        f"all {self.num_regions} regions pinned; cannot load {role.name}"
+                        f"all {self.num_regions} regions pinned or loading; "
+                        f"cannot load {role.name}"
                     )
 
-            import time
-
-            t0 = time.perf_counter_ns()
-            role.load()
-            dt = (time.perf_counter_ns() - t0) * 1e-9
-            self.ledger.record(
-                ledger_mod.RECONFIG, dt, role=role.name, evicted=str(evicted),
-                source=role.source, queue=queue,
-            )
+            dt = self._load(role, queue=queue, evicted=evicted, prefetch=False)
             self._resident[key] = role
+            self._note_use(key)
             return ResidencyResult(role=role, hit=False, evicted=evicted, reconfig_s=dt)
 
     def touch(self, key: RoleKey) -> bool:
@@ -107,16 +151,182 @@ class RegionManager:
             if key not in self._resident:
                 return False
             self._resident.move_to_end(key)
+            self._note_use(key)
             return True
 
-    def _evict_one(self) -> RoleKey | None:
-        for key in self._resident:          # oldest-first iteration order
-            if key not in self._pinned:
-                victim = self._resident.pop(key)
-                victim.unload()
-                self.stats.evictions += 1
-                return key
-        return None
+    # -- prefetch state machine ------------------------------------------------
+
+    def begin_prefetch(
+        self,
+        role: Role,
+        *,
+        queue: str | None = None,
+        protect: Protection = _EMPTY,
+        target_rank: int | None = None,
+    ) -> ResidencyResult | None:
+        """Speculatively load ``role`` ahead of demand.
+
+        Best-effort: returns None when the role is already resident/loading or
+        when making space would evict a pinned, reserved, or window-protected
+        role (speculation never steals a region demand is about to use).
+        ``target_rank`` is the prefetched role's own first-use distance: a
+        protected victim demanded strictly *later* than that may still be
+        displaced (the Bélády argument cuts both ways).  Raises RuntimeError
+        only when the miss is structural — every region is pinned — so the
+        caller can surface it rather than retry forever.  The loaded role is
+        *reserved* (refcount) until a demand lookup consumes it, and
+        *prefetching* until :meth:`complete_prefetch`.
+        """
+        with self._lock:
+            key = role.key
+            if key in self._resident or key in self._prefetching:
+                return None
+            evicted: RoleKey | None = None
+            if self._slots_used() >= self.num_regions:
+                evicted = self._evict_one(
+                    protect=protect, speculative=True, target_rank=target_rank
+                )
+                if evicted is None:
+                    if len(self._pinned & set(self._resident)) >= self.num_regions:
+                        raise RuntimeError(
+                            f"all {self.num_regions} regions pinned; "
+                            f"cannot prefetch {role.name}"
+                        )
+                    return None                  # transient: reserved/loading slots
+
+            dt = self._load(role, queue=queue, evicted=evicted, prefetch=True)
+            self._prefetching[key] = role
+            self._reserved[key] = self._reserved.get(key, 0) + 1
+            self.stats.prefetch_issued += 1
+            return ResidencyResult(role=role, hit=False, evicted=evicted, reconfig_s=dt)
+
+    def complete_prefetch(self, key: RoleKey, *, fresh: bool = True) -> bool:
+        """Transition ``prefetching`` -> ``resident`` (MRU).  ``fresh=False``
+        when a demand miss already joined the in-flight load (the join counted
+        the prefetch hit; don't count it again at first touch).  Returns False
+        when the in-flight entry was flushed meanwhile."""
+        with self._lock:
+            role = self._prefetching.pop(key, None)
+            if role is None:
+                return False
+            self._resident[key] = role
+            self._resident.move_to_end(key)
+            if fresh:
+                self._fresh.add(key)
+            return True
+
+    def abort_prefetch(self, key: RoleKey) -> None:
+        """Drop an in-flight prefetch (load failed or scheduler gave up)."""
+        with self._lock:
+            role = self._prefetching.pop(key, None)
+            if role is not None:
+                role.unload()
+                self._release(key)
+                self.stats.prefetch_wasted += 1
+
+    def note_prefetch_join(self, key: RoleKey) -> None:
+        """A demand miss joined an in-flight prefetch instead of double-loading."""
+        with self._lock:
+            self.stats.prefetch_hits += 1
+
+    def is_prefetching(self, key: RoleKey) -> bool:
+        with self._lock:
+            return key in self._prefetching
+
+    def state(self, key: RoleKey) -> str | None:
+        with self._lock:
+            if key in self._prefetching:
+                return PREFETCHING
+            if key in self._resident:
+                return RESERVED if self._reserved.get(key) else RESIDENT
+            return None
+
+    # -- internals -------------------------------------------------------------
+
+    def _slots_used(self) -> int:
+        return len(self._resident) + len(self._prefetching)
+
+    def _load(self, role: Role, *, queue, evicted, prefetch: bool) -> float:
+        import time
+
+        t0 = time.perf_counter_ns()
+        role.load()
+        dt = (time.perf_counter_ns() - t0) * 1e-9
+        self.ledger.record(
+            ledger_mod.RECONFIG, dt, role=role.name, evicted=str(evicted),
+            source=role.source, queue=queue, prefetch=prefetch,
+        )
+        return dt
+
+    def _note_use(self, key: RoleKey) -> None:
+        if key in self._fresh:
+            self._fresh.discard(key)
+            self.stats.prefetch_hits += 1
+        self._release(key)
+
+    def _release(self, key: RoleKey) -> None:
+        n = self._reserved.get(key, 0)
+        if n > 1:
+            self._reserved[key] = n - 1
+        elif n:
+            del self._reserved[key]
+
+    def _evict_one(
+        self,
+        protect: Protection = _EMPTY,
+        *,
+        speculative: bool = False,
+        target_rank: int | None = None,
+    ) -> RoleKey | None:
+        """Tiered victim search:
+
+        (1) neither pinned, reserved, nor protected — LRU (oldest first);
+        (2) protected but unreserved — the role demanded *furthest* in the
+            future wins (Bélády fallback; plain LRU when ``protect`` carries
+            no distances); a speculative caller only reaches this tier with a
+            ``target_rank`` and may only displace roles demanded strictly
+            later than its own target;
+        (3) reserved (the prefetch is wasted) — LRU; demand only.
+
+        Pinned roles are never evicted.
+        """
+        victim_key: RoleKey | None = None
+        rank_of = protect.get if isinstance(protect, Mapping) else (
+            lambda _k, _d=0: 0
+        )
+        for tier in (0, 1, 2):
+            if speculative and (tier > 1 or (tier == 1 and target_rank is None)):
+                break
+            best: tuple[int, RoleKey] | None = None
+            for key in self._resident:          # oldest-first iteration order
+                if key in self._pinned:
+                    continue
+                if tier < 2 and self._reserved.get(key):
+                    continue
+                if tier == 0:
+                    if key in protect:
+                        continue
+                    best = (0, key)             # LRU: first unprotected wins
+                    break
+                if tier == 1 and key not in protect:
+                    continue                    # tier 0 already rejected it
+                rank = rank_of(key, 0) if tier == 1 else 0
+                if speculative and rank <= (target_rank or 0):
+                    continue                    # demanded sooner than the target
+                if best is None or rank > best[0]:
+                    best = (rank, key)          # furthest first use; tie -> LRU
+            if best is not None:
+                victim_key = best[1]
+                break
+        if victim_key is None:
+            return None
+        victim = self._resident.pop(victim_key)
+        victim.unload()
+        self.stats.evictions += 1
+        if self._reserved.pop(victim_key, 0) or victim_key in self._fresh:
+            self._fresh.discard(victim_key)
+            self.stats.prefetch_wasted += 1
+        return victim_key
 
     # -- management ------------------------------------------------------------
 
@@ -131,10 +341,21 @@ class RegionManager:
 
     def flush(self) -> None:
         with self._lock:
+            self.stats.prefetch_wasted += len(self._fresh) + len(self._prefetching)
             for role in self._resident.values():
                 role.unload()
+            for role in self._prefetching.values():
+                role.unload()
             self._resident.clear()
+            self._prefetching.clear()
             self._pinned.clear()
+            self._reserved.clear()
+            self._fresh.clear()
+
+    @property
+    def pinned_count(self) -> int:
+        with self._lock:
+            return len(self._pinned)
 
     def resident_keys(self) -> list[RoleKey]:
         with self._lock:
@@ -145,7 +366,7 @@ class RegionManager:
             return key in self._resident
 
     def __len__(self) -> int:
-        return len(self._resident)
+        return self._slots_used()
 
     def __iter__(self) -> Iterator[Role]:
         return iter(self._resident.values())

@@ -76,6 +76,15 @@ class KernelRegistry:
     def __init__(self) -> None:
         self._lock = threading.RLock()
         self._impls: dict[tuple[str, str], list[KernelImpl]] = {}
+        self._version = 0      # bumped on any mutation; resolve caches key on it
+
+    @property
+    def version(self) -> int:
+        """Monotonic mutation counter.  Resolution caches (e.g. the
+        DispatchContext memo) key their entries on this so a late
+        registration invalidates them without a registry round-trip."""
+        with self._lock:
+            return self._version
 
     # -- registration ------------------------------------------------------
 
@@ -92,6 +101,7 @@ class KernelRegistry:
             # Stable resolution order: source preference is applied at resolve
             # time; within a bucket keep highest priority first.
             bucket.sort(key=lambda i: -i.priority)
+            self._version += 1
         return impl
 
     def define(
@@ -183,10 +193,12 @@ class KernelRegistry:
     def restore(self, snap: dict[tuple[str, str], list[KernelImpl]]) -> None:
         with self._lock:
             self._impls = {k: list(v) for k, v in snap.items()}
+            self._version += 1
 
     def clear(self) -> None:
         with self._lock:
             self._impls.clear()
+            self._version += 1
 
 
 GLOBAL_REGISTRY = KernelRegistry()

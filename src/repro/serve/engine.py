@@ -155,7 +155,8 @@ class ServeEngine:
 
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 256, temperature: float = 0.0, seed: int = 0,
-                 hsa_queue=None, hsa_scheduler=None, producer: str = "tf-serving"):
+                 hsa_queue=None, hsa_scheduler=None, producer: str = "tf-serving",
+                 bucket_prompts: bool = True, min_bucket: int = 8):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -175,6 +176,26 @@ class ServeEngine:
         self._hsa_queue = hsa_queue
         self._hsa_scheduler = hsa_scheduler
         self._producer = producer
+        # prompt bucketing: pad prompts to power-of-two lengths so repeated
+        # serving hits the jitted prefill's trace cache instead of retracing
+        # per distinct prompt length (a distinct length = a distinct role
+        # signature = a re-synthesis, in paper terms).  Only safe for
+        # position-indexed caches: recurrent state (SSM/conv) folds pad
+        # tokens in with no pos mask to ignore them, so bucketing is forced
+        # off when the model carries any.
+        self.bucket_prompts = bucket_prompts and self._bucketing_safe()
+        self.min_bucket = min_bucket
+        self.prefill_traces = 0        # bumped at *trace* time only: the counter
+        #                                the bucketing example reads before/after
+
+        def _traced_prefill(params, tokens):
+            self.prefill_traces += 1   # side effect runs once per new shape
+            return self.model.prefill(
+                params, {"tokens": tokens}, cache_len=self.max_len
+            )
+
+        _traced_prefill.__name__ = "prefill"
+        self._prefill_fn = jax.jit(_traced_prefill)
 
     def _launch(self, fn, *args, **kwargs):
         """Run a model step directly, or as an AQL packet through the HSA queue."""
@@ -208,10 +229,60 @@ class ServeEngine:
 
     # -- internals ------------------------------------------------------------
 
+    _RECURRENT_CACHE_KEYS = frozenset({"ssm_state", "conv_tail"})
+
+    def _bucketing_safe(self) -> bool:
+        """True iff every cache leaf is position-indexed (decode masks by
+        ``pos``, so end-padding is causally inert).  Recurrent leaves have no
+        such mask, and sliding-window (ring) KV caches clip to the *last*
+        window positions at prefill — which would be the pads.  Unknown cache
+        layouts also decline, conservatively."""
+        import jax.tree_util as jtu
+
+        if getattr(self.cfg, "attn_window", None):
+            return False
+        try:
+            specs = self.model.cache_specs(1, 8)
+        except Exception:
+            return False
+        keys: set[str] = set()
+
+        def visit(path, leaf):
+            last = path[-1]
+            keys.add(last.key if hasattr(last, "key") else str(last))
+
+        jtu.tree_map_with_path(visit, specs)
+        return not (keys & self._RECURRENT_CACHE_KEYS)
+
+    def _bucket_len(self, n: int) -> int:
+        """Next power-of-two at least ``min_bucket``, capped at ``max_len``."""
+        b = self.min_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
     def _prefill_slot(self, slot: int, req: Request) -> None:
-        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-        logits, cache = self._launch(self.model.prefill, self.params, batch,
-                                     cache_len=self.max_len)
+        n = len(req.prompt)
+        pad = max(0, self._bucket_len(n) - n) if self.bucket_prompts else 0
+        tokens = np.pad(req.prompt, (0, pad)) if pad else req.prompt
+        logits, cache = self._launch(
+            self._prefill_fn, self.params, jnp.asarray(tokens[None, :])
+        )
+        if pad:
+            # end-padding is causally inert for the cached prompt positions
+            # (decode masks by pos), but prefill's returned logits sit at a
+            # pad position.  Re-derive the first token's logits with one
+            # decode step of the last prompt token at its true position; keep
+            # the *prefill* cache verbatim (the decode's KV rewrite of pos
+            # n-1 is the same value only up to low-precision rounding).
+            fix_cache = {
+                "pos": jnp.asarray([n - 1], jnp.int32),
+                "segments": cache["segments"],
+            }
+            logits, _ = self._launch(
+                self.model.decode_step, self.params,
+                jnp.asarray(req.prompt[-1:][None, :]), fix_cache,
+            )
         tok = self._sample(np.asarray(logits, np.float32)[0])
         req.generated.append(int(tok))
         if self._cache is None:

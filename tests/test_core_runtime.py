@@ -89,6 +89,51 @@ def test_dispatch_trace_records_sequence():
     assert trace.op_counts() == {"matmul": 2, "rmsnorm": 1}
 
 
+def test_dispatch_context_memoizes_resolution():
+    """Hot trace loops resolve each (op, specialization) once per context."""
+    calls = []
+
+    class Counting(KernelRegistry):
+        def resolve(self, *a, **kw):
+            calls.append(1)
+            return super().resolve(*a, **kw)
+
+    creg = Counting()
+    creg.register(KernelImpl(op="f", device_kind="any", source="xla", fn=lambda x: x))
+    with dispatch.use(registry=creg, prefer=("xla",)) as ctx:
+        a = ctx.resolve("f")
+        b = ctx.resolve("f")
+        c = ctx.resolve("f", specialization=None)
+    assert a is b is c
+    assert len(calls) == 1
+
+
+def test_dispatch_memo_invalidated_by_late_registration():
+    """A registration after the first resolve must not serve a stale impl."""
+    reg = KernelRegistry()
+    reg.register(KernelImpl(op="f", device_kind="any", source="xla",
+                            fn=lambda x: x, name="old", priority=0))
+    with dispatch.use(registry=reg, prefer=("xla",)) as ctx:
+        assert ctx.resolve("f").name == "old"
+        reg.register(KernelImpl(op="f", device_kind="any", source="xla",
+                                fn=lambda x: x + 1, name="new", priority=9))
+        assert ctx.resolve("f").name == "new"     # version bump busts the memo
+
+
+def test_registry_version_monotone():
+    reg = KernelRegistry()
+    v0 = reg.version
+    impl = KernelImpl(op="f", device_kind="any", source="xla", fn=lambda: 0)
+    reg.register(impl)
+    v1 = reg.version
+    snap = reg.snapshot()
+    reg.clear()
+    v2 = reg.version
+    reg.restore(snap)
+    v3 = reg.version
+    assert v0 < v1 < v2 < v3
+
+
 def test_dispatch_inside_jit_is_trace_time():
     """Resolution happens at trace time: the jitted program is policy-baked."""
     calls = []

@@ -1,0 +1,441 @@
+"""Deterministic tests for the lookahead reconfiguration-prefetch pipeline.
+
+Everything runs on the virtual clock with a fixed cost model, so the tests
+assert *exact* event logs, exposed/hidden splits, and residency states —
+including the acceptance property: a prefetched packet's ``prefetch_end``
+precedes its ``exec_start`` with no intervening ``reconfig_start`` on that
+queue (the region is hot before the packet is granted).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401
+from repro.core import ledger as ledger_mod
+from repro.core.hsa import Queue, Scheduler, VirtualClock
+from repro.core.ledger import OverheadLedger
+from repro.core.policy import PrefetchPolicy
+from repro.core.reconfig import PREFETCHING, RESERVED, RegionManager
+from repro.core.registry import GLOBAL_REGISTRY
+from repro.core.roles import Role, RoleLibrary
+
+COST = {"reconfig": 10.0, "exec": 1.0}
+
+
+def _cost_model(kind, what, measured):
+    return COST[kind]
+
+
+def _mk_role(lib, n, name=None):
+    impl = GLOBAL_REGISTRY.resolve("matmul", "any", ("xla",))
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return lib.add(Role(impl, (a, a), name=name or f"mm{n}"))
+
+
+def _mk_sched(num_regions=2, lookahead=0, **kw):
+    led = OverheadLedger()
+    lib = RoleLibrary(ledger=led)
+    rm = RegionManager(num_regions, ledger=led)
+    sched = Scheduler(
+        rm, lib, ledger=led, clock=VirtualClock(), cost_model=_cost_model,
+        lookahead=lookahead, **kw,
+    )
+    return sched, lib, rm, led
+
+
+def _x(n):
+    return jnp.ones((n, n))
+
+
+def _settle(sched, max_steps=200):
+    """Drive until no progress; a gated head reads as a (virtual) deadlock,
+    which is exactly the settled state these tests inspect."""
+    from repro.core.hsa import SchedulerDeadlock
+
+    for _ in range(max_steps):
+        try:
+            if sched.step() is None:
+                return
+        except SchedulerDeadlock:
+            return
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property: prefetch fully hides the load
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_end_precedes_exec_start_no_reconfig_on_queue():
+    """B's head waits on A's 12th completion (t=12); B's role loads [0, 10)
+    on the reconfiguration engine while A computes.  Exact event log: the
+    prefetch_end precedes B's exec_start and queue B never reconfigures."""
+    sched, lib, rm, led = _mk_sched(num_regions=3, lookahead=1)
+    ra, rb = _mk_role(lib, 8, "roleA"), _mk_role(lib, 16, "roleB")
+    rm.ensure_resident(ra)
+    qa = sched.add_queue(Queue(None, 64, name="A"))
+    qb = sched.add_queue(Queue(None, 64, name="B"))
+
+    pkts = [qa.dispatch(ra.key, _x(8), _x(8)) for _ in range(12)]
+    pb = qb.dispatch(rb.key, _x(16), _x(16), deps=[pkts[-1].completion])
+    sched.run_until_idle()
+
+    b_events = [e.brief() for e in sched.event_log() if e.queue == "B"]
+    assert b_events == [
+        ("prefetch_start", "B", "roleB"),
+        ("prefetch_end", "B", "roleB"),
+        ("prefetch_hit", "B", "roleB"),
+        ("exec_start", "B", str(rb.key)),
+        ("exec_end", "B", str(rb.key)),
+    ]
+    log = sched.event_log()
+    t_pf_end = next(e.t for e in log if e.kind == "prefetch_end")
+    t_exec = next(e.t for e in log if e.kind == "exec_start" and e.queue == "B")
+    assert t_pf_end == 10.0 and t_exec == 12.0 and t_pf_end < t_exec
+    assert not any(e.kind == "reconfig_start" and e.queue == "B" for e in log)
+
+    # the load is fully hidden: no exposed stall on B, 10s hidden in the ledger
+    assert sched.stats["B"].reconfig_s == 0.0
+    assert sched.stats["B"].reconfig_hidden_s == 10.0
+    assert sched.stats["B"].prefetch_hits == 1
+    assert rm.stats.prefetch_issued == 1 and rm.stats.prefetch_hits == 1
+    split = led.reconfig_split()
+    assert split["exposed_s"] == 0.0 and split["hidden_s"] == 10.0
+    assert pb.out.error is None
+    np.testing.assert_allclose(np.asarray(pb.out.value)[0, 0], 16.0)
+
+
+def test_demand_miss_joins_inflight_prefetch_partial_hiding():
+    """B becomes ready at t=5 while its prefetch runs [0, 10): B joins the
+    load instead of double-loading — 5s exposed, 5s hidden, one real load."""
+    sched, lib, rm, led = _mk_sched(num_regions=3, lookahead=1)
+    ra, rb = _mk_role(lib, 8, "roleA"), _mk_role(lib, 16, "roleB")
+    rm.ensure_resident(ra)
+    qa = sched.add_queue(Queue(None, 64, name="A"))
+    qb = sched.add_queue(Queue(None, 64, name="B"))
+
+    pkts = [qa.dispatch(ra.key, _x(8), _x(8)) for _ in range(5)]
+    pb = qb.dispatch(rb.key, _x(16), _x(16), deps=[pkts[-1].completion])
+    sched.run_until_idle()
+
+    log = sched.event_log()
+    assert [e.brief() for e in log if e.queue == "B"] == [
+        ("prefetch_start", "B", "roleB"),
+        ("prefetch_hit", "B", "roleB"),
+        ("prefetch_end", "B", "roleB"),
+        ("exec_start", "B", str(rb.key)),
+        ("exec_end", "B", str(rb.key)),
+    ]
+    assert next(e.t for e in log if e.kind == "exec_start" and e.queue == "B") == 10.0
+    assert sched.stats["B"].reconfig_s == 5.0          # exposed residual only
+    assert sched.stats["B"].reconfig_hidden_s == 5.0
+    split = led.reconfig_split()
+    assert split["exposed_s"] == 5.0 and split["hidden_s"] == 5.0
+    # one real load served both the prefetch and the demand miss
+    assert led.stat(ledger_mod.RECONFIG).count == 2    # roleA seed + roleB
+    assert rm.stats.prefetch_hits == 1
+    assert pb.out.error is None
+
+
+def test_lookahead_zero_is_reactive_baseline():
+    """lookahead=0 (the default) must produce zero prefetch machinery."""
+    sched, lib, rm, led = _mk_sched(num_regions=2, lookahead=0)
+    ra = _mk_role(lib, 8, "roleA")
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    q.dispatch(ra.key, _x(8), _x(8))
+    sched.run_until_idle()
+    kinds = {e.kind for e in sched.event_log()}
+    assert "prefetch_start" not in kinds and "prefetch_hit" not in kinds
+    assert rm.stats.prefetch_issued == 0
+    assert led.reconfig_split()["hidden_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# queue-aware (approximate Bélády) eviction
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_skips_roles_in_lookahead_window():
+    """Victim search must pass over a role a queued packet is about to use."""
+    sched, lib, rm, led = _mk_sched(num_regions=2, lookahead=2)
+    rx, ry, rz = (_mk_role(lib, n, f"r{n}") for n in (8, 16, 32))
+    rm.ensure_resident(rx)       # LRU-oldest: the naive victim
+    rm.ensure_resident(ry)       # referenced by A's dep-blocked head below
+    qa = sched.add_queue(Queue(None, 64, name="A"))
+    qb = sched.add_queue(Queue(None, 64, name="B"))
+
+    from repro.core.hsa import Signal
+
+    gate = Signal(1, name="gate")
+    pa = qa.dispatch(ry.key, _x(16), _x(16), deps=[gate])
+    pb = qb.dispatch(rz.key, _x(32), _x(32))       # forces an eviction
+    _settle(sched)
+    # Z's demand load must have evicted X (LRU) — not window-protected Y
+    assert not rm.is_resident(rx.key)
+    assert rm.is_resident(ry.key)
+    assert rm.is_resident(rz.key)
+    gate.store(0)
+    sched.run_until_idle()
+    assert pa.out.error is None and pb.out.error is None
+    # Y stayed hot: queue A never reconfigured
+    assert sched.stats["A"].reconfigs == 0
+
+
+def test_reactive_eviction_would_have_evicted_window_role():
+    """Control for the test above: with lookahead=0 the same workload evicts
+    the about-to-be-used role and pays a second reconfiguration."""
+    sched, lib, rm, led = _mk_sched(num_regions=2, lookahead=0)
+    rx, ry, rz = (_mk_role(lib, n, f"r{n}") for n in (8, 16, 32))
+    rm.ensure_resident(rx)
+    rm.ensure_resident(ry)
+    rm.ensure_resident(rx)       # X most-recent: LRU victim is Y
+    qa = sched.add_queue(Queue(None, 64, name="A"))
+    qb = sched.add_queue(Queue(None, 64, name="B"))
+
+    from repro.core.hsa import Signal
+
+    gate = Signal(1, name="gate")
+    qa.dispatch(ry.key, _x(16), _x(16), deps=[gate])
+    qb.dispatch(rz.key, _x(32), _x(32))
+    _settle(sched)
+    assert not rm.is_resident(ry.key)              # blind LRU took Y
+    gate.store(0)
+    sched.run_until_idle()
+    assert sched.stats["A"].reconfigs == 1         # A paid for the reload
+
+
+# ---------------------------------------------------------------------------
+# prefetch/evict races and error paths (RegionManager state machine)
+# ---------------------------------------------------------------------------
+
+
+def test_touch_returns_false_after_reserved_role_force_flushed():
+    """A reserved (prefetched-for-a-packet) role torn down by flush() must
+    read as non-resident, and the waiting packet must reload cleanly."""
+    from repro.core.hsa import Signal
+
+    sched, lib, rm, led = _mk_sched(num_regions=3, lookahead=1)
+    rb = _mk_role(lib, 16, "roleB")
+    q = sched.add_queue(Queue(None, 64, name="B"))
+    gate = Signal(1, name="gate")
+    pb = q.dispatch(rb.key, _x(16), _x(16), deps=[gate])
+
+    # the dep-blocked head's role prefetches and completes: resident + reserved
+    _settle(sched)
+    assert rm.state(rb.key) == RESERVED
+    rm.flush()                                     # force-flush: all torn down
+    assert rm.touch(rb.key) is False               # the race the exec path checks
+    assert rm.stats.prefetch_wasted >= 1
+    gate.store(0)
+    sched.run_until_idle()
+    # the packet still completed: the demand path reloaded under full accounting
+    assert pb.out.error is None
+    np.testing.assert_allclose(np.asarray(pb.out.value)[0, 0], 16.0)
+    assert led.stat(ledger_mod.RECONFIG).count == 2  # prefetch load + reload
+    assert sched.stats["B"].reconfigs == 1           # the reload was a stall
+
+
+def test_begin_prefetch_raises_when_all_regions_pinned():
+    led = OverheadLedger()
+    lib = RoleLibrary(ledger=led)
+    rm = RegionManager(1, ledger=led)
+    pinned, other = _mk_role(lib, 8, "pinned"), _mk_role(lib, 16, "other")
+    rm.pin(pinned)
+    with pytest.raises(RuntimeError, match="pinned"):
+        rm.begin_prefetch(other)
+    assert not rm.is_resident(other.key) and not rm.is_prefetching(other.key)
+
+
+def test_demand_load_fails_when_pinned_plus_pending_prefetch_fill_regions():
+    """A pending prefetch occupies a slot and is never an eviction victim:
+    with the rest pinned, a third role's demand load must surface an error."""
+    led = OverheadLedger()
+    lib = RoleLibrary(ledger=led)
+    rm = RegionManager(2, ledger=led)
+    pinned, pre, third = (
+        _mk_role(lib, 8, "pinned"), _mk_role(lib, 16, "pre"), _mk_role(lib, 32, "third"),
+    )
+    rm.pin(pinned)
+    assert rm.begin_prefetch(pre) is not None
+    assert rm.state(pre.key) == PREFETCHING
+    with pytest.raises(RuntimeError, match="pinned or loading"):
+        rm.ensure_resident(third)
+    # the in-flight prefetch survived the failed demand
+    assert rm.state(pre.key) == PREFETCHING
+    rm.complete_prefetch(pre.key)
+    assert rm.state(pre.key) == RESERVED
+    assert rm.touch(pre.key)                       # first touch consumes it
+    assert rm.stats.prefetch_hits == 1
+
+
+def test_scheduler_survives_all_pinned_with_lookahead():
+    """All regions pinned + lookahead on: packets fail loudly (demand path),
+    the prefetcher never loops, the scheduler goes idle."""
+    sched, lib, rm, led = _mk_sched(num_regions=1, lookahead=4)
+    pinned, other = _mk_role(lib, 8, "pinned"), _mk_role(lib, 16, "other")
+    rm.pin(pinned)
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    pkts = [q.dispatch(other.key, _x(16), _x(16)) for _ in range(3)]
+    sched.run_until_idle()
+    for pkt in pkts:
+        assert isinstance(pkt.out.error, RuntimeError)
+        assert pkt.completion.load() == 0
+    assert rm.stats.prefetch_issued == 0
+    assert not any(e.kind == "prefetch_start" for e in sched.event_log())
+
+
+def test_single_region_never_speculates_and_demand_still_succeeds():
+    """With one region the in-flight cap is 0: a dep-blocked queue's window
+    must not let speculation occupy the only slot and fail other demand."""
+    from repro.core.hsa import Signal
+
+    sched, lib, rm, led = _mk_sched(num_regions=1, lookahead=2)
+    rx, ry = _mk_role(lib, 8, "rx"), _mk_role(lib, 16, "ry")
+    qa = sched.add_queue(Queue(None, 64, name="A"))
+    qb = sched.add_queue(Queue(None, 64, name="B"))
+    gate = Signal(1, name="gate")
+    pa = qa.dispatch(rx.key, _x(8), _x(8), deps=[gate])   # blocked: would prefetch
+    pb = qb.dispatch(ry.key, _x(16), _x(16))              # flowing demand
+    _settle(sched)
+    gate.store(0)
+    sched.run_until_idle()
+    assert pa.out.error is None and pb.out.error is None
+    assert rm.stats.prefetch_issued == 0
+
+
+def test_sync_baseline_with_lookahead_never_prefetches():
+    """overlap_reconfig=False models a device with no reconfiguration engine:
+    the prefetch pipeline must stay off regardless of lookahead, so the sync
+    schedule is identical to the reactive one."""
+    def build(lookahead):
+        sched, lib, rm, led = _mk_sched(
+            num_regions=2, lookahead=lookahead, overlap_reconfig=False
+        )
+        ra, rb = _mk_role(lib, 8, "roleA"), _mk_role(lib, 16, "roleB")
+        rm.ensure_resident(ra)
+        qa = sched.add_queue(Queue(None, 64, name="A"))
+        qb = sched.add_queue(Queue(None, 64, name="B"))
+        pkts = [qa.dispatch(ra.key, _x(8), _x(8)) for _ in range(5)]
+        qb.dispatch(rb.key, _x(16), _x(16), deps=[pkts[-1].completion])
+        sched.run_until_idle()
+        return [(e.t, e.brief()) for e in sched.event_log()], sched.timeline()
+
+    log4, tl4 = build(4)
+    log0, tl0 = build(0)
+    assert log4 == log0
+    assert tl4 == tl0
+    assert not any(kind.startswith("prefetch") for _, (kind, _, _) in log4)
+
+
+def test_speculation_never_displaces_sooner_demand():
+    """begin_prefetch with a target needed later than every resident role's
+    next use must decline (return None), not steal the region."""
+    led = OverheadLedger()
+    lib = RoleLibrary(ledger=led)
+    rm = RegionManager(1, ledger=led)
+    soon, later = _mk_role(lib, 8, "soon"), _mk_role(lib, 16, "later")
+    rm.ensure_resident(soon)
+    # 'soon' is demanded at rank 0; prefetching 'later' (rank 4) must not evict it
+    assert rm.begin_prefetch(later, protect={soon.key: 0}, target_rank=4) is None
+    assert rm.is_resident(soon.key)
+    # the Bélády argument cuts both ways: a sooner target MAY displace it
+    assert rm.begin_prefetch(later, protect={soon.key: 4}, target_rank=0) is not None
+    assert not rm.is_resident(soon.key)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the sweep the acceptance criterion runs on calibrated costs
+# ---------------------------------------------------------------------------
+
+
+def _multi_tenant_exposed(lookahead: int):
+    """Synthetic-cost twin of benchmarks/table5: serve tenant pinned and
+    flowing, background tenant cycling 4 roles through 2 free regions."""
+    sched, lib, rm, led = _mk_sched(num_regions=3, lookahead=lookahead)
+    serve = _mk_role(lib, 64, "serve_fc")
+    rm.pin(serve)
+    sizes = (8, 16, 32, 48)
+    roles = [_mk_role(lib, n, f"r{n}") for n in sizes]
+    qs = sched.add_queue(Queue(None, 4096, name="serve"))
+    qb = sched.add_queue(Queue(None, 4096, name="opencl"))
+    for _ in range(96):
+        qs.dispatch(serve.key, _x(64), _x(64))
+    for _ in range(3):                       # 3 cycles x 4 roles x 4-packet bursts
+        for r, n in zip(roles, sizes):
+            for _ in range(4):
+                qb.dispatch(r.key, _x(n), _x(n))
+    sched.run_until_idle()
+    assert not any(e.kind == "error" for e in sched.event_log())
+    return sched, rm, led
+
+
+def test_exposed_reconfig_strictly_below_reactive_at_lookahead_4():
+    reactive = _multi_tenant_exposed(0)[0].exposed_reconfig_s()
+    sched4, rm4, led4 = _multi_tenant_exposed(4)
+    assert sched4.exposed_reconfig_s() < reactive
+    assert rm4.stats.prefetch_hits > 0
+    assert led4.reconfig_split()["hidden_s"] > 0.0
+    # deeper lookahead never regresses past the reactive baseline
+    sched8 = _multi_tenant_exposed(8)[0]
+    assert sched8.exposed_reconfig_s() <= reactive
+
+
+def test_prefetching_schedule_is_deterministic_across_replays():
+    def one_run():
+        sched, rm, led = _multi_tenant_exposed(4)
+        return [(e.t, e.brief()) for e in sched.event_log()]
+
+    runs = [one_run() for _ in range(3)]
+    assert all(r == runs[0] for r in runs[1:])
+
+
+# ---------------------------------------------------------------------------
+# the planner-side lookahead knob
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_policy_validation():
+    assert PrefetchPolicy.of(None).lookahead == 0
+    assert PrefetchPolicy.of(4).lookahead == 4
+    assert PrefetchPolicy.of(PrefetchPolicy(2)).lookahead == 2
+    with pytest.raises(ValueError):
+        PrefetchPolicy(-1)
+
+
+def test_simulate_lru_lookahead_zero_matches_serial_model():
+    from repro.core import policy
+
+    cost = policy.CostModel(
+        reconfig_s=1.0, dispatch_s=0.0,
+        exec_generic_s={"op": 0.25}, exec_fixed_s={"op": 0.25},
+    )
+    roles = [f"r{i % 3}" for i in range(12)]
+    spec_of = {r: "generic" for r in roles}
+    op_of = {r: "op" for r in roles}
+    sim = policy.simulate_lru(roles, 2, cost, spec_of, op_of, repeats=1)
+    assert sim.total_s == pytest.approx(sim.misses * 1.0 + 12 * 0.25)
+    assert sim.exposed_s == pytest.approx(sim.misses * 1.0)
+    assert sim.hidden_s == 0.0
+
+
+def test_simulate_lru_lookahead_reduces_exposed_not_correctness():
+    from repro.core import policy
+
+    cost = policy.CostModel(
+        reconfig_s=1.0, dispatch_s=0.0,
+        exec_generic_s={"op": 0.5}, exec_fixed_s={"op": 0.5},
+    )
+    roles = [f"r{(i // 4) % 3}" for i in range(48)]   # bursty cyclic trace
+    spec_of = {r: "generic" for r in roles}
+    op_of = {r: "op" for r in roles}
+    serial = policy.simulate_lru(roles, 2, cost, spec_of, op_of, repeats=2)
+    ahead = policy.simulate_lru(
+        roles, 2, cost, spec_of, op_of, repeats=2, lookahead=4
+    )
+    assert ahead.exposed_s < serial.exposed_s
+    assert ahead.hidden_s > 0.0
+    assert ahead.total_s <= serial.total_s
+    assert ahead.exposed_s + ahead.hidden_s == pytest.approx(
+        ahead.misses * cost.reconfig_s
+    )

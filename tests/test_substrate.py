@@ -320,6 +320,62 @@ def test_engine_decode_via_hsa_queue_matches_direct():
     assert led.queue_breakdown()["serve"]["wait"].count >= 5
 
 
+def test_engine_prompt_bucketing_same_tokens_fewer_traces():
+    """Power-of-two prompt bucketing must not change generations (greedy) and
+    must collapse per-length prefill retraces into per-bucket ones."""
+    cfg, model, params = _engine_model()
+    prompts = [[1, 17, 33, 7], [2, 5], [9] * 6, [4, 44, 14], [21, 12],
+               [3, 1, 4, 1, 5, 9, 2, 6, 5, 3]]
+
+    def run(bucket):
+        e = ServeEngine(model, params, batch_slots=3, max_len=32,
+                        bucket_prompts=bucket)
+        for p in prompts:
+            e.submit(p, max_new_tokens=6)
+        done = e.run_to_completion()
+        return {r.uid: r.generated for r in done}, e.prefill_traces
+
+    bucketed, traces_b = run(True)
+    plain, traces_p = run(False)
+    assert bucketed == plain
+    distinct_lengths = len({len(p) for p in prompts})
+    assert traces_p == distinct_lengths
+    assert traces_b < traces_p                  # the jit cache actually hits
+
+
+def test_engine_bucketing_declines_for_sliding_window_attention():
+    """Ring (windowed) KV caches clip to the last `window` prefill positions
+    — which would be the pads — so bucketing must stay off."""
+    import dataclasses as _dc
+
+    cfg = _dc.replace(
+        reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128),
+        attn_window=8,
+    )
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(5))
+    eng = ServeEngine(model, params, batch_slots=1, max_len=32,
+                      bucket_prompts=True)
+    assert eng.bucket_prompts is False
+    eng.submit(list(range(1, 13)), max_new_tokens=3)   # prompt 12 > window 8
+    (req,) = eng.run_to_completion()
+    assert len(req.generated) == 3
+
+
+def test_engine_bucketing_declines_for_recurrent_caches():
+    """SSM/hybrid caches fold pad tokens into unmasked recurrent state, so
+    the engine must force prompt bucketing off for those model families."""
+    cfg = reduced(ARCHS["mamba2-780m"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(3))
+    eng = ServeEngine(model, params, batch_slots=1, max_len=32,
+                      bucket_prompts=True)
+    assert eng.bucket_prompts is False
+    eng.submit([5, 6, 7], max_new_tokens=3)      # still serves, unbucketed
+    (req,) = eng.run_to_completion()
+    assert len(req.generated) == 3
+
+
 def test_engine_continuous_batching_isolation():
     """Requests admitted at different times produce the same generations as
     they would alone (per-slot positions = continuous batching correctness)."""
