@@ -1,20 +1,40 @@
 """Benchmark harness: one function per paper table.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Run with
-``PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]``.
+``PYTHONPATH=src python -m benchmarks.run [--fast] [--json [PATH]]``.
 
-``--json PATH`` additionally writes the rows as machine-readable JSON
-(schema 1: ``{"schema": 1, "fast": bool, "rows": [{"table", "metric",
-"value", "derived"}]}``) so CI can smoke-test the perf trajectory and
-downstream tooling can diff runs without re-parsing CSV.
+``--json`` additionally writes the rows as machine-readable JSON so CI can
+smoke-test the perf trajectory and downstream tooling can diff runs without
+re-parsing CSV.  PATH is optional and defaults to ``BENCH_results.json`` at
+the repo root.  Schema 2: ``{"schema": 2, "git_sha": str, "fast": bool,
+"rows": [{"table", "metric", "value", "derived"}]}``.
 """
 
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 
-JSON_SCHEMA = 1
+JSON_SCHEMA = 2
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_results.json")
+
+
+def git_sha() -> str:
+    """Current commit sha, so a results file is attributable to a tree state."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=REPO_ROOT, timeout=10,
+        )
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
 
 
 def parse_row(row: str) -> dict:
@@ -40,9 +60,10 @@ def main(argv: list[str] | None = None) -> None:
     json_path = None
     if "--json" in argv:
         i = argv.index("--json")
-        if i + 1 >= len(argv):
-            raise SystemExit("--json requires a path argument")
-        json_path = argv[i + 1]
+        if i + 1 < len(argv) and not argv[i + 1].startswith("--"):
+            json_path = argv[i + 1]
+        else:
+            json_path = DEFAULT_JSON
     n = 100 if fast else 1000
 
     from benchmarks import (
@@ -51,6 +72,7 @@ def main(argv: list[str] | None = None) -> None:
         table3_efficiency,
         table4_multitenancy,
         table5_prefetch,
+        table6_dispatch,
     )
 
     suites = (
@@ -59,6 +81,7 @@ def main(argv: list[str] | None = None) -> None:
         (table3_efficiency.run, {"n": n}),
         (table4_multitenancy.run, {"n": min(n, 128)}),
         (table5_prefetch.run, {"n": min(n, 64)}),
+        (table6_dispatch.run, {"n": min(n, 64)}),
     )
     print("name,us_per_call,derived", flush=True)
     rows: list[str] = []
@@ -72,6 +95,7 @@ def main(argv: list[str] | None = None) -> None:
     if json_path is not None:
         payload = {
             "schema": JSON_SCHEMA,
+            "git_sha": git_sha(),
             "fast": fast,
             "rows": [parse_row(r) for r in rows],
         }

@@ -9,6 +9,8 @@ from repro.core.hsa.queue import (
     KernelDispatchPacket,
     Queue,
     QueueFullError,
+    call_packet,
+    dispatch_packet,
 )
 from repro.core.hsa.runtime import HsaSystem, hsa_init, hsa_shut_down, hsa_system
 from repro.core.hsa.scheduler import (
@@ -17,7 +19,7 @@ from repro.core.hsa.scheduler import (
     SchedulerDeadlock,
     QueueStats,
 )
-from repro.core.hsa.signal import Signal
+from repro.core.hsa.signal import CompositeSignal, Signal, wait_all
 
 __all__ = [
     "Agent",
@@ -32,6 +34,8 @@ __all__ = [
     "KernelDispatchPacket",
     "Queue",
     "QueueFullError",
+    "call_packet",
+    "dispatch_packet",
     "HsaSystem",
     "hsa_init",
     "hsa_shut_down",
@@ -40,5 +44,7 @@ __all__ = [
     "Scheduler",
     "SchedulerDeadlock",
     "QueueStats",
+    "CompositeSignal",
     "Signal",
+    "wait_all",
 ]

@@ -18,12 +18,15 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+import time
 from typing import Any, Callable, Sequence
 
+from repro.core import ledger as ledger_mod
 from repro.core.hsa.signal import Signal
 from repro.core.roles import RoleKey
 
 _QUEUE_IDS = itertools.count()
+_BURST_IDS = itertools.count(1)
 
 
 class Box:
@@ -53,6 +56,8 @@ class KernelDispatchPacket:
     out: Box = dataclasses.field(default_factory=Box)
     producer: str = "tf"                # who enqueued: "tf" | "opencl" | "openmp" | ...
     enqueue_t: float | None = None      # stamped by Queue.submit when a clock is attached
+    burst_id: int | None = None         # set by submit_burst: shared by the whole burst
+    burst_n: int = 1                    # packets in that burst (1 = plain submit)
 
     def __post_init__(self) -> None:
         if (self.role_key is None) == (self.fn is None):
@@ -70,6 +75,8 @@ class BarrierAndPacket:
     deps: tuple[Signal, ...]
     completion: Signal | None = None
     enqueue_t: float | None = None
+    burst_id: int | None = None
+    burst_n: int = 1
 
 
 Packet = KernelDispatchPacket | BarrierAndPacket
@@ -77,6 +84,30 @@ Packet = KernelDispatchPacket | BarrierAndPacket
 
 class QueueFullError(RuntimeError):
     pass
+
+
+def dispatch_packet(
+    role_key: RoleKey, *args: Any, producer: str = "tf",
+    deps: Sequence[Signal] = (),
+) -> KernelDispatchPacket:
+    """Build (don't submit) a region-managed dispatch packet — the unit a
+    burst is assembled from before one :meth:`Queue.submit_burst`."""
+    return KernelDispatchPacket(
+        role_key=role_key, args=args, deps=tuple(deps),
+        completion=Signal(1, name=f"done:{role_key}"), producer=producer,
+    )
+
+
+def call_packet(
+    fn: Callable[..., Any], *args: Any, producer: str = "tf",
+    deps: Sequence[Signal] = (),
+) -> KernelDispatchPacket:
+    """Build (don't submit) a pinned-shell dispatch packet."""
+    return KernelDispatchPacket(
+        fn=fn, args=args, deps=tuple(deps),
+        completion=Signal(1, name=f"done:{getattr(fn, '__name__', 'fn')}"),
+        producer=producer,
+    )
 
 
 class Queue:
@@ -105,6 +136,7 @@ class Queue:
         self.name = name if name is not None else f"q{next(_QUEUE_IDS)}"
         self.weight = weight
         self.clock = clock                 # optional: stamps packet enqueue times
+        self.ledger = None                 # optional: records dispatch_submit (set on add_queue)
         self._ring: list[Packet | None] = [None] * size
         self._write = 0
         self._read = 0
@@ -114,18 +146,76 @@ class Queue:
 
     # -- producer side -----------------------------------------------------------
 
-    def submit(self, packet: Packet) -> int:
-        if self.clock is not None and packet.enqueue_t is None:
-            packet.enqueue_t = self.clock.now()
+    def _write_packets(self, packets: Sequence[Packet]) -> int:
+        """Ring-write + one doorbell store + one scheduler notify; returns the
+        first packet's index.  The shared tail of submit/submit_burst."""
+        now = self.clock.now() if self.clock is not None else None
+        for packet in packets:
+            if now is not None and packet.enqueue_t is None:
+                packet.enqueue_t = now
         with self._lock:
-            if self._write - self._read >= self.size:
+            if self._write - self._read + len(packets) > self.size:
                 raise QueueFullError(f"queue {self.name} full ({self.size} packets)")
             idx = self._write
-            self._ring[idx % self.size] = packet
-            self._write += 1
-        self.doorbell.store(self._write)      # ring the doorbell
+            for packet in packets:
+                self._ring[self._write % self.size] = packet
+                self._write += 1
+        self.doorbell.store(self._write)      # ring the doorbell (once per burst)
         if self._notify is not None:
             self._notify()
+        return idx
+
+    def _record_submit(self, packets: Sequence[Packet], seconds: float) -> None:
+        if self.ledger is None:
+            return
+        per_pkt = seconds / len(packets)
+        for packet in packets:
+            self.ledger.record(
+                ledger_mod.DISPATCH_SUBMIT, per_pkt, queue=self.name,
+                producer=getattr(packet, "producer", None),
+                burst=len(packets),
+            )
+
+    def submit(self, packet: Packet) -> int:
+        t0 = time.perf_counter_ns()
+        idx = self._write_packets((packet,))
+        self._record_submit((packet,), (time.perf_counter_ns() - t0) * 1e-9)
+        return idx
+
+    def submit_burst(self, packets: Sequence[Packet]) -> int:
+        """Write N packets and ring the doorbell **once** (burst AQL submission).
+
+        The whole burst shares one ``burst_id`` (the scheduler's grant loop
+        uses it to drain the burst in a single wakeup) and the measured
+        submit cost is divided over the N packets in the ledger — the
+        amortization Table II's invocation row is split to expose.  Packets
+        may carry dependency signals on each other (a chained decode burst);
+        in-order consumption guarantees a packet's intra-burst deps precede
+        it.  Returns the first packet's ring index.
+        """
+        packets = list(packets)
+        if not packets:
+            raise ValueError("submit_burst needs at least one packet")
+        t0 = time.perf_counter_ns()
+        bid = next(_BURST_IDS)
+        unstamped = [p for p in packets if p.enqueue_t is None]
+        for packet in packets:
+            packet.burst_id = bid
+            packet.burst_n = len(packets)
+        try:
+            idx = self._write_packets(packets)
+        except QueueFullError:
+            # nothing was written: revert the burst stamps so a caller that
+            # falls back to individual submits doesn't carry a dead burst_id
+            # (which would fuse its retries into one grant pass) or a stale
+            # enqueue_t (which would inflate WAIT on retry)
+            for packet in packets:
+                packet.burst_id = None
+                packet.burst_n = 1
+            for packet in unstamped:
+                packet.enqueue_t = None
+            raise
+        self._record_submit(packets, (time.perf_counter_ns() - t0) * 1e-9)
         return idx
 
     def dispatch(
@@ -135,13 +225,7 @@ class Queue:
         producer: str = "tf",
         deps: Sequence[Signal] = (),
     ) -> KernelDispatchPacket:
-        pkt = KernelDispatchPacket(
-            role_key=role_key,
-            args=args,
-            deps=tuple(deps),
-            completion=Signal(1, name=f"done:{role_key}"),
-            producer=producer,
-        )
+        pkt = dispatch_packet(role_key, *args, producer=producer, deps=deps)
         self.submit(pkt)
         return pkt
 
@@ -153,13 +237,7 @@ class Queue:
         deps: Sequence[Signal] = (),
     ) -> KernelDispatchPacket:
         """Dispatch a pinned-shell callable (no region management)."""
-        pkt = KernelDispatchPacket(
-            fn=fn,
-            args=args,
-            deps=tuple(deps),
-            completion=Signal(1, name=f"done:{getattr(fn, '__name__', 'fn')}"),
-            producer=producer,
-        )
+        pkt = call_packet(fn, *args, producer=producer, deps=deps)
         self.submit(pkt)
         return pkt
 

@@ -148,6 +148,7 @@ class Scheduler:
         cost_model: Callable[[str, str, float], float] | None = None,
         overlap_reconfig: bool = True,
         lookahead: "PrefetchPolicy | int" = 0,
+        burst_grants: bool = True,
         keep_events: int = 100_000,
     ) -> None:
         if policy not in POLICIES:
@@ -163,6 +164,7 @@ class Scheduler:
         self.cost_model = cost_model or _default_cost
         self.overlap_reconfig = overlap_reconfig
         self.lookahead = PrefetchPolicy.of(lookahead).lookahead
+        self.burst_grants = burst_grants
         self.keep_events = keep_events
 
         self.queues: list[Queue] = []
@@ -197,6 +199,7 @@ class Scheduler:
         if any(q.name == queue.name for q in self.queues):
             raise ValueError(f"duplicate queue name {queue.name!r}")
         queue.clock = self.clock
+        queue.ledger = self.ledger                 # dispatch_submit attribution
         queue._notify = self._ring                 # doorbell fan-in
         self.queues.append(queue)
         self.stats[queue.name] = QueueStats()
@@ -337,7 +340,7 @@ class Scheduler:
                 continue
             if self.policy != RANDOM:
                 self._grant_ptr = (gi + 1) % width
-            return self._process(q, pkt, now)
+            return self._grant(q, pkt, now)
 
         # nothing ready now: on a virtual clock, jump to the next retire
         # (stall or in-flight prefetch, whichever completes first)
@@ -367,6 +370,29 @@ class Scheduler:
                 "(dependency signal never reaches 0)"
             )
         return None
+
+    def _grant(self, q: Queue, pkt: Packet, now: float) -> SchedEvent:
+        """Process one granted packet — and, when it opened a burst, keep
+        draining that burst in the same wakeup (burst AQL submission: one
+        doorbell delivered N packets, so one grant pass retires up to N).
+
+        The drain stops at the first packet that cannot flow — stalled on a
+        reconfiguration, or deps unsatisfied — and never crosses a burst
+        boundary, so round-robin fairness is preserved at burst granularity
+        (a tenant's turn covers its burst, not its whole queue).
+        """
+        ev = self._process(q, pkt, now)
+        bid = getattr(pkt, "burst_id", None)
+        if not self.burst_grants or bid is None:
+            return ev
+        while q.name not in self._stalls:
+            nxt = q.peek()
+            if nxt is None or getattr(nxt, "burst_id", None) != bid:
+                break
+            if not self._deps_zero(nxt.deps):
+                break
+            ev = self._process(q, nxt, self.clock.now())
+        return ev
 
     # -- reconfiguration prefetch (the lookahead pipeline) -----------------------
 
@@ -645,6 +671,7 @@ class Scheduler:
 
     def _exec(self, q: Queue, pkt: KernelDispatchPacket, role: Any,
               now: float) -> SchedEvent:
+        g0 = time.perf_counter_ns()        # grant leg: pick-up -> launch returned
         start = max(now, self._compute_free_t, self._deps_time(pkt.deps, now))
         q.pop()
         st = self.stats[q.name]
@@ -680,6 +707,11 @@ class Scheduler:
             self.ledger.record(
                 ledger_mod.DISPATCH, (t1 - t0) * 1e-9,
                 role=pkt.what, producer=pkt.producer, queue=q.name,
+            )
+            self.ledger.record(
+                ledger_mod.DISPATCH_GRANT, (t1 - g0) * 1e-9,
+                role=pkt.what, producer=pkt.producer, queue=q.name,
+                burst=pkt.burst_n,
             )
             out = jax.block_until_ready(out)
             t2 = time.perf_counter_ns()

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable
+from typing import Callable, Iterable
 
 
 class Signal:
@@ -75,3 +75,54 @@ class Signal:
 
     def __repr__(self) -> str:
         return f"Signal({self.load()}, name={self.name!r})"
+
+
+def wait_all(
+    signals: Iterable["Signal"],
+    target: int = 0,
+    timeout: float | None = None,
+) -> bool:
+    """Block until every signal reads ``target``; one wait covers a burst.
+
+    The sequential component waits share a single deadline, so the total
+    blocking time is bounded by ``timeout`` regardless of completion order
+    (waiting on an already-satisfied signal returns immediately, so order
+    only affects which signal eats the remaining budget on timeout).
+    Returns False as soon as the deadline expires with any signal unmet.
+    """
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for sig in signals:
+        remaining = None if deadline is None else deadline - time.monotonic()
+        if not sig.wait_eq(target, remaining):
+            return False
+    return True
+
+
+class CompositeSignal:
+    """Aggregate read/wait view over a burst's completion signals.
+
+    HSA has no N-way completion object; the idiom is one barrier-AND packet
+    or a host-side wait over all signals.  This is the host-side form: it
+    quacks like a :class:`Signal` for the read/wait subset (``load`` returns
+    the number of components not yet at 0; ``wait_eq(0)`` blocks until every
+    component reads 0), so producer code that waits one packet's completion
+    can wait a whole burst through the same call site.
+    """
+
+    def __init__(self, signals: Iterable[Signal], name: str = "") -> None:
+        self.signals = tuple(signals)
+        self.name = name or f"composite[{len(self.signals)}]"
+
+    def load(self) -> int:
+        return sum(1 for s in self.signals if s.load() != 0)
+
+    def wait_eq(self, target: int = 0, timeout: float | None = None) -> bool:
+        if target != 0:
+            raise ValueError("CompositeSignal only supports waiting to 0")
+        return wait_all(self.signals, 0, timeout)
+
+    def __len__(self) -> int:
+        return len(self.signals)
+
+    def __repr__(self) -> str:
+        return f"CompositeSignal(pending={self.load()}/{len(self.signals)}, name={self.name!r})"

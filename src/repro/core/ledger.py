@@ -34,6 +34,24 @@ DISPATCH = "dispatch"
 EXEC = "exec"                 # kernel execution proper (not in Table II, kept for Table III)
 WAIT = "wait"                 # queue residency: submit -> launch grant (scheduler)
 
+# Table II row 3 ("dispatch latency"), split along the packet round trip.
+# One kernel invocation through the HSA layer costs the producer a full
+# submit -> doorbell -> grant -> completion-wait cycle; fused multi-token
+# decode and burst AQL submission amortize exactly these three host-side
+# legs, so they are ledgered separately (DISPATCH keeps the legacy
+# launch-call measurement for Table II continuity):
+#
+#   dispatch_submit  producer writes the packet(s) + rings the doorbell
+#                    (one doorbell per *burst*: submit_burst divides the
+#                    measured cost over its N packets)
+#   dispatch_grant   scheduler host time from picking the packet up to the
+#                    launch call returning (the grant leg of the round trip)
+#   dispatch_wait    producer blocks on the completion signal(s) (one
+#                    wait_all over a burst divides over its N packets)
+DISPATCH_SUBMIT = "dispatch_submit"
+DISPATCH_GRANT = "dispatch_grant"
+DISPATCH_WAIT = "dispatch_wait"
+
 # Table II row 2, split by whether the load stalled a queue.  RECONFIG keeps
 # the *measured* load time (recorded by RegionManager at the choke point);
 # the scheduler additionally attributes each load's schedule time as
@@ -45,7 +63,7 @@ RECONFIG_EXPOSED = "reconfig_exposed"
 RECONFIG_HIDDEN = "reconfig_hidden"
 
 CATEGORIES = (SETUP, RECONFIG, RECONFIG_EXPOSED, RECONFIG_HIDDEN, DISPATCH,
-              EXEC, WAIT)
+              DISPATCH_SUBMIT, DISPATCH_GRANT, DISPATCH_WAIT, EXEC, WAIT)
 
 OCCURRENCE = {
     SETUP: "once",
@@ -53,6 +71,9 @@ OCCURRENCE = {
     RECONFIG_EXPOSED: "if not configured",
     RECONFIG_HIDDEN: "if not configured",
     DISPATCH: "every dispatch",
+    DISPATCH_SUBMIT: "every dispatch",
+    DISPATCH_GRANT: "every dispatch",
+    DISPATCH_WAIT: "every dispatch",
     EXEC: "every dispatch",
     WAIT: "every dispatch",
 }
@@ -91,6 +112,7 @@ class OverheadLedger:
         self._stats: dict[str, Stat] = {c: Stat() for c in CATEGORIES}
         self._entries: list[Entry] | None = [] if keep_entries else None
         self._by_queue: dict[str, dict[str, Stat]] = {}
+        self._by_producer: dict[str, dict[str, Stat]] = {}
 
     def record(self, category: str, seconds: float, **meta: Any) -> None:
         if category not in self._stats:
@@ -100,6 +122,9 @@ class OverheadLedger:
             if "queue" in meta and meta["queue"] is not None:
                 per_q = self._by_queue.setdefault(str(meta["queue"]), {})
                 per_q.setdefault(category, Stat()).add(seconds)
+            if "producer" in meta and meta["producer"] is not None:
+                per_p = self._by_producer.setdefault(str(meta["producer"]), {})
+                per_p.setdefault(category, Stat()).add(seconds)
             if self._entries is not None:
                 self._entries.append(Entry(category, seconds, meta))
 
@@ -128,10 +153,22 @@ class OverheadLedger:
                 for q, per_q in self._by_queue.items()
             }
 
+    def producer_breakdown(self) -> dict[str, dict[str, Stat]]:
+        """Per-producer stats for entries recorded with ``producer=`` meta —
+        the dispatch_submit/grant/wait split Table II's invocation row
+        decomposes into, attributed to whoever pays it (the TF serving
+        engine, an OpenCL-style tenant, ...)."""
+        with self._lock:
+            return {
+                p: {c: dataclasses.replace(s) for c, s in per_p.items()}
+                for p, per_p in self._by_producer.items()
+            }
+
     def reset(self) -> None:
         with self._lock:
             self._stats = {c: Stat() for c in CATEGORIES}
             self._by_queue = {}
+            self._by_producer = {}
             if self._entries is not None:
                 self._entries = []
 
@@ -153,6 +190,30 @@ class OverheadLedger:
                 "hidden_n": float(hidden.count),
             }
 
+    def dispatch_split(self) -> dict[str, float]:
+        """Invocation-overhead round trip, split per leg (Table II row 3).
+
+        Totals and counts for dispatch_submit / dispatch_grant /
+        dispatch_wait, plus ``per_packet_us`` (sum of the three legs divided
+        by the submit count — the per-packet invocation cost fused decode and
+        burst submission amortize)."""
+        with self._lock:
+            sub = self._stats[DISPATCH_SUBMIT]
+            grant = self._stats[DISPATCH_GRANT]
+            wait = self._stats[DISPATCH_WAIT]
+            total = sub.total_s + grant.total_s + wait.total_s
+            n = max(sub.count, grant.count, wait.count)
+            return {
+                "submit_s": sub.total_s,
+                "grant_s": grant.total_s,
+                "wait_s": wait.total_s,
+                "submit_n": float(sub.count),
+                "grant_n": float(grant.count),
+                "wait_n": float(wait.count),
+                "total_s": total,
+                "per_packet_us": (total / n) * 1e6 if n else 0.0,
+            }
+
     # -- reporting ----------------------------------------------------------
 
     def summary(self) -> dict[str, dict[str, float]]:
@@ -169,7 +230,10 @@ class OverheadLedger:
     def table(self) -> str:
         """Paper Table II layout: operation | occurrence | mean microseconds."""
         rows = [("Operation", "Occurrence", "Mean [us]", "n")]
-        for cat in (SETUP, RECONFIG, RECONFIG_EXPOSED, RECONFIG_HIDDEN, DISPATCH):
+        split_rows = (RECONFIG_EXPOSED, RECONFIG_HIDDEN,
+                      DISPATCH_SUBMIT, DISPATCH_GRANT, DISPATCH_WAIT)
+        for cat in (SETUP, RECONFIG, RECONFIG_EXPOSED, RECONFIG_HIDDEN,
+                    DISPATCH, DISPATCH_SUBMIT, DISPATCH_GRANT, DISPATCH_WAIT):
             s = self.stat(cat)
             label = {
                 SETUP: "device/kernel setup",
@@ -177,8 +241,11 @@ class OverheadLedger:
                 RECONFIG_EXPOSED: "  - exposed (queue stalled)",
                 RECONFIG_HIDDEN: "  - hidden (prefetched)",
                 DISPATCH: "dispatch latency",
+                DISPATCH_SUBMIT: "  - submit (packet + doorbell)",
+                DISPATCH_GRANT: "  - grant (scheduler launch)",
+                DISPATCH_WAIT: "  - wait (completion signal)",
             }[cat]
-            if cat in (RECONFIG_EXPOSED, RECONFIG_HIDDEN) and s.count == 0:
+            if cat in split_rows and s.count == 0:
                 continue                   # keep the paper's 3-row layout unless split
             rows.append((label, OCCURRENCE[cat], f"{s.mean_us:.1f}", str(s.count)))
         widths = [max(len(r[i]) for r in rows) for i in range(4)]

@@ -52,6 +52,66 @@ class PrefetchPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusionPolicy:
+    """Pick the decode fusion depth K for a serving engine.
+
+    One fused launch generates up to K tokens per slot in a single packet
+    round trip, amortizing the per-packet invocation overhead (Table II row
+    3) K-fold.  The trade-offs the policy balances:
+
+      - **mean request length** caps useful depth: scanning past every live
+        slot's remaining budget burns masked (wasted) decode steps;
+      - **queue depth** (packets other tenants have pending on the shared
+        device) argues for *smaller* K: one fused launch occupies the compute
+        engine for K tokens, so deep foreign backlogs halve K per
+        ``fairness_depth`` pending packets — the batch-vs-latency knob the
+        toolflow surveys frame as launch amortization vs responsiveness.
+
+    The result is rounded down to a power of two so the engine's jitted
+    fused-decode trace cache stays small (same reasoning as prompt
+    bucketing: a distinct K is a distinct trace is a re-synthesis).
+    """
+
+    max_fusion: int = 8
+    min_fusion: int = 1
+    fairness_depth: int = 8
+
+    def __post_init__(self) -> None:
+        if self.min_fusion < 1:
+            raise ValueError(f"min_fusion must be >= 1, got {self.min_fusion}")
+        if self.max_fusion < self.min_fusion:
+            raise ValueError(
+                f"max_fusion {self.max_fusion} < min_fusion {self.min_fusion}"
+            )
+        if self.fairness_depth < 0:
+            raise ValueError(f"fairness_depth must be >= 0, got {self.fairness_depth}")
+
+    @classmethod
+    def of(cls, value: "FusionPolicy | int | None") -> "FusionPolicy":
+        if value is None:
+            return cls(1, 1)
+        if isinstance(value, FusionPolicy):
+            return value
+        k = int(value)
+        return cls(max_fusion=max(1, k), min_fusion=max(1, k))
+
+    def choose_k(self, *, queue_depth: int = 0,
+                 mean_request_len: float = 0.0) -> int:
+        k = self.max_fusion
+        if mean_request_len > 0:
+            k = min(k, max(self.min_fusion, int(mean_request_len)))
+        if self.fairness_depth > 0 and queue_depth > 0:
+            # halve once per fairness_depth foreign packets pending (capped so
+            # the shift below stays defined for absurd backlogs)
+            k >>= min(queue_depth // self.fairness_depth, k.bit_length())
+        k = max(self.min_fusion, min(k, self.max_fusion))
+        p = 1
+        while p * 2 <= k:
+            p *= 2
+        return max(self.min_fusion, p)     # the floor wins over pow2 rounding
+
+
+@dataclasses.dataclass(frozen=True)
 class Invocation:
     """One op call site in a model step: (op type, site id e.g. layer index)."""
 

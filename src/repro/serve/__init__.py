@@ -1,1 +1,7 @@
-from repro.serve.engine import Request, ServeEngine, make_decode_step, make_prefill_step
+from repro.serve.engine import (
+    Request,
+    ServeEngine,
+    ServeTruncated,
+    make_decode_step,
+    make_prefill_step,
+)

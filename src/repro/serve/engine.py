@@ -6,11 +6,21 @@ over TP).  The :class:`ServeEngine` implements continuous-batching-lite over
 fixed slots — requests join free slots, finished slots are recycled — and can
 route its launches through the HSA queue so serving shares the accelerator
 with other producers (the paper's multi-tenancy story).
+
+**Fused multi-token decode** (``decode_fusion=K``): one launch runs a jitted
+``lax.scan`` of K decode steps with on-device sampling, so the per-launch
+packet round trip (submit -> doorbell -> grant -> completion wait — Table
+II's invocation row) is paid once per K tokens instead of per token.
+Sampling is position-indexed per request (``fold_in(fold_in(seed_key, uid),
+token_index)``), so token streams are bitwise-identical across fusion depths
+— a finished slot is masked out mid-scan, never resampled, and host-side
+splicing takes exactly each request's remaining budget.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
@@ -20,6 +30,8 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core import ledger as ledger_mod
+from repro.core.policy import FusionPolicy
 from repro.dist import act
 from repro.dist.sharding import ShardingRules
 from repro.train.step import batch_shardings, moe_mesh_info
@@ -144,6 +156,23 @@ class Request:
     done: bool = False
 
 
+class ServeTruncated(RuntimeError):
+    """``run_to_completion`` exhausted ``max_steps`` with work still pending.
+
+    Carries the partial result so callers can't mistake truncation for
+    completion: ``done`` holds the finished requests, ``pending`` the
+    still-active and still-queued ones (in-flight generations intact).
+    """
+
+    def __init__(self, done: list[Request], pending: list[Request]) -> None:
+        self.done = done
+        self.pending = pending
+        super().__init__(
+            f"serving truncated at max_steps: {len(done)} requests done, "
+            f"{len(pending)} pending"
+        )
+
+
 class ServeEngine:
     """Fixed-slot batched decoder with slot recycling.
 
@@ -155,6 +184,7 @@ class ServeEngine:
 
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 256, temperature: float = 0.0, seed: int = 0,
+                 decode_fusion: "int | FusionPolicy" = 1,
                  hsa_queue=None, hsa_scheduler=None, producer: str = "tf-serving",
                  bucket_prompts: bool = True, min_bucket: int = 8):
         self.model = model
@@ -163,12 +193,24 @@ class ServeEngine:
         self.slots = batch_slots
         self.max_len = max_len
         self.temperature = temperature
-        self._rng = np.random.default_rng(seed)
         self._queue: list[Request] = []
         self._active: dict[int, Request] = {}      # slot -> request
         self._uid = 0
         self._cache = None
         self._pos = np.zeros(batch_slots, np.int64)
+        # fused multi-token decode: K tokens per launch (int) or a FusionPolicy
+        # choosing K per launch from contention and remaining request length
+        self.decode_fusion = decode_fusion
+        self._fused_cache: dict[int, Callable[..., Any]] = {}
+        # sampling is position-indexed per request: token t of request uid is
+        # drawn with fold_in(fold_in(base_key, uid), t), never from a shared
+        # sequential stream — so the token sequence of a request depends only
+        # on (seed, uid, logits), not on admission order or fusion depth
+        self._base_key = jax.random.PRNGKey(seed)
+        self._slot_key = np.zeros(
+            (batch_slots,) + np.shape(self._base_key), np.uint32
+        )
+        self._slot_tok = np.zeros(batch_slots, np.int32)
         # optional HSA routing: prefill/decode launches become queue packets so
         # serving shares the agent with other producers (paper multi-tenancy)
         if (hsa_queue is None) != (hsa_scheduler is None):
@@ -208,6 +250,7 @@ class ServeEngine:
         else:
             call = fn
         pkt = self._hsa_queue.call(call, *args, producer=self._producer)
+        t0 = time.perf_counter_ns()
         if getattr(self._hsa_scheduler, "running", False):
             # the scheduler's worker thread owns the consume side: never run
             # the cooperative loop concurrently, just wait for completion
@@ -216,6 +259,14 @@ class ServeEngine:
             # drain only our queue: another tenant's dep-blocked packet must
             # not wedge (or deadlock) a decode step
             self._hsa_scheduler.drain(self._hsa_queue)
+        if self._hsa_queue.ledger is not None:
+            # the producer-blocked leg of the packet round trip (overlaps the
+            # device execution it waits on; subtract EXEC for pure overhead)
+            self._hsa_queue.ledger.record(
+                ledger_mod.DISPATCH_WAIT, (time.perf_counter_ns() - t0) * 1e-9,
+                queue=self._hsa_queue.name, producer=self._producer,
+                what=getattr(call, "__name__", "serve_step"),
+            )
         if pkt.out.error is not None:
             raise pkt.out.error
         return pkt.out.value
@@ -283,8 +334,11 @@ class ServeEngine:
                 self.model.decode_step, self.params,
                 jnp.asarray(req.prompt[-1:][None, :]), fix_cache,
             )
-        tok = self._sample(np.asarray(logits, np.float32)[0])
+        req_key = np.asarray(jax.random.fold_in(self._base_key, req.uid))
+        tok = self._sample_token(np.asarray(logits, np.float32)[0], req_key, 0)
         req.generated.append(int(tok))
+        self._slot_key[slot] = req_key
+        self._slot_tok[slot] = tok
         if self._cache is None:
             # allocate the batched cache (batch axis 1 under the layer stack)
             self._cache = {
@@ -302,16 +356,100 @@ class ServeEngine:
         )
         self._pos[slot] = len(req.prompt)
 
-    def _sample(self, logits: np.ndarray) -> int:
+    def _sample_token(self, logits: np.ndarray, req_key: np.ndarray,
+                      t: int) -> int:
+        """Sample token ``t`` of one request from its position-indexed key.
+
+        The same formula the fused scan applies on-device — greedy argmax, or
+        ``categorical(fold_in(req_key, t), logits / T)`` — so host-sampled
+        tokens (the prefill's first token) and scan-sampled tokens come from
+        one deterministic stream.
+        """
         if self.temperature <= 0:
             return int(np.argmax(logits))
-        z = logits / self.temperature
-        z = z - z.max()
-        p = np.exp(z) / np.exp(z).sum()
-        return int(self._rng.choice(len(p), p=p))
+        sub = jax.random.fold_in(jnp.asarray(req_key), t)
+        return int(jax.random.categorical(
+            sub, jnp.asarray(logits) / self.temperature
+        ))
+
+    # -- fused multi-token decode -------------------------------------------------
+
+    def _fused_decode_fn(self, k: int):
+        """Jitted ``lax.scan`` of ``k`` decode steps with on-device sampling.
+
+        Carry is ``(segments, pos, tok, counts, active, remaining)`` —
+        everything per-slot.  A slot whose budget runs out mid-scan is masked:
+        its position freezes, its token holds, and the emitted-validity mask
+        goes False, so the host splices exactly each request's remaining
+        tokens.  (The masked slot's cache rows keep absorbing dummy writes at
+        its frozen position; harmless, since a recycled slot's cache is
+        replaced wholesale at the next prefill.)
+        """
+        fn = self._fused_cache.get(k)
+        if fn is not None:
+            return fn
+        model, temp = self.model, self.temperature
+
+        def sample(logits, keys, counts):
+            if temp > 0:
+                sub = jax.vmap(jax.random.fold_in)(keys, counts)
+                return jax.vmap(
+                    lambda row, s: jax.random.categorical(s, row / temp)
+                )(logits, sub)
+            return jnp.argmax(logits, axis=-1)
+
+        def fused(params, segments, pos, tok, keys, counts, active, remaining):
+            def body(carry, _):
+                segments, pos, tok, counts, active, remaining = carry
+                logits, new_cache = model.decode_step(
+                    params, tok[:, None], {"pos": pos, "segments": segments}
+                )
+                nxt = jnp.where(active, sample(logits, keys, counts).astype(jnp.int32), tok)
+                emitted = active
+                pos = jnp.where(active, pos + 1, pos)
+                counts = jnp.where(active, counts + 1, counts)
+                remaining = jnp.where(active, remaining - 1, remaining)
+                active = active & (remaining > 0)
+                carry = (new_cache["segments"], pos, nxt, counts, active, remaining)
+                return carry, (nxt, emitted)
+
+            carry0 = (segments, pos, tok, counts, active, remaining)
+            carry, (toks, valid) = jax.lax.scan(body, carry0, None, length=k)
+            segments, pos, tok, counts, _, _ = carry
+            return segments, pos, tok, toks, valid
+
+        fused.__name__ = f"decode_fused_k{k}"
+        fn = jax.jit(fused)
+        fn.__name__ = fused.__name__
+        self._fused_cache[k] = fn
+        return fn
+
+    def _choose_fusion(self) -> int:
+        """Fusion depth for this launch: the static knob, or the policy fed
+        with live contention (foreign packets pending on the shared device)
+        and the mean remaining budget of the active slots."""
+        remaining = [
+            r.max_new_tokens - len(r.generated) for r in self._active.values()
+        ]
+        if isinstance(self.decode_fusion, FusionPolicy):
+            depth = 0
+            if self._hsa_scheduler is not None:
+                depth = sum(
+                    q.pending() for q in self._hsa_scheduler.queues
+                    if q is not self._hsa_queue
+                )
+            k = self.decode_fusion.choose_k(
+                queue_depth=depth,
+                mean_request_len=sum(remaining) / max(1, len(remaining)),
+            )
+        else:
+            k = int(self.decode_fusion)
+        # never scan past every live slot's budget: those steps are all-masked
+        return max(1, min(k, max(remaining, default=1)))
 
     def step(self) -> list[Request]:
-        """Admit queued requests, decode one token for all live slots.
+        """Admit queued requests, decode up to ``decode_fusion`` tokens for
+        all live slots in one fused launch.
 
         Returns requests completed this step.
         """
@@ -323,24 +461,32 @@ class ServeEngine:
         if not self._active:
             return []
 
-        tokens = np.zeros((self.slots, 1), np.int32)
+        k = self._choose_fusion()
+        counts = np.zeros(self.slots, np.int32)
+        remaining = np.zeros(self.slots, np.int32)
+        active = np.zeros(self.slots, bool)
         for slot, req in self._active.items():
-            tokens[slot, 0] = req.generated[-1]
+            self._slot_tok[slot] = req.generated[-1]
+            counts[slot] = len(req.generated)
+            remaining[slot] = req.max_new_tokens - len(req.generated)
+            active[slot] = remaining[slot] > 0
         # per-slot positions: continuous batching — slots joined at different
         # times decode against their own sequence positions
-        cache = {"pos": jnp.asarray(self._pos, jnp.int32),
-                 "segments": self._cache["segments"]}
-        logits, new_cache = self._launch(
-            self.model.decode_step, self.params, jnp.asarray(tokens), cache
+        segments, pos, tok, toks, valid = self._launch(
+            self._fused_decode_fn(k), self.params, self._cache["segments"],
+            jnp.asarray(self._pos, jnp.int32), jnp.asarray(self._slot_tok),
+            jnp.asarray(self._slot_key), jnp.asarray(counts),
+            jnp.asarray(active), jnp.asarray(remaining),
         )
-        self._cache = {"segments": new_cache["segments"]}
-        self._pos += 1
-        logits = np.asarray(logits, np.float32)
+        self._cache = {"segments": segments}
+        self._pos = np.asarray(pos, np.int64)
+        self._slot_tok = np.asarray(tok, np.int32).copy()
+        toks = np.asarray(toks)                      # [k, slots]
+        valid = np.asarray(valid)                    # [k, slots]
 
         finished = []
         for slot, req in list(self._active.items()):
-            tok = self._sample(logits[slot])
-            req.generated.append(tok)
+            req.generated.extend(int(t) for t in toks[valid[:, slot], slot])
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 finished.append(req)
@@ -348,9 +494,17 @@ class ServeEngine:
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        """Step until every submitted request finishes; the completed requests.
+
+        Raises :class:`ServeTruncated` (carrying the partial ``done`` /
+        ``pending`` split) if ``max_steps`` launches were not enough —
+        truncation is never silently returned as success.
+        """
         done: list[Request] = []
         for _ in range(max_steps):
             done += self.step()
             if not self._active and not self._queue:
-                break
+                return done
+        if self._active or self._queue:
+            raise ServeTruncated(done, list(self._active.values()) + list(self._queue))
         return done

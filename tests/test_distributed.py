@@ -10,6 +10,11 @@ import sys
 
 import pytest
 
+# every case spawns a fresh interpreter that recompiles the model under
+# --xla_force_host_platform_device_count=4 (~5-8 min each): tier-1 skips
+# them via the `slow` marker; CI's non-blocking slow job runs them
+pytestmark = pytest.mark.slow
+
 COMMON = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

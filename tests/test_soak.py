@@ -1,0 +1,121 @@
+"""Threaded (WallClock) scheduler soak: the ROADMAP open item.
+
+Multi-producer stress against the *threaded* scheduler (``start()``), with
+real reconfiguration offload — roles whose working set exceeds the region
+count, so the background reconfig pool continuously loads/evicts real XLA
+executables while producer threads keep submitting (singles, chained bursts,
+and barriers).  Bounded runtime: every wait carries a timeout, and the
+asserts are "no deadlock, no lost completion, no error", not timing.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401
+from repro.core.hsa import Queue, Scheduler, WallClock, call_packet, wait_all
+from repro.core.hsa.queue import dispatch_packet
+from repro.core.ledger import OverheadLedger
+from repro.core.reconfig import RegionManager
+from repro.core.registry import GLOBAL_REGISTRY
+from repro.core.roles import Role, RoleLibrary
+
+TIMEOUT_S = 120.0          # hard bound: the test fails, not hangs, on deadlock
+PRODUCERS = 3
+PACKETS_PER_PRODUCER = 12
+
+
+def _mk_role(lib, n, name):
+    impl = GLOBAL_REGISTRY.resolve("matmul", "any", ("xla",))
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    return lib.add(Role(impl, (a, a), name=name))
+
+
+def test_threaded_scheduler_soak_no_deadlock_no_lost_completion():
+    led = OverheadLedger()
+    lib = RoleLibrary(ledger=led)
+    # 4 roles over 2 regions: every producer's role cycle keeps missing
+    # residency, so reconfigurations run on the background pool throughout
+    roles = [_mk_role(lib, n, f"soak_mm{n}") for n in (8, 12, 16, 24)]
+    regions = RegionManager(2, ledger=led)
+    sched = Scheduler(regions, lib, ledger=led, clock=WallClock(), lookahead=2)
+    queues = [
+        sched.add_queue(Queue(None, 256, name=f"prod{i}"))
+        for i in range(PRODUCERS)
+    ]
+    sched.start(reconfig_workers=2)
+
+    all_pkts: list = []
+    pkts_lock = threading.Lock()
+    errors: list = []
+
+    def producer(idx: int) -> None:
+        try:
+            q = queues[idx]
+            local = []
+            prev = None
+            for j in range(PACKETS_PER_PRODUCER):
+                role = roles[(idx + j) % len(roles)]
+                n = int(role.name.replace("soak_mm", ""))
+                x = jnp.ones((n, n))
+                if j % 4 == 3:
+                    # every 4th packet: a chained 2-packet burst (one doorbell)
+                    first = dispatch_packet(
+                        role.key, x, x, producer=f"p{idx}",
+                        deps=(prev.completion,) if prev is not None else (),
+                    )
+                    second = call_packet(
+                        lambda v=n: v, producer=f"p{idx}",
+                        deps=(first.completion,),
+                    )
+                    q.submit_burst([first, second])
+                    local += [first, second]
+                    prev = second
+                else:
+                    prev = q.dispatch(role.key, x, x, producer=f"p{idx}")
+                    local.append(prev)
+            with pkts_lock:
+                all_pkts.extend(local)
+        except BaseException as e:            # surface, don't hang the join
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=producer, args=(i,), name=f"producer-{i}")
+        for i in range(PRODUCERS)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=TIMEOUT_S)
+        assert not t.is_alive(), "producer thread wedged"
+    assert not errors, errors
+
+    try:
+        # one composite wait covers every completion signal in the soak
+        assert wait_all(
+            [p.completion for p in all_pkts], 0, timeout=TIMEOUT_S
+        ), "deadlock or lost completion: signals never reached 0"
+    finally:
+        sched.stop()
+
+    # no lost completions, no errors, and every kernel's result is real
+    assert len(all_pkts) > PRODUCERS * PACKETS_PER_PRODUCER  # bursts add extras
+    for p in all_pkts:
+        assert p.completion.load() == 0
+        assert p.out.error is None, p.out.error
+        assert p.out.value is not None
+    for p in all_pkts:
+        if p.role_key is not None:
+            n = p.args[0].shape[0]
+            np.testing.assert_allclose(np.asarray(p.out.value)[0, 0], float(n))
+
+    # the device really did reconfigure under load, on the offload pool
+    assert sum(st.reconfigs for st in sched.stats.values()) > 0
+    total = sum(st.dispatched + st.barriers for st in sched.stats.values())
+    assert total == len(all_pkts)
+    # stop() is idempotent and the worker is gone
+    sched.stop()
+    assert not sched.running
