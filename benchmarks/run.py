@@ -73,6 +73,7 @@ def main(argv: list[str] | None = None) -> None:
         table4_multitenancy,
         table5_prefetch,
         table6_dispatch,
+        table7_paged,
     )
 
     suites = (
@@ -82,6 +83,7 @@ def main(argv: list[str] | None = None) -> None:
         (table4_multitenancy.run, {"n": min(n, 128)}),
         (table5_prefetch.run, {"n": min(n, 64)}),
         (table6_dispatch.run, {"n": min(n, 64)}),
+        (table7_paged.run, {"n": min(n, 64)}),
     )
     print("name,us_per_call,derived", flush=True)
     rows: list[str] = []

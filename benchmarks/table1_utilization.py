@@ -7,6 +7,12 @@ FPGA column -> TPU analogue:
 
 "Shell" is the static runtime: HSA system + queues + region manager, measured
 as resident host bytes after hsa_init (the part that never reconfigures).
+
+The ``kv_cache_*`` rows extend the table to serving memory: the overhead
+ledger's ``memory_split()`` (reserved vs used vs stranded bytes) for the
+dense fixed-reservation cache against the paged block pool on the same
+request mix — HBM is the resource the paged cache reclaims, the way roles
+reclaim regions.
 """
 
 from __future__ import annotations
@@ -47,9 +53,35 @@ def run() -> list[str]:
                 f"vmem_bytes={pf.vmem_bytes};vmem_pct={vmem_pct:.2f};"
                 f"mxu_tiles={pf.mxu_tiles};synthesis_s={role.synthesis_s:.3f}"
             )
+        rows += kv_utilization_rows()
     finally:
         hsa_shut_down()
     return rows
+
+
+def kv_utilization_rows() -> list[str]:
+    """Serving-memory utilization: dense reservation vs paged pool.
+
+    Runs the table7 allocator trace at its default cell and reports each
+    engine's reservation utilization (``used / reserved``, the quantity
+    ``OverheadLedger.memory_split()`` tracks live) — paper Table I's
+    "how much of the claimed resource does the design actually use",
+    asked of HBM instead of LUTs.
+    """
+    from benchmarks.table7_paged import (
+        request_mix, simulate_dense, simulate_paged,
+    )
+    from repro.core.policy import AdmissionPolicy
+
+    reqs = request_mix(64)
+    dense = simulate_dense(reqs, 1024)
+    paged = simulate_paged(reqs, 1024, 16, AdmissionPolicy())
+    return [
+        f"table1,kv_cache_dense,{dense['utilization']:.2f},"
+        f"reserved_rows_per_req=256;stranded_frac={1 - dense['utilization']:.2f}",
+        f"table1,kv_cache_paged,{paged['utilization']:.2f},"
+        f"page_size=16;stranded_frac={1 - paged['utilization']:.2f}",
+    ]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,228 @@
+"""Table VII (extension): paged KV cache — serving concurrency at fixed memory.
+
+The dense serving engine reserves ``max_len`` KV rows per admitted request,
+so its concurrency ceiling is ``pool / max_len`` no matter how short the
+requests actually run — the memory analogue of statically configuring the
+whole FPGA for the worst-case network.  The paged engine allocates KV the
+way the paper's runtime allocates compute regions: fixed-size pages bound
+to a request on demand and returned the moment it finishes, with admission
+driven by an :class:`AdmissionPolicy` over free pages + projected growth.
+
+Two measurements:
+
+  1. **Calibrated allocator trace** — the real :class:`PageAllocator` +
+     :class:`AdmissionPolicy` driven by a deterministic request mix
+     (lengths drawn well under ``max_len``, as serving traffic is), swept
+     over page size × pool size.  Dense is the same trace admitted at
+     ``pool // max_len`` fixed reservations.  Reported per cell: sustained
+     concurrency, reservation utilization (used / reserved bytes).
+  2. **Real-jax serving path** — ``ServeEngine(paged=True)`` vs the dense
+     engine on a tiny LM at *equal KV bytes*; sustained concurrency ratio
+     plus the bitwise token-stream identity check.
+
+Acceptance (CI-asserted): sustained concurrency at equal cache memory must
+reach >= 2x dense on both paths, with paged streams bitwise-identical.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.policy import AdmissionPolicy
+from repro.serve.paged import PageAllocator, pages_for
+
+MAX_LEN = 256
+PAGE_SWEEP = (16, 32, 64)
+POOL_SWEEP = (1024, 2048)            # pool sizes in KV token rows
+
+
+def request_mix(n: int, seed: int = 0) -> list[tuple[int, int]]:
+    """(prompt_len, new_tokens) pairs with a long-tailed length mix: 90%
+    short chat-style turns, 10% near-``MAX_LEN`` generations.  ``max_len``
+    must be provisioned for that tail, so the dense engine reserves 256
+    rows for requests that mostly use a few dozen — the regime where fixed
+    reservations strand most of their memory."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        p = int(rng.integers(8, 40))
+        if rng.random() < 0.08:
+            t = int(rng.integers(96, 160))              # tail request
+        else:
+            t = int(rng.integers(8, 48))                # typical turn
+        out.append((p, t))
+    return out
+
+
+def simulate_dense(reqs, pool_tokens: int) -> dict[str, float]:
+    """Fixed-reservation admission: ``pool // MAX_LEN`` slots.
+
+    ``sustained`` averages concurrency over the *saturated* phase only
+    (backlog still non-empty): that is the steady state under heavy
+    traffic, which the ROADMAP's serving goal cares about — the drain tail
+    after the last arrival measures the trace length, not the engine.
+    """
+    slots = max(1, pool_tokens // MAX_LEN)
+    queue = list(reqs)
+    live: list[list[int]] = []           # [pos, end]
+    conc_sum = conc_n = 0
+    used_sum = reserved_sum = 0.0
+    steps = 0
+    while queue or live:
+        while queue and len(live) < slots:
+            p, t = queue.pop(0)
+            live.append([p, p + t])
+        if queue:                        # saturated: admission-limited
+            conc_sum += len(live)
+            conc_n += 1
+        used_sum += sum(pos for pos, _ in live)
+        reserved_sum += len(live) * MAX_LEN
+        steps += 1
+        for r in live:
+            r[0] += 1
+        live = [r for r in live if r[0] < r[1]]
+    return {
+        "sustained": conc_sum / max(1, conc_n),
+        "utilization": used_sum / max(1.0, reserved_sum),
+        "steps": steps,
+    }
+
+
+def simulate_paged(reqs, pool_tokens: int, page_size: int,
+                   policy: AdmissionPolicy) -> dict[str, float]:
+    """Page-pool admission with on-demand growth, on the real allocator."""
+    alloc = PageAllocator(pool_tokens // page_size + 1)
+    queue = list(reqs)
+    live: dict[int, list[int]] = {}      # uid -> [pos, end, mapped, projected]
+    uid = 0
+    conc_sum = conc_n = 0
+    used_sum = reserved_sum = 0.0
+    steps = 0
+    while queue or live:
+        while queue:
+            p, t = queue[0]
+            projected = policy.projected_pages(p, t, page_size)
+            growth = sum(max(0, r[3] - r[2]) for r in live.values())
+            if not policy.admit(free_pages=alloc.free_pages,
+                                projected_growth_pages=growth,
+                                request_pages=projected):
+                break
+            queue.pop(0)
+            uid += 1
+            mapped = pages_for(p, page_size)
+            alloc.allocate(uid, mapped)
+            live[uid] = [p, p + t, mapped, projected]
+        if queue:                        # saturated phase (see dense sim)
+            conc_sum += len(live)
+            conc_n += 1
+        used_sum += sum(r[0] for r in live.values())
+        reserved_sum += sum(r[2] for r in live.values()) * page_size
+        steps += 1
+        for u, r in list(live.items()):
+            need = pages_for(r[0] + 1, page_size)       # next write mapped
+            if need > r[2]:
+                alloc.allocate(u, need - r[2])
+                r[2] = need
+            r[0] += 1
+            if r[0] >= r[1]:
+                alloc.free(u, alloc.pages_of(u))
+                del live[u]
+    alloc.check_invariants()
+    assert alloc.free_pages == alloc.total_pages, "trace leaked pages"
+    return {
+        "sustained": conc_sum / max(1, conc_n),
+        "utilization": used_sum / max(1.0, reserved_sum),
+        "steps": steps,
+    }
+
+
+def _run_serving(paged: bool, n_reqs: int, n_new: int):
+    """Real-jax path: tiny LM, equal KV bytes (128 token rows per layer)."""
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.core.ledger import OverheadLedger
+    from repro.models import build_model
+    from repro.models.params import init_params
+    from repro.serve.engine import ServeEngine
+
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(0))
+    ledger = OverheadLedger()
+    if paged:
+        # pool = 8 usable pages x 16 rows = 128 rows (+ scratch page)
+        eng = ServeEngine(model, params, batch_slots=8, max_len=64,
+                          decode_fusion=2, paged=True, page_size=16,
+                          pool_pages=9, ledger=ledger)
+    else:
+        # 2 slots x 64 rows = 128 rows
+        eng = ServeEngine(model, params, batch_slots=2, max_len=64,
+                          decode_fusion=2, ledger=ledger)
+    for i in range(n_reqs):
+        eng.submit([3 + i, 14, 15], max_new_tokens=n_new)
+    done = sorted(eng.run_to_completion(), key=lambda r: r.uid)
+    streams = [r.generated for r in done]
+    return eng.concurrency_stats(), streams, ledger.memory_split()
+
+
+def run(n: int = 64) -> list[str]:
+    rows = []
+    reqs = request_mix(max(32, n))
+    policy = AdmissionPolicy()
+
+    ratios = {}
+    for pool in POOL_SWEEP:
+        dense = simulate_dense(reqs, pool)
+        for ps in PAGE_SWEEP:
+            paged = simulate_paged(reqs, pool, ps, policy)
+            ratio = paged["sustained"] / max(1e-9, dense["sustained"])
+            ratios[(ps, pool)] = ratio
+            rows.append(
+                f"table7,paged_trace_ps{ps}_pool{pool},{paged['sustained']:.2f},"
+                f"dense_sustained={dense['sustained']:.2f};ratio_x={ratio:.2f};"
+                f"util_paged={paged['utilization']:.2f};"
+                f"util_dense={dense['utilization']:.2f};"
+                f"steps_paged={paged['steps']};steps_dense={dense['steps']}"
+            )
+
+    # acceptance on the default cell (page 16, smallest pool — the tightest)
+    key_ratio = ratios[(16, POOL_SWEEP[0])]
+    rows.append(
+        f"table7,paged_wins,{int(key_ratio >= 2.0)},"
+        f"ratio_x={key_ratio:.2f};page_size=16;pool={POOL_SWEEP[0]}"
+    )
+
+    # real-jax path at equal KV bytes
+    n_reqs, n_new = 8, 9
+    dconc, dstreams, dmem = _run_serving(False, n_reqs, n_new)
+    pconc, pstreams, pmem = _run_serving(True, n_reqs, n_new)
+    identical = int(dstreams == pstreams)
+    ratio = pconc["sustained"] / max(1e-9, dconc["sustained"])
+    rows.append(
+        f"table7,serve_paged_concurrency,{ratio:.2f},"
+        f"dense_sustained={dconc['sustained']:.2f};"
+        f"paged_sustained={pconc['sustained']:.2f};"
+        f"dense_peak={dconc['peak']:.0f};paged_peak={pconc['peak']:.0f}"
+    )
+    rows.append(
+        f"table7,serve_paged_identical,{identical},"
+        f"requests={n_reqs};tokens_each={n_new}"
+    )
+    rows.append(
+        f"table7,serve_paged_memory,{pmem['utilization']:.2f},"
+        f"paged_peak_reserved={pmem['peak_reserved_bytes']:.0f};"
+        f"dense_peak_reserved={dmem['peak_reserved_bytes']:.0f};"
+        f"paged_peak_stranded={pmem['peak_stranded_bytes']:.0f};"
+        f"dense_peak_stranded={dmem['peak_stranded_bytes']:.0f}"
+    )
+    ok = int(ratio >= 2.0 and identical == 1)
+    rows.append(
+        f"table7,serve_paged_wins,{ok},ratio_x={ratio:.2f};identical={identical}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

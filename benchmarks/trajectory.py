@@ -1,0 +1,128 @@
+"""Bench-trajectory guard: diff a fresh run against the committed snapshot.
+
+``BENCH_results.json`` accumulates one point per PR, but a trajectory is
+only worth keeping if its points stay *comparable* — a silent regression in
+a CI-asserted metric, or a metric quietly disappearing, breaks the series.
+This module is the gate::
+
+    python -m benchmarks.trajectory BASELINE.json CURRENT.json
+
+Exit 1 if any guarded metric regresses.  Two guard kinds:
+
+  - **asserted** — CI-acceptance booleans (``*_wins``, ``*_identical``):
+    must equal 1 in the current run, full stop.
+  - **tracked** — deterministic quality metrics (virtual-clock / allocator
+    simulations with fixed seeds, concurrency counts): must not fall more
+    than ``TOLERANCE`` below the committed baseline.  Wall-clock host
+    measurements (``dispatch_per_token_*`` etc.) are deliberately NOT
+    tracked: CI runner jitter exceeds any honest threshold, and a flaky
+    gate rots faster than no gate.
+
+A guarded metric present in the baseline but missing from the current run
+fails too — dropping the metric is how trajectories die.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+TOLERANCE = 0.10
+
+#: must be exactly 1 in the current run (CI acceptance criteria)
+ASSERTED = (
+    ("table5", "prefetch_wins"),
+    ("table6", "fusion_wins"),
+    ("table6", "serve_fused_identical"),
+    ("table7", "paged_wins"),
+    ("table7", "serve_paged_identical"),
+    ("table7", "serve_paged_wins"),
+)
+
+#: deterministic metrics: current >= baseline * (1 - TOLERANCE)
+TRACKED = (
+    ("table7", "paged_trace_ps16_pool1024"),     # sustained concurrency
+    ("table7", "paged_trace_ps16_pool2048"),
+    ("table7", "serve_paged_concurrency"),       # real-jax concurrency ratio
+    ("table1", "kv_cache_paged"),                # pool utilization
+)
+
+#: tracked metrics where *lower* is better (regression = grew > tolerance)
+LOWER_IS_BETTER: set[tuple[str, str]] = set()
+
+
+def _index(payload: dict) -> dict[tuple[str, str], float]:
+    out = {}
+    for row in payload.get("rows", ()):
+        if row.get("value") is not None:
+            out[(row["table"], row["metric"])] = float(row["value"])
+    return out
+
+
+def check(baseline: dict, current: dict) -> list[str]:
+    """List of failure messages (empty = trajectory holds)."""
+    base = _index(baseline)
+    cur = _index(current)
+    failures = []
+
+    for key in ASSERTED:
+        got = cur.get(key)
+        if got is None:
+            failures.append(f"{key[0]},{key[1]}: asserted metric missing")
+        elif got != 1:
+            failures.append(f"{key[0]},{key[1]}: expected 1, got {got}")
+
+    for key in TRACKED:
+        b = base.get(key)
+        c = cur.get(key)
+        if b is None:
+            continue                     # metric is new: nothing to diff yet
+        if c is None:
+            failures.append(f"{key[0]},{key[1]}: tracked metric disappeared "
+                            f"(baseline {b})")
+            continue
+        if key in LOWER_IS_BETTER:
+            limit = b * (1 + TOLERANCE)
+            if c > limit + 1e-12:
+                failures.append(
+                    f"{key[0]},{key[1]}: {c} worse than baseline {b} "
+                    f"(+{(c / b - 1) * 100:.1f}% > {TOLERANCE * 100:.0f}%)"
+                )
+        else:
+            limit = b * (1 - TOLERANCE)
+            if c < limit - 1e-12:
+                failures.append(
+                    f"{key[0]},{key[1]}: {c} below baseline {b} "
+                    f"(-{(1 - c / b) * 100:.1f}% > {TOLERANCE * 100:.0f}%)"
+                )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if len(argv) != 2:
+        print("usage: python -m benchmarks.trajectory BASELINE.json CURRENT.json",
+              file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        baseline = json.load(f)
+    with open(argv[1]) as f:
+        current = json.load(f)
+    if current.get("schema") != baseline.get("schema"):
+        print(f"schema drift: baseline {baseline.get('schema')} vs "
+              f"current {current.get('schema')}", file=sys.stderr)
+        return 1
+    failures = check(baseline, current)
+    if failures:
+        print(f"trajectory check FAILED ({len(failures)}):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    n = len(ASSERTED) + len(TRACKED)
+    print(f"trajectory holds: {n} guarded metrics within tolerance "
+          f"(baseline sha {baseline.get('git_sha', '?')[:9]})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

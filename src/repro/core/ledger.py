@@ -24,6 +24,7 @@ import dataclasses
 import math
 import threading
 import time
+from collections import deque
 from typing import Any, Iterator
 
 import contextlib
@@ -104,6 +105,12 @@ class Stat:
         return (self.total_s / self.count) * 1e6 if self.count else 0.0
 
 
+#: bounded per-(producer, category) sample window backing ``quantile()`` —
+#: large enough for a stable p99, small enough to track regime changes
+#: (the feedback FusionPolicy wants "recent contention", not all-time).
+QUANTILE_WINDOW = 256
+
+
 class OverheadLedger:
     """Thread-safe accumulator of measured runtime overheads."""
 
@@ -113,20 +120,53 @@ class OverheadLedger:
         self._entries: list[Entry] | None = [] if keep_entries else None
         self._by_queue: dict[str, dict[str, Stat]] = {}
         self._by_producer: dict[str, dict[str, Stat]] = {}
+        # (producer|None, category) -> ring of recent samples
+        self._recent: dict[tuple[str | None, str], deque[float]] = {}
+        self._memory: dict[str, dict[str, float]] = {}
 
     def record(self, category: str, seconds: float, **meta: Any) -> None:
         if category not in self._stats:
             raise ValueError(f"unknown ledger category {category!r}")
         with self._lock:
             self._stats[category].add(seconds)
+            self._recent.setdefault(
+                (None, category), deque(maxlen=QUANTILE_WINDOW)
+            ).append(seconds)
             if "queue" in meta and meta["queue"] is not None:
                 per_q = self._by_queue.setdefault(str(meta["queue"]), {})
                 per_q.setdefault(category, Stat()).add(seconds)
             if "producer" in meta and meta["producer"] is not None:
-                per_p = self._by_producer.setdefault(str(meta["producer"]), {})
+                producer = str(meta["producer"])
+                per_p = self._by_producer.setdefault(producer, {})
                 per_p.setdefault(category, Stat()).add(seconds)
+                self._recent.setdefault(
+                    (producer, category), deque(maxlen=QUANTILE_WINDOW)
+                ).append(seconds)
             if self._entries is not None:
                 self._entries.append(Entry(category, seconds, meta))
+
+    def quantile(self, category: str, q: float,
+                 producer: str | None = None) -> float | None:
+        """Empirical quantile over the recent sample window (None if empty).
+
+        ``producer=`` restricts to that producer's samples — the feedback
+        :class:`~repro.core.policy.FusionPolicy` reads the p99 of *foreign*
+        producers' ``dispatch_wait`` here to decide how hard serving may
+        lean on the shared device.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        with self._lock:
+            window = self._recent.get((producer, category))
+            if not window:
+                return None
+            ordered = sorted(window)
+        idx = min(len(ordered) - 1, int(math.ceil(q * len(ordered))) - 1)
+        return ordered[max(0, idx)]
+
+    def producers(self) -> list[str]:
+        with self._lock:
+            return sorted(self._by_producer)
 
     @contextlib.contextmanager
     def timed(self, category: str, **meta: Any) -> Iterator[None]:
@@ -169,8 +209,60 @@ class OverheadLedger:
             self._stats = {c: Stat() for c in CATEGORIES}
             self._by_queue = {}
             self._by_producer = {}
+            self._recent = {}
+            self._memory = {}
             if self._entries is not None:
                 self._entries = []
+
+    # -- memory accounting (Table I utilization) -----------------------------
+
+    def record_memory(self, *, reserved_bytes: float, used_bytes: float,
+                      label: str = "kv_cache") -> None:
+        """Record a point-in-time memory split for ``label``.
+
+        ``reserved_bytes`` is the capacity held against *admitted* requests
+        (dense: live slots × max_len rows; paged: mapped pages) —
+        reservation, not physical allocation: an idle slot or free page is
+        available capacity, not stranded.  ``used_bytes`` is the portion
+        actually carrying cached tokens.  The difference is **stranded** —
+        reserved capacity no other request can use, the quantity the paged
+        cache exists to crush.  Latest values and peaks are kept per label.
+        """
+        if used_bytes > reserved_bytes + 1e-9:
+            raise ValueError(
+                f"used {used_bytes} > reserved {reserved_bytes} for {label!r}"
+            )
+        with self._lock:
+            m = self._memory.setdefault(label, {
+                "reserved_bytes": 0.0, "used_bytes": 0.0,
+                "stranded_bytes": 0.0, "peak_reserved_bytes": 0.0,
+                "peak_stranded_bytes": 0.0, "samples": 0.0,
+            })
+            m["reserved_bytes"] = float(reserved_bytes)
+            m["used_bytes"] = float(used_bytes)
+            m["stranded_bytes"] = float(reserved_bytes - used_bytes)
+            m["peak_reserved_bytes"] = max(m["peak_reserved_bytes"],
+                                           float(reserved_bytes))
+            m["peak_stranded_bytes"] = max(m["peak_stranded_bytes"],
+                                           float(reserved_bytes - used_bytes))
+            m["samples"] += 1.0
+
+    def memory_split(self, label: str = "kv_cache") -> dict[str, float]:
+        """Reserved vs used vs stranded bytes for ``label`` (Table I row).
+
+        ``utilization`` = used / reserved of the latest sample (1.0 when
+        nothing is reserved: an empty pool strands nothing).
+        """
+        with self._lock:
+            m = dict(self._memory.get(label, {}))
+        if not m:
+            m = {"reserved_bytes": 0.0, "used_bytes": 0.0,
+                 "stranded_bytes": 0.0, "peak_reserved_bytes": 0.0,
+                 "peak_stranded_bytes": 0.0, "samples": 0.0}
+        m["utilization"] = (
+            m["used_bytes"] / m["reserved_bytes"] if m["reserved_bytes"] else 1.0
+        )
+        return m
 
     def reconfig_split(self) -> dict[str, float]:
         """Exposed vs hidden reconfiguration time (scheduler-clock seconds).

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from collections import OrderedDict
 from typing import Hashable, Sequence
 
@@ -67,6 +68,16 @@ class FusionPolicy:
         ``fairness_depth`` pending packets — the batch-vs-latency knob the
         toolflow surveys frame as launch amortization vs responsiveness.
 
+    **Feedback mode** (``feedback=True``) closes the loop the launch-time
+    queue depth only approximates: instead of guessing how much a deep
+    backlog *will* hurt the other tenants, it reads how much serving
+    already *is* hurting them — the ledger's observed p99 foreign
+    ``dispatch_wait`` (the producer-blocked leg of their packet round
+    trips).  K halves once per doubling of the observed p99 over
+    ``target_wait_s``, so a foreign tenant whose waits blow past the target
+    pulls fusion down even when its queue happens to be shallow at launch
+    time, and an idle ledger lets K ride at the amortization optimum.
+
     The result is rounded down to a power of two so the engine's jitted
     fused-decode trace cache stays small (same reasoning as prompt
     bucketing: a distinct K is a distinct trace is a re-synthesis).
@@ -75,6 +86,8 @@ class FusionPolicy:
     max_fusion: int = 8
     min_fusion: int = 1
     fairness_depth: int = 8
+    feedback: bool = False
+    target_wait_s: float = 1e-3          # foreign p99 dispatch_wait budget
 
     def __post_init__(self) -> None:
         if self.min_fusion < 1:
@@ -85,6 +98,8 @@ class FusionPolicy:
             )
         if self.fairness_depth < 0:
             raise ValueError(f"fairness_depth must be >= 0, got {self.fairness_depth}")
+        if self.target_wait_s <= 0:
+            raise ValueError(f"target_wait_s must be > 0, got {self.target_wait_s}")
 
     @classmethod
     def of(cls, value: "FusionPolicy | int | None") -> "FusionPolicy":
@@ -96,11 +111,20 @@ class FusionPolicy:
         return cls(max_fusion=max(1, k), min_fusion=max(1, k))
 
     def choose_k(self, *, queue_depth: int = 0,
-                 mean_request_len: float = 0.0) -> int:
+                 mean_request_len: float = 0.0,
+                 observed_wait_s: float | None = None) -> int:
         k = self.max_fusion
         if mean_request_len > 0:
             k = min(k, max(self.min_fusion, int(mean_request_len)))
-        if self.fairness_depth > 0 and queue_depth > 0:
+        if self.feedback and observed_wait_s is not None:
+            # measured-contention feedback: halve K per doubling of the
+            # observed foreign p99 wait over target.  Takes precedence over
+            # the queue-depth guess when a measurement exists.
+            over = observed_wait_s / self.target_wait_s
+            while over > 1.0 and k > 1:
+                k >>= 1
+                over /= 2.0
+        elif self.fairness_depth > 0 and queue_depth > 0:
             # halve once per fairness_depth foreign packets pending (capped so
             # the shift below stays defined for absurd backlogs)
             k >>= min(queue_depth // self.fairness_depth, k.bit_length())
@@ -109,6 +133,59 @@ class FusionPolicy:
         while p * 2 <= k:
             p *= 2
         return max(self.min_fusion, p)     # the floor wins over pow2 rounding
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Admit a request into the paged serving engine?
+
+    The dense engine's admission test was "is a slot free?" — the page pool
+    makes that insufficient: a free slot with an empty pool just deadlocks
+    later.  Admission instead reasons over **free pages minus the projected
+    growth of the requests already running**: each active request will still
+    map up to (projection − already-mapped) pages before it finishes, and
+    those future claims must stay funded or on-demand growth starts failing
+    mid-decode.
+
+    ``growth_reserve`` scales the projection of a request's decode budget:
+
+      - 1.0 (default) projects the worst case (``prompt + max_new_tokens``),
+        which makes :class:`~repro.serve.paged.PagePoolExhausted`
+        *unreachable* — every page a request can ever touch is accounted at
+        admission;
+      - < 1.0 overcommits (requests usually finish early — EOS, truncation),
+        admitting more concurrency at the risk of mid-decode exhaustion.
+
+    ``watermark_pages`` holds back a safety floor for in-flight growth.
+    """
+
+    growth_reserve: float = 1.0
+    watermark_pages: int = 0
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.growth_reserve <= 1.0:
+            raise ValueError(
+                f"growth_reserve must be in [0, 1], got {self.growth_reserve}"
+            )
+        if self.watermark_pages < 0:
+            raise ValueError(
+                f"watermark_pages must be >= 0, got {self.watermark_pages}"
+            )
+
+    def projected_pages(self, prompt_len: int, max_new_tokens: int,
+                        page_size: int) -> int:
+        """Worst-case pages this request is projected to map over its life."""
+        projected = prompt_len + max(
+            1, int(math.ceil(self.growth_reserve * max_new_tokens))
+        )
+        return -(-projected // page_size)
+
+    def admit(self, *, free_pages: int, projected_growth_pages: int,
+              request_pages: int) -> bool:
+        """``free_pages`` from the allocator, ``projected_growth_pages`` the
+        summed unmapped remainder of already-admitted requests."""
+        available = free_pages - projected_growth_pages - self.watermark_pages
+        return request_pages <= available
 
 
 @dataclasses.dataclass(frozen=True)

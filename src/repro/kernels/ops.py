@@ -218,6 +218,41 @@ REG.register(
 )
 
 # --------------------------------------------------------------------------
+# paged decode attention (block-table KV gather)
+# --------------------------------------------------------------------------
+
+
+def xla_paged_decode_attention(q, k_pages, v_pages, block_table, length, *,
+                               scale=None):
+    """Gather-then-dense formulation: ``jnp.take`` reassembles the sequence's
+    pages into the dense [B, Hkv, T, hd] layout, then the grouped-GQA dense
+    decode attention runs unchanged.  Because the gather is arithmetic-free
+    and the downstream math is *the same function*, the result is
+    bitwise-identical to :func:`xla_decode_attention` over an equivalent
+    dense cache — the property the paged serving engine's equivalence
+    guarantee rests on.  (The Pallas kernel instead resolves pages on the
+    HBM→VMEM stream and never materializes the dense copy.)"""
+    kg = ref.gather_kv_pages(k_pages, block_table)
+    vg = ref.gather_kv_pages(v_pages, block_table)
+    return xla_decode_attention(q, kg, vg, length, scale=scale)
+
+
+REG.register(
+    KernelImpl(op="paged_decode_attention", device_kind="any",
+               source="reference", fn=ref.paged_decode_attention)
+)
+REG.register(
+    KernelImpl(op="paged_decode_attention", device_kind="any", source="xla",
+               fn=xla_paged_decode_attention)
+)
+REG.register(
+    KernelImpl(
+        op="paged_decode_attention", device_kind="tpu", source="pallas",
+        fn=dec_k.paged_decode_attention, footprint=dec_k.paged_footprint(),
+    )
+)
+
+# --------------------------------------------------------------------------
 # conv2d
 # --------------------------------------------------------------------------
 

@@ -142,6 +142,41 @@ def ssd(
     return y
 
 
+def gather_kv_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Reassemble a per-sequence dense KV view from a paged pool.
+
+    ``pages`` [P, Hkv, ps, D] is the global block pool; ``block_table``
+    [B, NP] maps each sequence's page index to a pool page.  The result
+    [B, Hkv, NP*ps, D] holds position ``t`` of sequence ``b`` at
+    ``[b, :, t]`` — exactly the dense cache layout, so any dense decode
+    attention runs unchanged (and bitwise-identically) on the gather.
+    """
+    B, NP = block_table.shape
+    _, Hkv, ps, D = pages.shape
+    out = jnp.take(pages, block_table, axis=0)           # [B, NP, Hkv, ps, D]
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, NP * ps, D)
+
+
+def paged_decode_attention(
+    q: jax.Array,                   # [B, Hq, D] single query token
+    k_pages: jax.Array,             # [P, Hkv, ps, D] global block pool
+    v_pages: jax.Array,             # [P, Hkv, ps, D]
+    block_table: jax.Array,         # [B, NP] page index -> pool page
+    length: jax.Array | int,        # valid cache length (scalar or [B])
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """One-token attention over a paged KV cache: gather, then dense oracle.
+
+    Positions ``>= length`` (page tails, unmapped table entries pointing at
+    the reserved scratch page) are masked before the softmax, so their
+    contents never reach the output.
+    """
+    kg = gather_kv_pages(k_pages, block_table)
+    vg = gather_kv_pages(v_pages, block_table)
+    return decode_attention(q, kg, vg, length, scale=scale)
+
+
 def decode_attention(
     q: jax.Array,                   # [B, Hq, D] single query token
     k_cache: jax.Array,             # [B, Hkv, T, D]

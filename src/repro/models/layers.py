@@ -280,6 +280,59 @@ def attention_decode(
     return y[:, None, :], cache_k, cache_v
 
 
+def paged_write_kv(pool: jax.Array, new: jax.Array, page: jax.Array,
+                   offset: jax.Array) -> jax.Array:
+    """Write one token's KV [B, H, hd] into the pool [P, H, ps, hd] at each
+    sequence's ``(page[b], offset[b])``.
+
+    Live slots own disjoint pages, so batch writes never collide; masked
+    (finished) slots are steered to the scratch page by their cleared block
+    tables, where collisions are harmless.
+    """
+    return pool.at[page, :, offset].set(new.astype(pool.dtype))
+
+
+def attention_decode_paged(
+    p: Params,
+    x: jax.Array,                      # [B, 1, d]
+    k_pages: jax.Array,                # [P, Hkv, ps, hd] global block pool
+    v_pages: jax.Array,
+    block_table: jax.Array,            # [B, NP] page index -> pool page
+    pos: jax.Array,                    # scalar or [B]: tokens already cached
+    cfg: ArchConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode against a paged KV cache.
+
+    Identical q/k/v/rope math to :func:`attention_decode`; the only change
+    is *where* KV lives: the new token is written into the pool page the
+    block table maps its position to, and attention runs via the
+    ``paged_decode_attention`` op (whose XLA source gathers pages back into
+    the dense layout and then executes the same dense decode-attention
+    function — which is what makes paged serving bitwise-identical to
+    dense, not merely allclose).
+    """
+    B = x.shape[0]
+    hd = cfg.head_dim
+    ps = k_pages.shape[2]
+    q, k, v = _qkv(p, x, cfg)
+    cos, sin = rope_table(decode_positions(pos), hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)[:, 0]                     # [B, H, hd]
+    k = apply_rope(k, cos, sin)[:, 0]                     # [B, Hkv, hd]
+    v = v[:, 0]
+
+    posb = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
+    page = jnp.take_along_axis(
+        block_table, (posb // ps)[:, None], axis=1
+    )[:, 0]
+    k_pages = paged_write_kv(k_pages, k, page, posb % ps)
+    v_pages = paged_write_kv(v_pages, v, page, posb % ps)
+    out = dispatch.op(
+        "paged_decode_attention", q, k_pages, v_pages, block_table, posb + 1
+    )
+    y = dispatch.op("matmul", out.reshape(B, 1, -1)[:, 0], p["wo"])
+    return y[:, None, :], k_pages, v_pages
+
+
 def cross_attention_specs(cfg: ArchConfig) -> Params:
     return attention_specs(cfg)
 

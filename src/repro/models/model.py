@@ -256,8 +256,22 @@ def _window_clip(cfg: ArchConfig, kv: dict) -> dict:
     }
 
 
-def apply_layer_decode(cfg, kind, p, x, cache, pos, moe_info=None):
-    """One-token step. Returns (x, new_cache)."""
+def apply_layer_decode(cfg, kind, p, x, cache, pos, moe_info=None,
+                       block_table=None):
+    """One-token step. Returns (x, new_cache).
+
+    With ``block_table`` the layer's k/v leaves are page *pools* ([P, Hkv,
+    page_size, hd]) shared by the whole batch, and attention routes through
+    the paged write + block-table kernel.  Only plain position-indexed GQA
+    caches support paging; recurrent / latent / windowed layouts raise.
+    """
+    if block_table is not None and (kind not in ("dense", "moe")
+                                    or cfg.mla is not None
+                                    or cfg.attn_window is not None):
+        raise ValueError(
+            f"paged decode supports plain GQA KV caches only, not {kind!r} "
+            f"(mla={cfg.mla is not None}, window={cfg.attn_window})"
+        )
     if kind == "ssm":
         h = layers.apply_norm(p["ln1"], x, cfg.norm_eps)
         y, state, tail = ssm.ssm_decode(
@@ -286,6 +300,11 @@ def apply_layer_decode(cfg, kind, p, x, cache, pos, moe_info=None):
             p["mla"], h, cache["ckv"], cache["krope"], pos, cfg
         )
         new_cache.update({"ckv": ckv, "krope": krope})
+    elif block_table is not None:
+        a, pk, pv = layers.attention_decode_paged(
+            p["attn"], h, cache["k"], cache["v"], block_table, pos, cfg
+        )
+        new_cache.update({"k": pk, "v": pv})
     else:
         a, ck, cv = layers.attention_decode(
             p["attn"], h, cache["k"], cache["v"], pos, cfg, window=cfg.attn_window
@@ -535,10 +554,18 @@ class DecoderLM:
 
     def decode_step(self, params: Params, tokens: jax.Array, cache: dict, *,
                     moe_info=None):
-        """tokens [B, 1] -> (logits [B, V], new cache)."""
+        """tokens [B, 1] -> (logits [B, V], new cache).
+
+        A ``cache["block_table"]`` entry ([B, NP] int32) switches the
+        attention layers to the paged KV path: k/v leaves of ``segments``
+        are then global page pools, written and read through the table (see
+        :mod:`repro.serve.paged`).  The table itself is engine-owned and not
+        part of the returned cache.
+        """
         cfg = self.cfg
         h = layers.embed_tokens(params["embed"], tokens)
         pos = cache["pos"]
+        block_table = cache.get("block_table")
         new_segs = []
 
         for seg, seg_params, seg_cache in zip(
@@ -552,7 +579,7 @@ class DecoderLM:
                 for i, kind in enumerate(_seg.kinds):
                     x, c = apply_layer_decode(
                         cfg, kind, unit_params[str(i)], x, unit_cache[str(i)],
-                        pos, moe_info=moe_info,
+                        pos, moe_info=moe_info, block_table=block_table,
                     )
                     x = shard_act(x.astype(dt0), "batch", None, None)
                     new_unit[str(i)] = c

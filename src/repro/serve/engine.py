@@ -31,9 +31,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import ledger as ledger_mod
-from repro.core.policy import FusionPolicy
+from repro.core.policy import AdmissionPolicy, FusionPolicy
 from repro.dist import act
 from repro.dist.sharding import ShardingRules
+from repro.serve import paged as paged_mod
 from repro.train.step import batch_shardings, moe_mesh_info
 
 
@@ -180,13 +181,31 @@ class ServeEngine:
     one slot at a time into the shared batch cache, all live slots decode in
     lock-step, finished slots free up for queued requests.  Sampling is greedy
     or temperature-softmax.
+
+    **Paged KV cache** (``paged=True``): instead of a dense ``[slots,
+    max_len]`` reservation per slot, KV lives in a global page pool
+    (:mod:`repro.serve.paged`) addressed through per-slot block tables.
+    Prefill scatters into freshly mapped pages, the fused decode scan
+    carries the table and grows a sequence by one page exactly when it
+    crosses a page boundary, and a finished request's pages return to the
+    pool immediately.  Admission moves from "free slot?" to an
+    :class:`AdmissionPolicy` over free pages and the projected growth of
+    the requests already running — the concurrency ceiling becomes a
+    function of *actual* sequence lengths, not the worst case.  Token
+    streams are bitwise-identical to the dense engine for the same
+    requests (the paged attention op gathers pages into the dense layout
+    and runs the same math).
     """
 
     def __init__(self, model, params, *, batch_slots: int = 4,
                  max_len: int = 256, temperature: float = 0.0, seed: int = 0,
                  decode_fusion: "int | FusionPolicy" = 1,
                  hsa_queue=None, hsa_scheduler=None, producer: str = "tf-serving",
-                 bucket_prompts: bool = True, min_bucket: int = 8):
+                 bucket_prompts: bool = True, min_bucket: int = 8,
+                 paged: bool = False, page_size: int = 16,
+                 pool_pages: int | None = None,
+                 admission: AdmissionPolicy | None = None,
+                 ledger: "ledger_mod.OverheadLedger | None" = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -229,6 +248,46 @@ class ServeEngine:
         self.min_bucket = min_bucket
         self.prefill_traces = 0        # bumped at *trace* time only: the counter
         #                                the bucketing example reads before/after
+        # explicit ledger for memory accounting (falls back to the queue's)
+        self.ledger = ledger if ledger is not None else (
+            hsa_queue.ledger if hsa_queue is not None else None
+        )
+        # -- paged KV cache state ------------------------------------------
+        self.paged = paged
+        self.page_size = page_size
+        self.admission = admission if admission is not None else AdmissionPolicy()
+        if paged:
+            if not self._paged_safe():
+                raise ValueError(
+                    "paged=True requires plain position-indexed GQA KV caches "
+                    "(no MLA latent, recurrent, windowed, or cross-attn leaves)"
+                )
+            if page_size < 1 or max_len % page_size:
+                raise ValueError(
+                    f"max_len={max_len} must be a multiple of page_size={page_size}"
+                )
+            if pool_pages is None:
+                # match the dense engine's footprint (+ the scratch page)
+                pool_pages = batch_slots * (max_len // page_size) + 1
+            self.allocator = paged_mod.PageAllocator(pool_pages)
+            self.pool_pages = pool_pages
+            self.table_pages = max_len // page_size          # table width NP
+            # per-slot block tables; unmapped entries point at the scratch
+            # page so masked dummy writes never touch a live page
+            self._table = np.full((batch_slots, self.table_pages),
+                                  paged_mod.TRASH_PAGE, np.int32)
+            self._mapped = np.zeros(batch_slots, np.int64)   # pages mapped/slot
+            self._projected: dict[int, int] = {}             # slot -> pages
+        else:
+            self.allocator = None
+        self._token_bytes = 0                                # set at cache build
+        # concurrency trace: sustained (mean over decode steps with work
+        # pending) and peak live requests — benchmarks/table7 reads these
+        self._concurrency_sum = 0
+        self._concurrency_n = 0
+        self.peak_concurrency = 0
+        # feedback staleness: producer -> (last sample count, silent rounds)
+        self._wait_freshness: dict[str, tuple[int, int]] = {}
 
         def _traced_prefill(params, tokens):
             self.prefill_traces += 1   # side effect runs once per new shape
@@ -273,14 +332,45 @@ class ServeEngine:
 
     def submit(self, prompt: list[int], max_new_tokens: int = 32) -> int:
         self._uid += 1
-        self._queue.append(
-            Request(self._uid, np.asarray(prompt, np.int32), max_new_tokens)
-        )
+        req = Request(self._uid, np.asarray(prompt, np.int32), max_new_tokens)
+        if self.paged:
+            if len(req.prompt) + max_new_tokens > self.max_len:
+                # the block table maps exactly max_len rows: past it, decode
+                # writes would clamp onto the last page and corrupt live KV
+                raise ValueError(
+                    f"prompt ({len(req.prompt)}) + max_new_tokens "
+                    f"({max_new_tokens}) exceeds max_len={self.max_len}"
+                )
+            need = self._projected_pages(req)
+            cap = self.allocator.total_pages - self.admission.watermark_pages
+            if need > cap:
+                raise ValueError(
+                    f"request projects {need} pages but the pool can ever "
+                    f"admit at most {cap} — it would block the queue forever"
+                )
+        self._queue.append(req)
         return self._uid
 
     # -- internals ------------------------------------------------------------
 
     _RECURRENT_CACHE_KEYS = frozenset({"ssm_state", "conv_tail"})
+
+    def _cache_leaf_keys(self) -> set[str] | None:
+        """Leaf-key set of the model's cache tree (None if unknowable)."""
+        import jax.tree_util as jtu
+
+        try:
+            specs = self.model.cache_specs(1, 8)
+        except Exception:
+            return None
+        keys: set[str] = set()
+
+        def visit(path, leaf):
+            last = path[-1]
+            keys.add(last.key if hasattr(last, "key") else str(last))
+
+        jtu.tree_map_with_path(visit, specs["segments"])
+        return keys
 
     def _bucketing_safe(self) -> bool:
         """True iff every cache leaf is position-indexed (decode masks by
@@ -288,22 +378,10 @@ class ServeEngine:
         such mask, and sliding-window (ring) KV caches clip to the *last*
         window positions at prefill — which would be the pads.  Unknown cache
         layouts also decline, conservatively."""
-        import jax.tree_util as jtu
-
         if getattr(self.cfg, "attn_window", None):
             return False
-        try:
-            specs = self.model.cache_specs(1, 8)
-        except Exception:
-            return False
-        keys: set[str] = set()
-
-        def visit(path, leaf):
-            last = path[-1]
-            keys.add(last.key if hasattr(last, "key") else str(last))
-
-        jtu.tree_map_with_path(visit, specs)
-        return not (keys & self._RECURRENT_CACHE_KEYS)
+        keys = self._cache_leaf_keys()
+        return keys is not None and not (keys & self._RECURRENT_CACHE_KEYS)
 
     def _bucket_len(self, n: int) -> int:
         """Next power-of-two at least ``min_bucket``, capped at ``max_len``."""
@@ -311,6 +389,76 @@ class ServeEngine:
         while b < n:
             b *= 2
         return min(b, self.max_len)
+
+    # -- paged KV cache internals ---------------------------------------------
+
+    def _paged_safe(self) -> bool:
+        """True iff every cache leaf is a plain GQA k/v tensor (the layouts
+        :func:`repro.models.layers.attention_decode_paged` can page)."""
+        if getattr(self.cfg, "attn_window", None) or self.cfg.mla is not None:
+            return False
+        keys = self._cache_leaf_keys()
+        return keys is not None and keys <= {"k", "v"}
+
+    def _projected_pages(self, req: Request) -> int:
+        return self.admission.projected_pages(
+            len(req.prompt), req.max_new_tokens, self.page_size
+        )
+
+    def _projected_growth(self) -> int:
+        """Pages the already-admitted requests are still projected to map."""
+        return sum(
+            max(0, self._projected[slot] - int(self._mapped[slot]))
+            for slot in self._active
+        )
+
+    def _admit_paged(self, req: Request) -> bool:
+        return self.admission.admit(
+            free_pages=self.allocator.free_pages,
+            projected_growth_pages=self._projected_growth(),
+            request_pages=self._projected_pages(req),
+        )
+
+    def _ensure_mapped(self, slot: int, through_pos: int) -> None:
+        """Map pages so position ``through_pos`` (inclusive) is writable —
+        the on-demand growth step: a sequence gets its next page exactly
+        when a launch will carry it across a page boundary."""
+        need = min(through_pos // self.page_size + 1, self.table_pages)
+        have = int(self._mapped[slot])
+        if need <= have:
+            return
+        pages = self.allocator.allocate(self._active[slot].uid, need - have)
+        self._table[slot, have:need] = pages
+        self._mapped[slot] = need
+
+    def _release_slot(self, slot: int, req: Request) -> None:
+        """Finished/cancelled request: its pages return to the pool *now*."""
+        pages = [int(p) for p in self._table[slot, : int(self._mapped[slot])]]
+        if pages:
+            self.allocator.free(req.uid, pages)
+        self._table[slot] = paged_mod.TRASH_PAGE
+        self._mapped[slot] = 0
+        self._projected.pop(slot, None)
+
+    def _record_memory(self) -> None:
+        if self.ledger is None or self._token_bytes == 0:
+            return
+        used = sum(int(self._pos[s]) for s in self._active) * self._token_bytes
+        if self.paged:
+            reserved = (
+                int(self._mapped.sum()) * self.page_size * self._token_bytes
+            )
+        else:
+            reserved = len(self._active) * self.max_len * self._token_bytes
+        self.ledger.record_memory(reserved_bytes=reserved, used_bytes=used)
+
+    def concurrency_stats(self) -> dict[str, float]:
+        """Sustained (mean over steps with live work) and peak concurrency."""
+        sustained = (
+            self._concurrency_sum / self._concurrency_n
+            if self._concurrency_n else 0.0
+        )
+        return {"sustained": sustained, "peak": float(self.peak_concurrency)}
 
     def _prefill_slot(self, slot: int, req: Request) -> None:
         n = len(req.prompt)
@@ -339,6 +487,31 @@ class ServeEngine:
         req.generated.append(int(tok))
         self._slot_key[slot] = req_key
         self._slot_tok[slot] = tok
+        if self.paged:
+            if self._cache is None:
+                self._cache = {
+                    "segments": paged_mod.build_pool(
+                        cache["segments"], self.allocator.num_pages,
+                        self.page_size,
+                    )
+                }
+                self._token_bytes = paged_mod.pool_token_bytes(
+                    self._cache["segments"]
+                )
+            # map pages covering the prompt and scatter the prefill KV in;
+            # the page for the first decode write arrives via _ensure_mapped
+            n_store = paged_mod.pages_for(len(req.prompt), self.page_size)
+            pages = self.allocator.allocate(req.uid, n_store)
+            self._table[slot] = paged_mod.TRASH_PAGE
+            self._table[slot, :n_store] = pages
+            self._mapped[slot] = n_store
+            self._projected[slot] = self._projected_pages(req)
+            self._cache["segments"] = paged_mod.scatter_prefill(
+                self._cache["segments"], cache["segments"],
+                jnp.asarray(pages, jnp.int32), self.page_size,
+            )
+            self._pos[slot] = len(req.prompt)
+            return
         if self._cache is None:
             # allocate the batched cache (batch axis 1 under the layer stack)
             self._cache = {
@@ -347,6 +520,9 @@ class ServeEngine:
                     cache["segments"],
                 )
             }
+            self._token_bytes = paged_mod.pool_token_bytes(
+                self._cache["segments"]
+            )
         # splice the slot cache into the batch cache
         def splice(full, one):
             return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=1)
@@ -388,7 +564,7 @@ class ServeEngine:
         fn = self._fused_cache.get(k)
         if fn is not None:
             return fn
-        model, temp = self.model, self.temperature
+        model, temp, paged = self.model, self.temperature, self.paged
 
         def sample(logits, keys, counts):
             if temp > 0:
@@ -398,11 +574,18 @@ class ServeEngine:
                 )(logits, sub)
             return jnp.argmax(logits, axis=-1)
 
-        def fused(params, segments, pos, tok, keys, counts, active, remaining):
+        def fused(params, segments, table, pos, tok, keys, counts, active,
+                  remaining):
             def body(carry, _):
                 segments, pos, tok, counts, active, remaining = carry
+                cache = {"pos": pos, "segments": segments}
+                if paged:
+                    # the block table rides the whole scan unchanged: page
+                    # growth happens on the host *between* launches (a
+                    # launch is sized so it never outruns its mapped pages)
+                    cache["block_table"] = table
                 logits, new_cache = model.decode_step(
-                    params, tok[:, None], {"pos": pos, "segments": segments}
+                    params, tok[:, None], cache
                 )
                 nxt = jnp.where(active, sample(logits, keys, counts).astype(jnp.int32), tok)
                 emitted = active
@@ -418,16 +601,58 @@ class ServeEngine:
             segments, pos, tok, counts, _, _ = carry
             return segments, pos, tok, toks, valid
 
-        fused.__name__ = f"decode_fused_k{k}"
+        fused.__name__ = f"decode_fused_k{k}" + ("_paged" if paged else "")
         fn = jax.jit(fused)
         fn.__name__ = fused.__name__
         self._fused_cache[k] = fn
         return fn
 
+    #: launches without a new foreign sample before that producer's stale
+    #: p99 stops throttling K (a tenant that left must not pin fusion low)
+    FEEDBACK_STALE_LAUNCHES = 8
+
+    def _contention_ledger(self):
+        """Where foreign ``dispatch_wait`` samples actually land: the shared
+        queue's ledger when routed through HSA (an explicit ``ledger=`` only
+        carries this engine's memory accounting), else the explicit one."""
+        if self._hsa_queue is not None and self._hsa_queue.ledger is not None:
+            return self._hsa_queue.ledger
+        return self.ledger
+
+    def _observed_foreign_wait(self) -> float | None:
+        """Worst recent p99 ``dispatch_wait`` among *other* producers on the
+        shared ledger — the feedback FusionPolicy's contention signal.
+
+        A producer whose sample count has not moved for
+        ``FEEDBACK_STALE_LAUNCHES`` consecutive launches is ignored: the
+        quantile window is count-bounded, so a tenant that burst during
+        warmup and then went silent would otherwise hold K down forever.
+        """
+        led = self._contention_ledger()
+        if led is None:
+            return None
+        worst = None
+        for prod, cats in led.producer_breakdown().items():
+            if prod == self._producer:
+                continue
+            stat = cats.get(ledger_mod.DISPATCH_WAIT)
+            if stat is None or stat.count == 0:
+                continue
+            last, stale = self._wait_freshness.get(prod, (-1, 0))
+            stale = stale + 1 if stat.count == last else 0
+            self._wait_freshness[prod] = (stat.count, stale)
+            if stale >= self.FEEDBACK_STALE_LAUNCHES:
+                continue
+            q = led.quantile(ledger_mod.DISPATCH_WAIT, 0.99, producer=prod)
+            if q is not None and (worst is None or q > worst):
+                worst = q
+        return worst
+
     def _choose_fusion(self) -> int:
         """Fusion depth for this launch: the static knob, or the policy fed
-        with live contention (foreign packets pending on the shared device)
-        and the mean remaining budget of the active slots."""
+        with live contention (foreign packets pending on the shared device —
+        or, in feedback mode, the observed foreign p99 dispatch_wait) and
+        the mean remaining budget of the active slots."""
         remaining = [
             r.max_new_tokens - len(r.generated) for r in self._active.values()
         ]
@@ -438,9 +663,14 @@ class ServeEngine:
                     q.pending() for q in self._hsa_scheduler.queues
                     if q is not self._hsa_queue
                 )
+            observed = (
+                self._observed_foreign_wait()
+                if self.decode_fusion.feedback else None
+            )
             k = self.decode_fusion.choose_k(
                 queue_depth=depth,
                 mean_request_len=sum(remaining) / max(1, len(remaining)),
+                observed_wait_s=observed,
             )
         else:
             k = int(self.decode_fusion)
@@ -455,11 +685,20 @@ class ServeEngine:
         """
         for slot in range(self.slots):
             if slot not in self._active and self._queue:
+                if self.paged and not self._admit_paged(self._queue[0]):
+                    # head-of-line blocking is deliberate: skipping ahead to
+                    # smaller requests would starve large ones forever
+                    break
                 req = self._queue.pop(0)
                 self._prefill_slot(slot, req)
                 self._active[slot] = req
         if not self._active:
             return []
+
+        n_live = len(self._active)
+        self._concurrency_sum += n_live
+        self._concurrency_n += 1
+        self.peak_concurrency = max(self.peak_concurrency, n_live)
 
         k = self._choose_fusion()
         counts = np.zeros(self.slots, np.int32)
@@ -470,11 +709,18 @@ class ServeEngine:
             counts[slot] = len(req.generated)
             remaining[slot] = req.max_new_tokens - len(req.generated)
             active[slot] = remaining[slot] > 0
+            if self.paged and remaining[slot] > 0:
+                # on-demand growth, launch-granular: map through the last
+                # position this launch can write for the slot
+                last_write = int(self._pos[slot]) + min(k, int(remaining[slot])) - 1
+                self._ensure_mapped(slot, last_write)
+        table = jnp.asarray(self._table) if self.paged else None
         # per-slot positions: continuous batching — slots joined at different
         # times decode against their own sequence positions
         segments, pos, tok, toks, valid = self._launch(
             self._fused_decode_fn(k), self.params, self._cache["segments"],
-            jnp.asarray(self._pos, jnp.int32), jnp.asarray(self._slot_tok),
+            table, jnp.asarray(self._pos, jnp.int32),
+            jnp.asarray(self._slot_tok),
             jnp.asarray(self._slot_key), jnp.asarray(counts),
             jnp.asarray(active), jnp.asarray(remaining),
         )
@@ -490,7 +736,10 @@ class ServeEngine:
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 finished.append(req)
+                if self.paged:
+                    self._release_slot(slot, req)
                 del self._active[slot]
+        self._record_memory()
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:

@@ -1,0 +1,221 @@
+"""Paged KV cache: block pool, page allocator, block tables.
+
+The dense serving cache reserves ``[slots, max_len]`` KV rows per slot at
+admission — a short request strands almost its whole reservation, and the
+engine's concurrency ceiling is ``pool_bytes / (max_len · bytes_per_token)``
+regardless of how long requests actually run.  The paged cache instead
+treats KV memory the way the paper treats compute: a pool of
+runtime-(re)assignable regions.  Pages are the memory analogue of the
+paper's partially-reconfigurable regions — a fixed-size physical resource
+bound to a logical tenant at runtime and returned to the pool the moment
+the tenant finishes — so admission is bounded by *actual* footprint, not by
+the worst-case reservation.
+
+Layout
+------
+Each KV cache leaf ``[L, B, Hkv, max_len, hd]`` of the dense engine becomes
+a pool leaf ``[L, P, Hkv, page_size, hd]``: axis 1 indexes *pages* instead
+of slots.  A per-slot block table ``[slots, max_len/page_size]`` maps
+logical page indices to pool pages; one table is shared by every layer and
+every leaf (all layers cache the same positions).  Page 0 is reserved as a
+scratch ("trash") page: unmapped table entries point at it, so the fused
+decode scan's masked dummy writes (finished slots keep absorbing writes at
+their frozen position — see ``ServeEngine._fused_decode_fn``) land
+somewhere harmless instead of corrupting a live page.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+class PagePoolExhausted(RuntimeError):
+    """A page allocation found the pool empty.
+
+    Unreachable when admission runs with ``AdmissionPolicy.growth_reserve``
+    = 1.0 (every admitted request's worst-case page count is accounted
+    before admission); possible under optimistic overcommit (< 1.0), where
+    the caller decided the projection risk was acceptable.
+    """
+
+
+@dataclasses.dataclass
+class PageStats:
+    total_pages: int                 # usable pages (scratch page excluded)
+    free_pages: int
+    allocated_pages: int
+    high_water: int                  # max simultaneously allocated
+    allocs: int
+    frees: int
+
+
+class PageAllocator:
+    """Free-list allocator over the global block pool.
+
+    Page 0 is never handed out (the scratch page for masked writes).
+    Double-free and foreign-free are hard errors — a page's owner is
+    tracked so serving bugs surface as exceptions, not silent corruption.
+    """
+
+    def __init__(self, num_pages: int) -> None:
+        if num_pages < 2:
+            raise ValueError(
+                f"need >= 2 pages (1 scratch + 1 usable), got {num_pages}"
+            )
+        self.num_pages = num_pages
+        self._free: list[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
+        self._owner: dict[int, int] = {}        # page -> owner uid
+        self._high_water = 0
+        self._allocs = 0
+        self._frees = 0
+
+    @property
+    def total_pages(self) -> int:
+        return self.num_pages - 1               # scratch page is not usable
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_pages(self) -> int:
+        return len(self._owner)
+
+    def allocate(self, owner: int, n: int = 1) -> list[int]:
+        """Take ``n`` pages for ``owner`` (a request uid). All-or-nothing."""
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"requested {n} pages, {len(self._free)} free "
+                f"({self.allocated_pages}/{self.total_pages} allocated) — "
+                "admission overcommitted (growth_reserve < 1.0)?"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = owner
+        self._allocs += n
+        self._high_water = max(self._high_water, len(self._owner))
+        return pages
+
+    def free(self, owner: int, pages: list[int]) -> None:
+        """Return ``pages`` to the pool; every page must belong to ``owner``."""
+        for p in pages:
+            if p == TRASH_PAGE:
+                raise ValueError("cannot free the scratch page")
+            got = self._owner.get(p)
+            if got is None:
+                raise ValueError(f"double free of page {p}")
+            if got != owner:
+                raise ValueError(
+                    f"page {p} belongs to request {got}, not {owner}"
+                )
+        for p in pages:
+            del self._owner[p]
+            self._free.append(p)
+        self._frees += len(pages)
+
+    def pages_of(self, owner: int) -> list[int]:
+        return [p for p, o in self._owner.items() if o == owner]
+
+    def stats(self) -> PageStats:
+        return PageStats(
+            total_pages=self.total_pages,
+            free_pages=self.free_pages,
+            allocated_pages=self.allocated_pages,
+            high_water=self._high_water,
+            allocs=self._allocs,
+            frees=self._frees,
+        )
+
+    def check_invariants(self) -> None:
+        """free + allocated must tile the usable pool exactly, no aliasing."""
+        allocated = set(self._owner)
+        free = set(self._free)
+        assert not (allocated & free), f"aliased pages {allocated & free}"
+        assert TRASH_PAGE not in allocated and TRASH_PAGE not in free
+        union = allocated | free
+        expect = set(range(1, self.num_pages))
+        assert union == expect, f"leaked pages {expect - union}"
+
+
+# ---------------------------------------------------------------------------
+# pool construction / prefill scatter (pure-jax helpers the engine jits)
+# ---------------------------------------------------------------------------
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to store ``tokens`` KV rows."""
+    return -(-tokens // page_size)
+
+
+def build_pool(slot_cache_segments, num_pages: int, page_size: int):
+    """Zeroed pool tree from one slot's prefill cache ``segments`` tree.
+
+    Each leaf ``[L, 1, Hkv, T, hd]`` maps to ``[L, num_pages, Hkv,
+    page_size, hd]``; non-KV leaves are rejected upstream by the engine's
+    paged-support check.
+    """
+    def leaf(x):
+        L, _, H, _, hd = x.shape
+        return jnp.zeros((L, num_pages, H, page_size, hd), x.dtype)
+
+    return jax.tree.map(leaf, slot_cache_segments)
+
+
+def scatter_prefill(pool_segments, slot_segments, pages: jax.Array,
+                    page_size: int):
+    """Write one slot's prefill cache into its freshly mapped pages.
+
+    ``slot_segments`` leaves are ``[L, 1, Hkv, T, hd]`` with T >= n·ps;
+    ``pages`` is the [n] array of pool pages covering positions
+    ``[0, n·ps)``.  Page tails beyond the prompt hold prefill values of pad
+    positions — causally inert, masked by ``length`` at attention time.
+    """
+    n = pages.shape[0]
+
+    def leaf(pool, one):
+        L, _, H, T, hd = one.shape
+        src = one[:, 0, :, : n * page_size]                   # [L,H,n*ps,hd]
+        src = src.reshape(L, H, n, page_size, hd).transpose(0, 2, 1, 3, 4)
+        return pool.at[:, pages].set(src.astype(pool.dtype))
+
+    return jax.tree.map(leaf, pool_segments, slot_segments)
+
+
+#: cache leaves with a position axis (the ones a page actually stores rows
+#: of); recurrent state (ssm_state, conv_tail) has no per-token capacity
+#: and is skipped by the memory accounting.
+_TIME_INDEXED_KEYS = frozenset({"k", "v", "ckv", "krope", "mem_k", "mem_v"})
+
+
+def pool_token_bytes(segments) -> int:
+    """Bytes per cached token position across all time-indexed leaves.
+
+    ``reserved = mapped_pages · page_size · pool_token_bytes`` is the
+    engine's live KV reservation; the same per-token figure prices the
+    dense engine's ``slots · max_len`` reservation, so the Table I-style
+    utilization split compares like with like.  Leaves are [L, pages|B, H,
+    ps|T, hd]: per-token bytes drop the two middle capacity axes.
+    """
+    import jax.tree_util as jtu
+
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        last = path[-1]
+        key = last.key if hasattr(last, "key") else str(last)
+        if key in _TIME_INDEXED_KEYS and leaf.ndim >= 4:
+            # [L, pages|B, ..., T, ...]: drop the capacity axes (1 and -2)
+            per_token = int(np.prod(leaf.shape)) // (
+                leaf.shape[1] * leaf.shape[-2]
+            )
+            total += per_token * leaf.dtype.itemsize
+
+    jtu.tree_map_with_path(visit, segments)
+    return total

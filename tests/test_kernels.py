@@ -288,3 +288,74 @@ def test_pallas_decode_attention_matches_grouped_xla():
     a = pallas_decode(q, k, v, 70, block_k=32, interpret=True)
     b = ops.xla_decode_attention(q, k, v, 70)
     np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (block-table KV gather)
+# ---------------------------------------------------------------------------
+from repro.kernels.decode_attention import (                      # noqa: E402
+    paged_decode_attention as pallas_paged_decode,
+)
+
+
+def _paged_case(B, hkv, ps, n_pages, pool_pages, D, dtype, seed=0):
+    """Random pool + disjoint per-sequence tables (page 0 left as scratch)."""
+    rng = np.random.default_rng(seed)
+    k_pages = _rand((pool_pages, hkv, ps, D), dtype)
+    v_pages = _rand((pool_pages, hkv, ps, D), dtype)
+    perm = rng.permutation(np.arange(1, pool_pages))[: B * n_pages]
+    table = jnp.asarray(perm.reshape(B, n_pages), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, n_pages * ps + 1, size=B), jnp.int32)
+    return k_pages, v_pages, table, lengths
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hq,hkv,ps,n_pages", [(8, 2, 16, 4), (4, 4, 32, 2),
+                                               (8, 1, 8, 8)])
+def test_pallas_paged_decode_attention_sweep(dtype, hq, hkv, ps, n_pages):
+    B, D = 2, 32
+    q = _rand((B, hq, D), dtype)
+    k_pages, v_pages, table, lengths = _paged_case(
+        B, hkv, ps, n_pages, B * n_pages + 3, D, dtype)
+    got = pallas_paged_decode(q, k_pages, v_pages, table, lengths,
+                              interpret=True)
+    want = ref.paged_decode_attention(q, k_pages, v_pages, table, lengths)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_paged_gather_is_bitwise_dense():
+    """The gather-based XLA source must be bitwise-equal to dense decode
+    attention over the gathered cache — the paged serving engine's
+    equivalence guarantee bottoms out in this property."""
+    B, Hq, Hkv, ps, n_pages, D = 3, 4, 2, 16, 4, 16
+    q = _rand((B, Hq, D), jnp.float32)
+    k_pages, v_pages, table, lengths = _paged_case(
+        B, Hkv, ps, n_pages, B * n_pages + 1, D, jnp.float32)
+    paged = ops.xla_paged_decode_attention(q, k_pages, v_pages, table, lengths)
+    dense = ops.xla_decode_attention(
+        q, ref.gather_kv_pages(k_pages, table),
+        ref.gather_kv_pages(v_pages, table), lengths)
+    assert np.array_equal(np.asarray(paged), np.asarray(dense))
+
+
+def test_paged_scrambled_table_matches_contiguous():
+    """Page placement is transparent: scrambling WHERE pages live in the
+    pool (fixing what they contain) cannot change the result."""
+    B, Hkv, ps, n_pages, D = 2, 2, 8, 4, 16
+    pool_pages = B * n_pages + 1
+    q = _rand((B, 8, D), jnp.float32)
+    k_pages, v_pages, table, lengths = _paged_case(
+        B, Hkv, ps, n_pages, pool_pages, D, jnp.float32)
+    base = ref.paged_decode_attention(q, k_pages, v_pages, table, lengths)
+
+    # relocate every page under a permutation of the pool
+    perm = np.random.default_rng(5).permutation(np.arange(1, pool_pages))
+    relocate = np.zeros(pool_pages, np.int64)
+    relocate[1:] = perm
+    k2 = jnp.asarray(np.asarray(k_pages)[np.argsort(relocate)])
+    v2 = jnp.asarray(np.asarray(v_pages)[np.argsort(relocate)])
+    table2 = jnp.asarray(relocate[np.asarray(table)], jnp.int32)
+    moved = ref.paged_decode_attention(q, k2, v2, table2, lengths)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(moved))
