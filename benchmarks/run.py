@@ -74,6 +74,7 @@ def main(argv: list[str] | None = None) -> None:
         table5_prefetch,
         table6_dispatch,
         table7_paged,
+        table8_overcommit,
     )
 
     suites = (
@@ -84,6 +85,7 @@ def main(argv: list[str] | None = None) -> None:
         (table5_prefetch.run, {"n": min(n, 64)}),
         (table6_dispatch.run, {"n": min(n, 64)}),
         (table7_paged.run, {"n": min(n, 64)}),
+        (table8_overcommit.run, {"n": min(n, 64)}),
     )
     print("name,us_per_call,derived", flush=True)
     rows: list[str] = []

@@ -81,7 +81,38 @@ def kv_utilization_rows() -> list[str]:
         f"reserved_rows_per_req=256;stranded_frac={1 - dense['utilization']:.2f}",
         f"table1,kv_cache_paged,{paged['utilization']:.2f},"
         f"page_size=16;stranded_frac={1 - paged['utilization']:.2f}",
+        overcommit_row(),
     ]
+
+
+def overcommit_row() -> str:
+    """Table I "overcommit" row: what overcommitted admission *costs*.
+
+    The table8 trace at ``growth_reserve=0.5`` on the tight pool — the
+    resource question this time is not "how much of the claim is used" but
+    "how much extra work does reclaiming over-claimed memory create":
+    preemption rate (preemptions per decode step), wasted-recompute tokens
+    (the re-prefill resumes' replay bill), and pages reclaimed mid-flight.
+    """
+    from benchmarks.table7_paged import request_mix
+    from benchmarks.table8_overcommit import (
+        PAGE_SIZE, POOL_TOKENS, simulate_overcommit,
+    )
+    from repro.core.policy import AdmissionPolicy, PreemptionPolicy
+
+    reqs = request_mix(64)
+    out = simulate_overcommit(
+        reqs, POOL_TOKENS, PAGE_SIZE,
+        AdmissionPolicy(growth_reserve=0.5), PreemptionPolicy(),
+    )
+    rate = out["preemptions"] / max(1, out["steps"])
+    return (
+        f"table1,overcommit,{rate:.4f},"
+        f"growth_reserve=0.5;preemptions={out['preemptions']};"
+        f"recompute_tokens={out['recompute_tokens']};"
+        f"pages_reclaimed={out['pages_reclaimed']};"
+        f"resumes={out['resumes']}"
+    )
 
 
 if __name__ == "__main__":

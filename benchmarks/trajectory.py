@@ -37,6 +37,9 @@ ASSERTED = (
     ("table7", "paged_wins"),
     ("table7", "serve_paged_identical"),
     ("table7", "serve_paged_wins"),
+    ("table8", "overcommit_wins"),
+    ("table8", "serve_overcommit_identical"),
+    ("table8", "serve_overcommit_wins"),
 )
 
 #: deterministic metrics: current >= baseline * (1 - TOLERANCE)
@@ -45,6 +48,8 @@ TRACKED = (
     ("table7", "paged_trace_ps16_pool2048"),
     ("table7", "serve_paged_concurrency"),       # real-jax concurrency ratio
     ("table1", "kv_cache_paged"),                # pool utilization
+    ("table8", "overcommit_trace_r50"),          # overcommit sustained conc.
+    ("table8", "serve_overcommit_concurrency"),  # real-jax overcommit ratio
 )
 
 #: tracked metrics where *lower* is better (regression = grew > tolerance)

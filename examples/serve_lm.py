@@ -141,6 +141,36 @@ def main():
           f"(dense strands max_len - len per request)")
     print(f"pages: {paged_eng.allocator.stats()}")
 
+    # --- overcommit + graceful preemption -----------------------------------
+    # growth_reserve=0.5 funds only half of each request's decode budget at
+    # admission, so more requests get in — and when the pool then runs dry
+    # mid-decode, victims are parked (pages reclaimed, progress kept) and
+    # resumed instead of failing.  Streams stay bitwise-identical anyway.
+    from repro.core.policy import AdmissionPolicy, PreemptionPolicy
+
+    oled = _Ledger()
+    over_eng = ServeEngine(
+        model, params, batch_slots=8, max_len=96, temperature=0.0,
+        decode_fusion=4, paged=True, page_size=8, pool_pages=6,
+        admission=AdmissionPolicy(growth_reserve=0.5),
+        preemption=PreemptionPolicy(snapshot_threshold_tokens=16),
+        ledger=oled,
+    )
+    for p in prompts:
+        over_eng.submit(p, max_new_tokens=12)
+    over_done = over_eng.run_to_completion()
+    over_same = {r.uid: r.generated for r in over_done} == {
+        r.uid: r.generated for r in done
+    }
+    oc = oled.overcommit_split()
+    print(f"\novercommitted engine (growth_reserve=0.5, 5-page pool): "
+          f"bitwise-identical through preemption: {over_same}")
+    print(f"  preemptions={oc['preemptions']:.0f} "
+          f"(snapshot resumes {oc['snapshot_resumes']:.0f}, re-prefill "
+          f"{oc['reprefill_resumes']:.0f}), pages reclaimed "
+          f"{oc['pages_reclaimed']:.0f}, recompute tokens "
+          f"{oc['recompute_tokens']:.0f}")
+
     print("\nshared-agent ledger:")
     for line in ledger.table().splitlines():
         print(" ", line)

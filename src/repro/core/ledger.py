@@ -63,8 +63,18 @@ DISPATCH_WAIT = "dispatch_wait"
 RECONFIG_EXPOSED = "reconfig_exposed"
 RECONFIG_HIDDEN = "reconfig_hidden"
 
+# Overcommitted paged serving (Table I "overcommit" row): the host time spent
+# reclaiming a victim's KV pages (park, incl. the optional snapshot gather)
+# and bringing a parked request back (resume: snapshot restore, or the
+# re-prefill's extra prefill — the *replayed decode* rides the normal decode
+# categories and is accounted as recompute_tokens, not time, because it is
+# indistinguishable from useful work at the launch level).
+PREEMPT_PARK = "preempt_park"
+PREEMPT_RESUME = "preempt_resume"
+
 CATEGORIES = (SETUP, RECONFIG, RECONFIG_EXPOSED, RECONFIG_HIDDEN, DISPATCH,
-              DISPATCH_SUBMIT, DISPATCH_GRANT, DISPATCH_WAIT, EXEC, WAIT)
+              DISPATCH_SUBMIT, DISPATCH_GRANT, DISPATCH_WAIT, EXEC, WAIT,
+              PREEMPT_PARK, PREEMPT_RESUME)
 
 OCCURRENCE = {
     SETUP: "once",
@@ -77,6 +87,8 @@ OCCURRENCE = {
     DISPATCH_WAIT: "every dispatch",
     EXEC: "every dispatch",
     WAIT: "every dispatch",
+    PREEMPT_PARK: "on pool pressure",
+    PREEMPT_RESUME: "per resume",
 }
 
 
@@ -114,6 +126,12 @@ QUANTILE_WINDOW = 256
 class OverheadLedger:
     """Thread-safe accumulator of measured runtime overheads."""
 
+    _PREEMPT_ZERO = {
+        "preemptions": 0.0, "resumes": 0.0, "pages_reclaimed": 0.0,
+        "recompute_tokens": 0.0, "snapshot_resumes": 0.0,
+        "reprefill_resumes": 0.0, "snapshot_bytes": 0.0,
+    }
+
     def __init__(self, keep_entries: bool = False) -> None:
         self._lock = threading.Lock()
         self._stats: dict[str, Stat] = {c: Stat() for c in CATEGORIES}
@@ -123,6 +141,7 @@ class OverheadLedger:
         # (producer|None, category) -> ring of recent samples
         self._recent: dict[tuple[str | None, str], deque[float]] = {}
         self._memory: dict[str, dict[str, float]] = {}
+        self._preempt: dict[str, float] = dict(self._PREEMPT_ZERO)
 
     def record(self, category: str, seconds: float, **meta: Any) -> None:
         if category not in self._stats:
@@ -211,6 +230,7 @@ class OverheadLedger:
             self._by_producer = {}
             self._recent = {}
             self._memory = {}
+            self._preempt = dict(self._PREEMPT_ZERO)
             if self._entries is not None:
                 self._entries = []
 
@@ -263,6 +283,48 @@ class OverheadLedger:
             m["used_bytes"] / m["reserved_bytes"] if m["reserved_bytes"] else 1.0
         )
         return m
+
+    # -- overcommit accounting (Table I "overcommit" row) --------------------
+
+    def record_preemption(self, *, pages_reclaimed: int,
+                          snapshot_bytes: int = 0) -> None:
+        """One victim parked: its pages went back to the pool; a snapshot
+        park additionally copied ``snapshot_bytes`` of KV to the host."""
+        with self._lock:
+            self._preempt["preemptions"] += 1.0
+            self._preempt["pages_reclaimed"] += float(pages_reclaimed)
+            self._preempt["snapshot_bytes"] += float(snapshot_bytes)
+
+    def record_resume(self, *, mode: str, recompute_tokens: int = 0) -> None:
+        """One parked request resumed.  ``recompute_tokens`` is the wasted
+        work of the re-prefill path (prompt recompute + generated-token
+        replay); a snapshot resume wastes none."""
+        with self._lock:
+            self._preempt["resumes"] += 1.0
+            self._preempt["recompute_tokens"] += float(recompute_tokens)
+            key = ("snapshot_resumes" if mode == "snapshot"
+                   else "reprefill_resumes")
+            self._preempt[key] += 1.0
+
+    def overcommit_split(self) -> dict[str, float]:
+        """Preemption counters + timings for the Table I "overcommit" row.
+
+        ``preemption_rate`` is preemptions per recorded launch
+        (``dispatch_wait`` samples — only populated when serving routes
+        through an HSA queue).  ``launches`` is exposed alongside so a rate
+        of 0.0 from an unwired ledger is distinguishable from a genuinely
+        preemption-free run; consumers wanting the raw count read
+        ``preemptions``."""
+        with self._lock:
+            out = dict(self._preempt)
+            out["park_s"] = self._stats[PREEMPT_PARK].total_s
+            out["resume_s"] = self._stats[PREEMPT_RESUME].total_s
+            launches = self._stats[DISPATCH_WAIT].count
+        out["launches"] = float(launches)
+        out["preemption_rate"] = (
+            out["preemptions"] / launches if launches else 0.0
+        )
+        return out
 
     def reconfig_split(self) -> dict[str, float]:
         """Exposed vs hidden reconfiguration time (scheduler-clock seconds).

@@ -174,11 +174,38 @@ class AdmissionPolicy:
 
     def projected_pages(self, prompt_len: int, max_new_tokens: int,
                         page_size: int) -> int:
-        """Worst-case pages this request is projected to map over its life."""
+        """Pages this request is projected to map over its life.
+
+        Counts *written* rows: generating ``g`` tokens writes ``prompt + g
+        - 1`` KV rows (the final sampled token is never fed back), so at
+        ``growth_reserve=1.0`` the projection equals
+        :meth:`worst_case_pages` exactly — which is what makes exhaustion
+        unreachable at full reserve without over-reserving a page at exact
+        page boundaries."""
         projected = prompt_len + max(
             1, int(math.ceil(self.growth_reserve * max_new_tokens))
-        )
-        return -(-projected // page_size)
+        ) - 1
+        return -(-max(1, projected) // page_size)
+
+    def worst_case_pages(self, prompt_len: int, max_new_tokens: int,
+                         page_size: int) -> int:
+        """Pages the request maps if it runs its *full* budget — the
+        ``growth_reserve``-independent figure.  A request whose worst case
+        exceeds the pool can never complete, not even alone with every other
+        tenant preempted, so this (not the reserve-scaled projection) is what
+        permanent rejection must test under overcommit.
+
+        Exact, not conservative: the final sampled token is never fed back,
+        so its KV row is never written — the cache tops out at ``prompt +
+        max_new - 1`` rows.  Rounding up here would falsely *permanently*
+        reject boundary-straddling requests that complete fine alone."""
+        return -(-(prompt_len + max(1, max_new_tokens) - 1) // page_size)
+
+    @property
+    def overcommitted(self) -> bool:
+        """True when admission funds less than the full decode budget —
+        the regime where mid-flight exhaustion (hence preemption) is live."""
+        return self.growth_reserve < 1.0
 
     def admit(self, *, free_pages: int, projected_growth_pages: int,
               request_pages: int) -> bool:
@@ -186,6 +213,107 @@ class AdmissionPolicy:
         summed unmapped remainder of already-admitted requests."""
         available = free_pages - projected_growth_pages - self.watermark_pages
         return request_pages <= available
+
+
+#: resume modes a preempted request can come back through
+RESUME_REPREFILL = "reprefill"    # recompute prompt + replay generated tokens
+RESUME_SNAPSHOT = "snapshot"      # restore the host-side KV page snapshot
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionCandidate:
+    """What the :class:`PreemptionPolicy` sees of one active request.
+
+    ``mapped_pages`` is what parking it returns to the pool; ``tokens_done``
+    (prompt + generated rows in its cache) is what a re-prefill resume has to
+    recompute — the wasted work the victim order tries to minimize."""
+
+    uid: int
+    mapped_pages: int
+    tokens_done: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionPolicy:
+    """Who gets parked when the page pool runs dry, and how they come back.
+
+    The paper's fabric is shared "simultaneously from other sources": a
+    region a tenant holds can be demanded back at runtime.  For overcommitted
+    paged serving that means a mid-decode request's KV pages are reclaimable
+    — the engine parks **victims** (pages back to the pool, generated-so-far
+    tokens kept) instead of letting :class:`~repro.serve.paged.PagePoolExhausted`
+    escape, and resumes them when pages free up.
+
+    ``order`` ranks victims:
+
+      - ``"youngest"`` (default) — latest-admitted first.  The oldest request
+        is never preempted while a younger one holds pages, so the head of
+        the line always drains and admission order stays livelock-free.
+      - ``"oldest"`` — earliest-admitted first (drain-and-restart flavor).
+      - ``"most_pages"`` — largest page holding first (fewest victims per
+        reclaim, at the cost of evicting the most expensive cache to rebuild).
+
+    Resume picks the cheaper of two paths per victim, by cost at park time:
+
+      - **re-prefill** (always available): recompute the prompt and replay
+        the generated tokens through the normal decode path — costs
+        ``tokens_done`` of recompute, holds no host memory;
+      - **snapshot** (``allow_snapshot``): copy the victim's live KV pages to
+        host at park and scatter them back at resume — zero recompute, costs
+        two page-pool copies plus host bytes while parked.
+
+    ``snapshot_threshold_tokens`` is the crossover: a victim with at least
+    this many cached rows snapshots (recompute grows linearly with rows;
+    the copy is bandwidth-priced), a shorter one re-prefills.
+    """
+
+    order: str = "youngest"
+    allow_snapshot: bool = True
+    snapshot_threshold_tokens: int = 24
+
+    _ORDERS = ("youngest", "oldest", "most_pages")
+
+    def __post_init__(self) -> None:
+        if self.order not in self._ORDERS:
+            raise ValueError(
+                f"order must be one of {self._ORDERS}, got {self.order!r}"
+            )
+        if self.snapshot_threshold_tokens < 0:
+            raise ValueError(
+                "snapshot_threshold_tokens must be >= 0, got "
+                f"{self.snapshot_threshold_tokens}"
+            )
+
+    def victims(self, candidates: Sequence[PreemptionCandidate],
+                pages_needed: int) -> list[int]:
+        """Uids to park, in order, until ``pages_needed`` pages are covered.
+
+        Returns the shortest prefix of the ranked candidates whose summed
+        ``mapped_pages`` reaches ``pages_needed`` — or every candidate when
+        even that falls short (the engine then re-plans with what it got)."""
+        if pages_needed <= 0:
+            return []
+        if self.order == "youngest":
+            ranked = sorted(candidates, key=lambda c: -c.uid)
+        elif self.order == "oldest":
+            ranked = sorted(candidates, key=lambda c: c.uid)
+        else:                                   # most_pages; uid tiebreak
+            ranked = sorted(candidates, key=lambda c: (-c.mapped_pages, c.uid))
+        out: list[int] = []
+        covered = 0
+        for c in ranked:
+            if covered >= pages_needed:
+                break
+            out.append(c.uid)
+            covered += c.mapped_pages
+        return out
+
+    def resume_mode(self, *, tokens_done: int) -> str:
+        """``RESUME_SNAPSHOT`` or ``RESUME_REPREFILL`` for a victim with
+        ``tokens_done`` cached rows at park time."""
+        if self.allow_snapshot and tokens_done >= self.snapshot_threshold_tokens:
+            return RESUME_SNAPSHOT
+        return RESUME_REPREFILL
 
 
 @dataclasses.dataclass(frozen=True)

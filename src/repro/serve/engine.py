@@ -31,7 +31,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import ledger as ledger_mod
-from repro.core.policy import AdmissionPolicy, FusionPolicy
+from repro.core.policy import (
+    RESUME_REPREFILL,
+    RESUME_SNAPSHOT,
+    AdmissionPolicy,
+    FusionPolicy,
+    PreemptionCandidate,
+    PreemptionPolicy,
+)
 from repro.dist import act
 from repro.dist.sharding import ShardingRules
 from repro.serve import paged as paged_mod
@@ -155,22 +162,52 @@ class Request:
     max_new_tokens: int
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    parked: bool = False               # preempted, awaiting resume
+    preemptions: int = 0               # times this request was parked
+    # committed tokens a re-prefill resume is replaying; the engine asserts
+    # regenerated tokens match this prefix bitwise, then drops it
+    replay: list[int] | None = None
+
+
+@dataclasses.dataclass
+class _Parked:
+    """A preempted request's host-side state between park and resume."""
+
+    req: Request
+    pos: int                           # cache rows at park (prompt + gen - 1)
+    mode: str                          # RESUME_SNAPSHOT | RESUME_REPREFILL
+    snapshot: Any | None               # gather_pages tree (snapshot mode)
 
 
 class ServeTruncated(RuntimeError):
     """``run_to_completion`` exhausted ``max_steps`` with work still pending.
 
     Carries the partial result so callers can't mistake truncation for
-    completion: ``done`` holds the finished requests, ``pending`` the
-    still-active and still-queued ones (in-flight generations intact).
+    completion — and distinguishes *why* each unfinished request is
+    unfinished:
+
+    - ``pending`` — active slots and admissible queued requests: transient,
+      more steps would finish them;
+    - ``parked`` — preempted mid-flight by pool pressure (generated-so-far
+      tokens intact): transient, they resume when pages free up;
+    - ``rejected`` — queued *or parked* requests whose worst-case page
+      footprint can never fit the pool under the current admission policy:
+      permanent, no number of steps completes them.  (``submit`` refuses
+      these up front; they appear here only if the policy was tightened
+      after submission.)
     """
 
-    def __init__(self, done: list[Request], pending: list[Request]) -> None:
+    def __init__(self, done: list[Request], pending: list[Request], *,
+                 parked: list[Request] | tuple = (),
+                 rejected: list[Request] | tuple = ()) -> None:
         self.done = done
         self.pending = pending
+        self.parked = list(parked)
+        self.rejected = list(rejected)
         super().__init__(
             f"serving truncated at max_steps: {len(done)} requests done, "
-            f"{len(pending)} pending"
+            f"{len(pending)} pending, {len(self.parked)} parked, "
+            f"{len(self.rejected)} permanently rejected"
         )
 
 
@@ -205,6 +242,7 @@ class ServeEngine:
                  paged: bool = False, page_size: int = 16,
                  pool_pages: int | None = None,
                  admission: AdmissionPolicy | None = None,
+                 preemption: PreemptionPolicy | None = None,
                  ledger: "ledger_mod.OverheadLedger | None" = None):
         self.model = model
         self.cfg = model.cfg
@@ -256,6 +294,16 @@ class ServeEngine:
         self.paged = paged
         self.page_size = page_size
         self.admission = admission if admission is not None else AdmissionPolicy()
+        self.preemption = preemption if preemption is not None else PreemptionPolicy()
+        # preempted requests awaiting resume, kept oldest-uid-first: parked
+        # requests were admitted before anything still queued, so they also
+        # resume before anything still queued (strict seniority, no starvation)
+        self._parked: list[_Parked] = []
+        # overcommit counters (mirrored into the ledger when one is attached)
+        self.preemptions = 0
+        self.resumes = 0
+        self.pages_reclaimed = 0
+        self.recompute_tokens = 0
         if paged:
             if not self._paged_safe():
                 raise ValueError(
@@ -341,11 +389,20 @@ class ServeEngine:
                     f"prompt ({len(req.prompt)}) + max_new_tokens "
                     f"({max_new_tokens}) exceeds max_len={self.max_len}"
                 )
-            need = self._projected_pages(req)
-            cap = self.allocator.total_pages - self.admission.watermark_pages
-            if need > cap:
+            # permanent rejection happens here, at submit: a request whose
+            # *worst-case* footprint (growth_reserve-independent — under
+            # overcommit it may map far more than its admission projection)
+            # exceeds the pool can never complete, even with every other
+            # tenant preempted.  Transient exhaustion mid-flight is handled
+            # by preemption, never by an error.
+            if self._never_fits(req):
+                worst = self.admission.worst_case_pages(
+                    len(req.prompt), max_new_tokens, self.page_size
+                )
+                cap = (self.allocator.total_pages
+                       - self.admission.watermark_pages)
                 raise ValueError(
-                    f"request projects {need} pages but the pool can ever "
+                    f"request needs up to {worst} pages but the pool can ever "
                     f"admit at most {cap} — it would block the queue forever"
                 )
         self._queue.append(req)
@@ -405,6 +462,18 @@ class ServeEngine:
             len(req.prompt), req.max_new_tokens, self.page_size
         )
 
+    def _never_fits(self, req: Request) -> bool:
+        """Permanently inadmissible: the request's worst-case footprint
+        exceeds what the pool can ever fund under the current admission
+        policy — no amount of preemption or waiting completes it.  The one
+        predicate behind submit-time rejection and truncation-time
+        classification (queued and parked alike: a parked victim's restore
+        floor never exceeds its worst case)."""
+        worst = self.admission.worst_case_pages(
+            len(req.prompt), req.max_new_tokens, self.page_size
+        )
+        return worst > self.allocator.total_pages - self.admission.watermark_pages
+
     def _projected_growth(self) -> int:
         """Pages the already-admitted requests are still projected to map."""
         return sum(
@@ -419,11 +488,22 @@ class ServeEngine:
             request_pages=self._projected_pages(req),
         )
 
-    def _ensure_mapped(self, slot: int, through_pos: int) -> None:
-        """Map pages so position ``through_pos`` (inclusive) is writable —
-        the on-demand growth step: a sequence gets its next page exactly
-        when a launch will carry it across a page boundary."""
-        need = min(through_pos // self.page_size + 1, self.table_pages)
+    def _launch_pages(self, slot: int, req: Request, k: int) -> int:
+        """Mapped-page target for ``slot`` to absorb a depth-``k`` launch
+        (through the last position the launch can write).  The one formula
+        behind both growth *funding* (`_fund_growth`) and growth *mapping*
+        (`_grow_to`) — keeping them a single computation is what makes
+        mid-launch ``PagePoolExhausted`` unreachable by construction."""
+        rem = req.max_new_tokens - len(req.generated)
+        if rem <= 0:
+            return int(self._mapped[slot])
+        last_write = int(self._pos[slot]) + min(k, rem) - 1
+        return min(last_write // self.page_size + 1, self.table_pages)
+
+    def _grow_to(self, slot: int, need: int) -> None:
+        """Map pages up to the ``need`` target — the on-demand growth step:
+        a sequence gets its next page exactly when a launch will carry it
+        across a page boundary."""
         have = int(self._mapped[slot])
         if need <= have:
             return
@@ -439,6 +519,206 @@ class ServeEngine:
         self._table[slot] = paged_mod.TRASH_PAGE
         self._mapped[slot] = 0
         self._projected.pop(slot, None)
+
+    # -- preemption: park / resume lifecycle ----------------------------------
+
+    @property
+    def parked_requests(self) -> list[Request]:
+        return [e.req for e in self._parked]
+
+    def preempt(self, uid: int | None = None) -> int:
+        """Park one active request, returning its pages to the pool *now*.
+
+        With ``uid=None`` the engine's :class:`PreemptionPolicy` picks the
+        victim (youngest-first by default).  This is the external-pressure
+        entry point — the paper's fabric is shared "simultaneously from
+        other sources", and this is how another source takes serving's
+        memory back mid-flight.  The request keeps its generated-so-far
+        tokens and resumes automatically once pages free up.
+        """
+        if not self.paged:
+            raise RuntimeError("preemption requires paged=True")
+        if uid is None:
+            victims = self.preemption.victims(self._candidates(), 1)
+            if not victims:
+                raise ValueError("no active request to preempt")
+            uid = victims[0]
+        slot = next(
+            (s for s, r in self._active.items() if r.uid == uid), None
+        )
+        if slot is None:
+            raise ValueError(f"request {uid} is not active")
+        self._park_slot(slot)
+        return uid
+
+    def resume(self, uid: int) -> bool:
+        """Force a resume attempt for a parked request.
+
+        Returns False when the pool still cannot fund it (the request stays
+        parked — re-park, never spin).  Raises ``ValueError`` if ``uid`` is
+        not parked: resuming a request twice (or one that is active, done,
+        or unknown) is a caller bug, not a transient condition.
+        """
+        entry = next((e for e in self._parked if e.req.uid == uid), None)
+        if entry is None:
+            raise ValueError(f"request {uid} is not parked (double resume?)")
+        slot = next(
+            (s for s in range(self.slots) if s not in self._active), None
+        )
+        if slot is None:
+            return False
+        return self._try_resume(entry, slot)
+
+    def _candidates(self) -> list[PreemptionCandidate]:
+        return [
+            PreemptionCandidate(
+                uid=req.uid,
+                mapped_pages=int(self._mapped[slot]),
+                tokens_done=int(self._pos[slot]),
+            )
+            for slot, req in self._active.items()
+        ]
+
+    def _park_slot(self, slot: int) -> None:
+        """Reclaim one active request's pages; keep its progress on the host."""
+        req = self._active.pop(slot)
+        t0 = time.perf_counter_ns()
+        pos = int(self._pos[slot])
+        mode = self.preemption.resume_mode(tokens_done=pos)
+        snapshot = None
+        snap_bytes = 0
+        reclaimed = int(self._mapped[slot])
+        if mode == RESUME_SNAPSHOT:
+            # only the pages holding written rows (0..pos-1) matter; pages
+            # mapped ahead for a launch that never ran hold nothing
+            keep = paged_mod.pages_for(pos, self.page_size)
+            snapshot = paged_mod.gather_pages(
+                self._cache["segments"], self._table[slot, :keep]
+            )
+            snap_bytes = paged_mod.snapshot_bytes(snapshot)
+        self._release_slot(slot, req)
+        req.parked = True
+        req.preemptions += 1
+        self._parked.append(_Parked(req=req, pos=pos, mode=mode,
+                                    snapshot=snapshot))
+        self._parked.sort(key=lambda e: e.req.uid)
+        self.preemptions += 1
+        self.pages_reclaimed += reclaimed
+        if self.ledger is not None:
+            self.ledger.record(
+                ledger_mod.PREEMPT_PARK, (time.perf_counter_ns() - t0) * 1e-9,
+                producer=self._producer, what=mode, uid=req.uid,
+            )
+            self.ledger.record_preemption(
+                pages_reclaimed=reclaimed, snapshot_bytes=snap_bytes
+            )
+
+    def _try_resume(self, entry: _Parked, slot: int) -> bool:
+        """Bring a parked request back into ``slot`` if the pool can fund it.
+
+        The admission test mirrors fresh admission (projected lifetime pages
+        against free minus in-flight growth), floored by what the resume
+        needs *immediately* — a snapshot restore maps every written row's
+        page up front, which late in a request's life can exceed the
+        reserve-scaled projection.
+        """
+        req = entry.req
+        need_now = paged_mod.pages_for(
+            entry.pos if entry.mode == RESUME_SNAPSHOT else len(req.prompt),
+            self.page_size,
+        )
+        request_pages = max(need_now, self._projected_pages(req))
+        if not self.admission.admit(
+            free_pages=self.allocator.free_pages,
+            projected_growth_pages=self._projected_growth(),
+            request_pages=request_pages,
+        ):
+            return False                      # still full: stays parked
+        t0 = time.perf_counter_ns()
+        self._parked.remove(entry)
+        recompute = 0
+        if entry.mode == RESUME_SNAPSHOT:
+            n = paged_mod.pages_for(entry.pos, self.page_size)
+            pages = self.allocator.allocate(req.uid, n)
+            self._table[slot] = paged_mod.TRASH_PAGE
+            self._table[slot, :n] = pages
+            self._mapped[slot] = n
+            self._cache["segments"] = paged_mod.restore_pages(
+                self._cache["segments"], entry.snapshot, np.asarray(pages)
+            )
+            self._pos[slot] = entry.pos
+            self._projected[slot] = self._projected_pages(req)
+            self._slot_key[slot] = np.asarray(
+                jax.random.fold_in(self._base_key, req.uid)
+            )
+        else:
+            # re-prefill + replay: recompute the prompt cache (bitwise equal
+            # to the original prefill — same fn, same inputs), rewind the
+            # request, and let the normal decode path regenerate the
+            # committed tokens.  Sampling is position-indexed, so the replay
+            # emits the same stream bit for bit — asserted in step() against
+            # ``req.replay`` as it goes.
+            committed = req.replay if req.replay is not None else req.generated
+            recompute = len(req.prompt) + len(committed) - 1
+            req.replay = committed
+            req.generated = []
+            self._prefill_slot(slot, req)
+            if req.generated[0] != committed[0]:
+                raise RuntimeError(
+                    f"preemption replay diverged at request {req.uid} token 0: "
+                    f"re-prefill sampled {req.generated[0]}, committed "
+                    f"{committed[0]}"
+                )
+        req.parked = False
+        self._active[slot] = req
+        self.resumes += 1
+        self.recompute_tokens += recompute
+        if self.ledger is not None:
+            self.ledger.record(
+                ledger_mod.PREEMPT_RESUME,
+                (time.perf_counter_ns() - t0) * 1e-9,
+                producer=self._producer, what=entry.mode, uid=req.uid,
+            )
+            self.ledger.record_resume(
+                mode=entry.mode, recompute_tokens=recompute
+            )
+        return True
+
+    def _fund_growth(self, k: int) -> int:
+        """Make this launch's page growth allocatable; the funded depth.
+
+        Plans every live slot's mapping need for a depth-``k`` launch.  On a
+        shortfall the cheap lever comes first: **shrink the launch** (halve
+        ``k``) — a shallower scan needs fewer pages ahead and costs nothing
+        but amortization, while preempting costs a victim its pages and
+        possibly a full re-prefill for a launch depth that might then be
+        abandoned anyway.  Only when even ``k=1`` cannot be funded does the
+        engine park policy-chosen victims, one at a time with a re-plan
+        between (a parked victim both frees its pages and drops its own
+        need).  A lone request can always fund itself at any depth —
+        ``submit`` rejected anything whose worst case exceeds the pool — so
+        the loop terminates with the launch funded and
+        ``PagePoolExhausted`` stays unreachable.
+        """
+        while True:
+            needed = sum(
+                max(0, self._launch_pages(slot, req, k)
+                    - int(self._mapped[slot]))
+                for slot, req in self._active.items()
+            )
+            shortfall = needed - self.allocator.free_pages
+            if shortfall <= 0:
+                return k
+            if k > 1:
+                k = (k + 1) // 2
+                continue
+            victims = self.preemption.victims(self._candidates(), shortfall)
+            if not victims:
+                return k                   # nothing to reclaim (empty batch)
+            slot = next(
+                s for s, r in self._active.items() if r.uid == victims[0]
+            )
+            self._park_slot(slot)
 
     def _record_memory(self) -> None:
         if self.ledger is None or self._token_bytes == 0:
@@ -499,7 +779,7 @@ class ServeEngine:
                     self._cache["segments"]
                 )
             # map pages covering the prompt and scatter the prefill KV in;
-            # the page for the first decode write arrives via _ensure_mapped
+            # the page for the first decode write arrives via _grow_to
             n_store = paged_mod.pages_for(len(req.prompt), self.page_size)
             pages = self.allocator.allocate(req.uid, n_store)
             self._table[slot] = paged_mod.TRASH_PAGE
@@ -684,23 +964,50 @@ class ServeEngine:
         Returns requests completed this step.
         """
         for slot in range(self.slots):
-            if slot not in self._active and self._queue:
-                if self.paged and not self._admit_paged(self._queue[0]):
-                    # head-of-line blocking is deliberate: skipping ahead to
-                    # smaller requests would starve large ones forever
+            if slot in self._active:
+                continue
+            if self.paged and self._parked:
+                # parked requests were admitted before anything still queued
+                # (admission is FIFO), so they also resume first — and an
+                # unresumable head blocks younger work exactly like the
+                # queue head does.  A failed attempt is a no-op: the entry
+                # stays parked until pages free up, never spins.
+                if not self._try_resume(self._parked[0], slot):
                     break
-                req = self._queue.pop(0)
-                self._prefill_slot(slot, req)
-                self._active[slot] = req
+                continue
+            if not self._queue:
+                break
+            if self.paged and not self._admit_paged(self._queue[0]):
+                # head-of-line blocking is deliberate: skipping ahead to
+                # smaller requests would starve large ones forever
+                break
+            req = self._queue.pop(0)
+            self._prefill_slot(slot, req)
+            self._active[slot] = req
         if not self._active:
             return []
 
-        n_live = len(self._active)
+        k = self._choose_fusion()
+        if self.paged:
+            # fund this launch's on-demand growth first: under overcommit
+            # (growth_reserve < 1) the pool can run dry mid-decode, and the
+            # answer is a shallower launch, then preemption — never
+            # PagePoolExhausted
+            k = self._fund_growth(k)
+            if not self._active:
+                return []                   # every live slot became a victim
+            # re-cap to the survivors: if the longest-remaining slot was
+            # parked, a depth-k scan past every survivor's budget would run
+            # all-masked decode steps (growth stays funded — it was budgeted
+            # for the larger k)
+            k = max(1, min(k, max(
+                r.max_new_tokens - len(r.generated)
+                for r in self._active.values()
+            )))
+        n_live = len(self._active)          # post-preemption: slots decoding
         self._concurrency_sum += n_live
         self._concurrency_n += 1
         self.peak_concurrency = max(self.peak_concurrency, n_live)
-
-        k = self._choose_fusion()
         counts = np.zeros(self.slots, np.int32)
         remaining = np.zeros(self.slots, np.int32)
         active = np.zeros(self.slots, bool)
@@ -711,9 +1018,8 @@ class ServeEngine:
             active[slot] = remaining[slot] > 0
             if self.paged and remaining[slot] > 0:
                 # on-demand growth, launch-granular: map through the last
-                # position this launch can write for the slot
-                last_write = int(self._pos[slot]) + min(k, int(remaining[slot])) - 1
-                self._ensure_mapped(slot, last_write)
+                # position this launch can write for the slot (funded above)
+                self._grow_to(slot, self._launch_pages(slot, req, k))
         table = jnp.asarray(self._table) if self.paged else None
         # per-slot positions: continuous batching — slots joined at different
         # times decode against their own sequence positions
@@ -733,6 +1039,19 @@ class ServeEngine:
         finished = []
         for slot, req in list(self._active.items()):
             req.generated.extend(int(t) for t in toks[valid[:, slot], slot])
+            if req.replay is not None:
+                # re-prefill resume in flight: the regenerated stream must
+                # match the committed tokens bit for bit — this is the
+                # bitwise-identity claim, checked live, every launch
+                n = min(len(req.generated), len(req.replay))
+                if req.generated[:n] != req.replay[:n]:
+                    raise RuntimeError(
+                        f"preemption replay diverged at request {req.uid}: "
+                        f"regenerated {req.generated[:n]} != committed "
+                        f"{req.replay[:n]}"
+                    )
+                if len(req.generated) >= len(req.replay):
+                    req.replay = None          # fully replayed: normal decode
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 finished.append(req)
@@ -745,15 +1064,46 @@ class ServeEngine:
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
         """Step until every submitted request finishes; the completed requests.
 
-        Raises :class:`ServeTruncated` (carrying the partial ``done`` /
-        ``pending`` split) if ``max_steps`` launches were not enough —
-        truncation is never silently returned as success.
+        Raises :class:`ServeTruncated` if ``max_steps`` launches were not
+        enough — truncation is never silently returned as success.  The
+        report splits the unfinished work by cause: ``pending`` (active +
+        admissible queue — transient), ``parked`` (preempted, resumable —
+        transient), ``rejected`` (worst case can never fit the pool under
+        the *current* admission policy — permanent; ``submit`` refuses these
+        up front, so they only appear when the policy was tightened after
+        submission).  Transient pool exhaustion itself never raises: the
+        engine preempts and resumes through it.
         """
         done: list[Request] = []
         for _ in range(max_steps):
             done += self.step()
-            if not self._active and not self._queue:
+            if not self._active and not self._queue and not self._parked:
                 return done
-        if self._active or self._queue:
-            raise ServeTruncated(done, list(self._active.values()) + list(self._queue))
+            if not self._active and self.paged:
+                # nothing is running, so nothing will ever free pages: if the
+                # seniority head (parked before queued) can never fit, every
+                # further step is a no-op — fail fast with the classification
+                # instead of spinning out the remaining max_steps
+                head = (self._parked[0].req if self._parked
+                        else self._queue[0] if self._queue else None)
+                if head is not None and self._never_fits(head):
+                    break
+        if self._active or self._queue or self._parked:
+            pending = list(self._active.values())
+            parked: list[Request] = []
+            rejected: list[Request] = []
+            for req in self._queue:
+                if self.paged and self._never_fits(req):
+                    rejected.append(req)
+                else:
+                    pending.append(req)
+            for entry in self._parked:
+                # a parked victim the tightened policy can never re-admit is
+                # just as permanently dead as an inadmissible queued request
+                if self._never_fits(entry.req):
+                    rejected.append(entry.req)
+                else:
+                    parked.append(entry.req)
+            raise ServeTruncated(done, pending, parked=parked,
+                                 rejected=rejected)
         return done

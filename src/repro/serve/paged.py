@@ -187,6 +187,40 @@ def scatter_prefill(pool_segments, slot_segments, pages: jax.Array,
     return jax.tree.map(leaf, pool_segments, slot_segments)
 
 
+# ---------------------------------------------------------------------------
+# page snapshot save/restore (preemption's zero-recompute resume path)
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pool_segments, pages: np.ndarray):
+    """Copy ``pages`` of every pool leaf to host memory.
+
+    Returns a tree of numpy arrays ``[L, n, Hkv, page_size, hd]`` — the
+    victim's KV exactly as it sits in the pool.  The copy is bit-preserving
+    (device → host of the same dtype), which is what lets a snapshot resume
+    keep the engine's bitwise-identity guarantee without recomputing
+    anything.
+    """
+    idx = jnp.asarray(pages, jnp.int32)
+    return jax.tree.map(lambda pool: np.asarray(pool[:, idx]), pool_segments)
+
+
+def restore_pages(pool_segments, saved, pages: np.ndarray):
+    """Scatter a :func:`gather_pages` snapshot back into freshly mapped
+    ``pages`` (the *physical* page ids may differ from the ones saved —
+    the block table indirection is what makes that invisible)."""
+    idx = jnp.asarray(pages, jnp.int32)
+    return jax.tree.map(
+        lambda pool, sv: pool.at[:, idx].set(jnp.asarray(sv, pool.dtype)),
+        pool_segments, saved,
+    )
+
+
+def snapshot_bytes(saved) -> int:
+    """Host bytes a :func:`gather_pages` snapshot holds while parked."""
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(saved))
+
+
 #: cache leaves with a position axis (the ones a page actually stores rows
 #: of); recurrent state (ssm_state, conv_tail) has no per-token capacity
 #: and is skipped by the memory accounting.

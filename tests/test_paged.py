@@ -14,7 +14,7 @@ import jax
 
 from repro.configs import ARCHS, reduced
 from repro.core.ledger import OverheadLedger
-from repro.core.policy import AdmissionPolicy
+from repro.core.policy import AdmissionPolicy, PreemptionPolicy
 from repro.models import build_model
 from repro.models.params import init_params
 from repro.serve.engine import ServeEngine, ServeTruncated
@@ -280,3 +280,141 @@ def test_submit_rejects_never_fitting_request(engine_model):
                       page_size=8, pool_pages=3)   # 2 usable pages
     with pytest.raises(ValueError, match="block the queue forever"):
         eng.submit(list(range(20)), max_new_tokens=10)
+
+
+def test_submit_rejection_is_worst_case_under_overcommit(engine_model):
+    """Permanent rejection must test the growth_reserve-independent worst
+    case: a request whose *projection* fits but whose full budget cannot
+    would otherwise park forever instead of failing fast at submit."""
+    _, model, params = engine_model
+    eng = ServeEngine(model, params, batch_slots=2, max_len=32, paged=True,
+                      page_size=8, pool_pages=3,   # 2 usable pages
+                      admission=AdmissionPolicy(growth_reserve=0.1))
+    # projects pages_for(4 + 3) = 1 page, but worst case is 4 pages
+    with pytest.raises(ValueError, match="block the queue forever"):
+        eng.submit([1, 2, 3, 4], max_new_tokens=28)
+    eng.submit([1, 2, 3, 4], max_new_tokens=8)     # worst case 2 pages: fits
+    done = eng.run_to_completion()
+    assert len(done) == 1 and len(done[0].generated) == 8
+
+
+# ---------------------------------------------------------------------------
+# preemption edge cases (PR 5)
+# ---------------------------------------------------------------------------
+
+
+def _dense_streams(model, params, reqs, **kw):
+    eng = ServeEngine(model, params, batch_slots=len(reqs), max_len=32, **kw)
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done = sorted(eng.run_to_completion(), key=lambda r: r.uid)
+    return [r.generated for r in done]
+
+
+@pytest.mark.parametrize("threshold", [0, 1000])   # snapshot / re-prefill
+def test_preempt_during_prefill_phase(engine_model, threshold):
+    """A victim parked right after its prefill — one sampled token, zero
+    decode steps — must resume and finish bitwise-identically."""
+    _, model, params = engine_model
+    reqs = [([3, 14, 15, 92], 6), ([7, 8], 6)]
+    eng = ServeEngine(model, params, batch_slots=2, max_len=32, paged=True,
+                      page_size=8,
+                      preemption=PreemptionPolicy(
+                          snapshot_threshold_tokens=threshold))
+    eng.submit(*reqs[0])
+    req = eng._queue.pop(0)                 # admit by hand: prefill only,
+    eng._prefill_slot(0, req)               # no decode launch yet
+    eng._active[0] = req
+    assert len(req.generated) == 1
+    eng.preempt(req.uid)
+    assert req.parked and eng.allocator.allocated_pages == 0
+    eng.submit(*reqs[1])
+    done = sorted(eng.run_to_completion(), key=lambda r: r.uid)
+    assert [r.generated for r in done] == _dense_streams(model, params, reqs)
+
+
+@pytest.mark.parametrize("threshold", [0, 1000])
+def test_preempt_at_exact_page_boundary(engine_model, threshold):
+    """Park when written rows exactly fill the mapped pages (pos a multiple
+    of page_size): the snapshot must keep exactly pos/page_size pages and
+    the resume's next write must map a fresh page."""
+    _, model, params = engine_model
+    prompt = list(range(1, 9))              # prefill pos = 8 = page_size
+    eng = ServeEngine(model, params, batch_slots=1, max_len=32, paged=True,
+                      page_size=8, decode_fusion=1,
+                      preemption=PreemptionPolicy(
+                          snapshot_threshold_tokens=threshold))
+    eng.submit(prompt, max_new_tokens=9)    # runs through rows 8..16
+    req = eng._queue.pop(0)
+    eng._prefill_slot(0, req)
+    eng._active[0] = req
+    assert int(eng._pos[0]) == 8 and int(eng._mapped[0]) == 1
+    eng.preempt(req.uid)
+    entry = eng._parked[0]
+    assert entry.pos == 8
+    if entry.snapshot is not None:
+        assert all(leaf.shape[1] == 1 for leaf in jax.tree.leaves(entry.snapshot))
+    done = eng.run_to_completion()
+    assert [r.generated for r in done] == _dense_streams(
+        model, params, [(prompt, 9)])
+
+
+def test_resume_while_pool_full_reparks_not_loops(engine_model):
+    """A parked request whose pages are still claimed stays parked — the
+    engine keeps decoding the survivor (progress, not a spin) and resumes
+    the victim only when pages actually free up.
+
+    Both requests need 3 pages worst-case of a 4-page pool; overcommitted
+    admission (reserve 0.25) lets both in, so the first page-3 crossing
+    organically parks the younger one, whose snapshot restore then stays
+    unfundable (watermark held back) until the survivor finishes."""
+    _, model, params = engine_model
+    reqs = [([1, 2, 3], 16), ([4, 5], 16)]
+    eng = ServeEngine(
+        model, params, batch_slots=2, max_len=32, paged=True, page_size=8,
+        pool_pages=5, decode_fusion=1,
+        admission=AdmissionPolicy(growth_reserve=0.25, watermark_pages=1),
+        preemption=PreemptionPolicy(snapshot_threshold_tokens=0),
+    )
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done, guard = [], 0
+    while not eng.parked_requests:          # growth pressure parks uid 2
+        done += eng.step()
+        guard += 1
+        assert guard < 30, "pool was never exhausted: test is vacuous"
+    victim = eng.parked_requests[0].uid
+    assert len(eng._active) == 1
+    # forced resume while the survivor still holds the pool: clean no-op
+    assert eng.resume(victim) is False
+    assert [r.uid for r in eng.parked_requests] == [victim]
+    parked_steps = 0
+    while eng.parked_requests:              # survivor drains, victim waits
+        done += eng.step()
+        parked_steps += 1
+        assert parked_steps < 60, "victim never resumed: livelock"
+    assert parked_steps > 1, "victim resumed instantly: pool was never full"
+    done = sorted(done + eng.run_to_completion(), key=lambda r: r.uid)
+    assert eng.preemptions == 1 and eng.resumes == 1
+    assert [r.generated for r in done] == _dense_streams(model, params, reqs)
+
+
+def test_double_resume_and_bad_preempt_guards(engine_model):
+    _, model, params = engine_model
+    eng = ServeEngine(model, params, batch_slots=2, max_len=32, paged=True,
+                      page_size=8)
+    eng.submit([1, 2, 3], max_new_tokens=6)
+    eng.step()
+    uid = eng.preempt()
+    with pytest.raises(ValueError, match="not active"):
+        eng.preempt(uid)                    # parked, not active
+    with pytest.raises(ValueError, match="not active"):
+        eng.preempt(999)                    # unknown uid
+    assert eng.resume(uid) is True
+    with pytest.raises(ValueError, match="double resume"):
+        eng.resume(uid)                     # second resume is a caller bug
+    with pytest.raises(ValueError, match="no active request"):
+        ServeEngine(model, params, batch_slots=1, max_len=32, paged=True,
+                    page_size=8).preempt()
+    done = eng.run_to_completion()
+    assert len(done) == 1 and len(done[0].generated) == 6

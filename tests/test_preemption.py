@@ -1,0 +1,338 @@
+"""Graceful preemption: randomized churn/recovery against a dense oracle.
+
+The headline claim of overcommitted paged serving: preemption is *invisible*
+in the token streams.  A request may be parked (pages reclaimed) and resumed
+(snapshot restore or re-prefill + replay) any number of times, at any point
+in its life, and every completed request must still be bitwise-identical to
+an unconstrained dense run — greedy and seeded temperature, at any
+``decode_fusion`` depth.  A seeded generator drives admit/decode/preempt/
+resume schedules; allocator invariants (no leak, no alias, free-list
+conserved) are checked after every step.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.core.ledger import OverheadLedger
+from repro.core.policy import (
+    RESUME_REPREFILL,
+    RESUME_SNAPSHOT,
+    AdmissionPolicy,
+    PreemptionCandidate,
+    PreemptionPolicy,
+)
+from repro.models import build_model
+from repro.models.params import init_params
+from repro.serve.engine import ServeEngine, ServeTruncated
+
+
+@pytest.fixture(scope="module")
+def engine_model():
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(11))
+    return cfg, model, params
+
+
+def _requests(rng, n):
+    """(prompt, max_new) pairs; lengths sized for max_len=32, page_size=8."""
+    out = []
+    for _ in range(n):
+        p = [int(t) for t in rng.integers(1, 100, size=int(rng.integers(1, 8)))]
+        out.append((p, int(rng.integers(2, 12))))
+    return out
+
+
+def _dense_reference(model, params, reqs, *, temperature=0.0, seed=0):
+    """Unconstrained run: every request in its own slot, never preempted."""
+    eng = ServeEngine(model, params, batch_slots=len(reqs), max_len=32,
+                      temperature=temperature, seed=seed)
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done = sorted(eng.run_to_completion(max_steps=100_000),
+                  key=lambda r: r.uid)
+    return [r.generated for r in done]
+
+
+def _check_invariants(eng):
+    """No leak, no alias, free-list conserved, pages owned only by actives."""
+    eng.allocator.check_invariants()
+    assert (eng.allocator.free_pages + eng.allocator.allocated_pages
+            == eng.allocator.total_pages)
+    mapped = 0
+    for slot in range(eng.slots):
+        if slot in eng._active:
+            mapped += int(eng._mapped[slot])
+        else:
+            assert int(eng._mapped[slot]) == 0, f"idle slot {slot} holds pages"
+    assert eng.allocator.allocated_pages == mapped
+    for req in eng.parked_requests:
+        assert req.parked and not req.done
+
+
+def _churn(model, params, *, steps, n_requests, seed, temperature=0.0,
+           fusion=1, snapshot_threshold=8, preempt_p=0.25, resume_p=0.2,
+           submit_p=0.6, pool_pages=8):
+    """Seeded admit/decode/preempt/resume schedule; returns (streams, eng)."""
+    rng = np.random.default_rng(seed)
+    reqs = _requests(rng, n_requests)
+    eng = ServeEngine(
+        model, params, batch_slots=4, max_len=32, paged=True, page_size=8,
+        pool_pages=pool_pages, decode_fusion=fusion, temperature=temperature,
+        seed=0, admission=AdmissionPolicy(growth_reserve=0.5),
+        preemption=PreemptionPolicy(snapshot_threshold_tokens=snapshot_threshold),
+    )
+    done, i = [], 0
+    for _ in range(steps):
+        if i < len(reqs) and rng.random() < submit_p:
+            p, m = reqs[i]
+            eng.submit(p, max_new_tokens=m)
+            i += 1
+        if eng._active and rng.random() < preempt_p:
+            uid = int(rng.choice([r.uid for r in eng._active.values()]))
+            eng.preempt(uid)
+        if eng.parked_requests and rng.random() < resume_p:
+            uid = int(rng.choice([r.uid for r in eng.parked_requests]))
+            eng.resume(uid)               # may be unfundable: stays parked
+        done += eng.step()
+        _check_invariants(eng)
+        if i >= len(reqs) and not (eng._active or eng._queue
+                                   or eng.parked_requests):
+            break
+    while i < len(reqs):
+        p, m = reqs[i]
+        eng.submit(p, max_new_tokens=m)
+        i += 1
+    done += eng.run_to_completion(max_steps=100_000)
+    _check_invariants(eng)
+    assert eng.allocator.free_pages == eng.allocator.total_pages
+    streams = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+    assert len(streams) == len(reqs)      # zero drops
+    return streams, reqs, eng
+
+
+# ---------------------------------------------------------------------------
+# randomized churn/recovery (tier-1 bounded, slow soak)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fusion,temperature,threshold", [
+    (1, 0.0, 8),          # greedy, mixed snapshot/re-prefill resumes
+    (4, 0.0, 0),          # fused, snapshot-always
+    (2, 0.7, 1000),       # seeded temperature, re-prefill-always
+])
+def test_churn_recovery_bitwise_identical(engine_model, fusion, temperature,
+                                          threshold):
+    _, model, params = engine_model
+    streams, reqs, eng = _churn(
+        model, params, steps=40, n_requests=8, seed=5, fusion=fusion,
+        temperature=temperature, snapshot_threshold=threshold,
+    )
+    assert eng.preemptions > 0            # the schedule actually churned
+    assert eng.resumes == eng.preemptions
+    dense = _dense_reference(model, params, reqs, temperature=temperature)
+    assert streams == dense
+    assert all(len(s) == m for s, (_, m) in zip(streams, reqs))
+
+
+def test_churn_growth_preemption_without_explicit_preempts(engine_model):
+    """With no external preempt calls, overcommit pressure alone must drive
+    park/resume (pool too small for the admitted requests' real growth)."""
+    _, model, params = engine_model
+    streams, reqs, eng = _churn(
+        model, params, steps=60, n_requests=8, seed=9, preempt_p=0.0,
+        resume_p=0.0, pool_pages=4, submit_p=0.9,
+    )
+    assert eng.preemptions > 0, "pool was never exhausted: test is vacuous"
+    dense = _dense_reference(model, params, reqs)
+    assert streams == dense
+
+
+@pytest.mark.slow
+def test_churn_soak_10k_steps(engine_model):
+    """10k-step-bounded churn soak: sustained preempt/resume cycling over
+    hundreds of requests, invariants checked every step, every stream
+    bitwise-checked (ends early once every request drains — the bound is
+    the harness's safety rail, not a busy-wait target)."""
+    _, model, params = engine_model
+    streams, reqs, eng = _churn(
+        model, params, steps=10_000, n_requests=250, seed=13, fusion=2,
+        preempt_p=0.15, resume_p=0.15, submit_p=0.3,
+    )
+    assert eng.preemptions > 50
+    dense = _dense_reference(model, params, reqs)
+    assert streams == dense
+
+
+# ---------------------------------------------------------------------------
+# PreemptionPolicy unit behavior
+# ---------------------------------------------------------------------------
+
+
+def _cands():
+    return [
+        PreemptionCandidate(uid=1, mapped_pages=4, tokens_done=30),
+        PreemptionCandidate(uid=2, mapped_pages=1, tokens_done=5),
+        PreemptionCandidate(uid=3, mapped_pages=2, tokens_done=12),
+    ]
+
+
+def test_victims_youngest_first():
+    assert PreemptionPolicy().victims(_cands(), 3) == [3, 2]
+    assert PreemptionPolicy().victims(_cands(), 1) == [3]
+
+
+def test_victims_other_orders():
+    assert PreemptionPolicy(order="oldest").victims(_cands(), 3) == [1]
+    assert PreemptionPolicy(order="most_pages").victims(_cands(), 5) == [1, 3]
+
+
+def test_victims_insufficient_returns_all():
+    assert PreemptionPolicy().victims(_cands(), 100) == [3, 2, 1]
+    assert PreemptionPolicy().victims(_cands(), 0) == []
+    assert PreemptionPolicy().victims([], 4) == []
+
+
+def test_resume_mode_cost_crossover():
+    pol = PreemptionPolicy(snapshot_threshold_tokens=24)
+    assert pol.resume_mode(tokens_done=23) == RESUME_REPREFILL
+    assert pol.resume_mode(tokens_done=24) == RESUME_SNAPSHOT
+    no_snap = PreemptionPolicy(allow_snapshot=False)
+    assert no_snap.resume_mode(tokens_done=1000) == RESUME_REPREFILL
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="order"):
+        PreemptionPolicy(order="eldest")
+    with pytest.raises(ValueError, match="snapshot_threshold"):
+        PreemptionPolicy(snapshot_threshold_tokens=-1)
+
+
+def test_admission_worst_case_pages():
+    pol = AdmissionPolicy(growth_reserve=0.5)
+    assert pol.projected_pages(4, 16, 8) == 2      # funds 4 + 8 rows
+    assert pol.worst_case_pages(4, 16, 8) == 3     # writes up to 19 rows
+    assert pol.overcommitted
+    assert not AdmissionPolicy().overcommitted
+    # exact at the boundary: the final sampled token's row is never written,
+    # so prompt 9 + 8 new = 16 written rows = exactly 2 pages, not 3
+    assert pol.worst_case_pages(9, 8, 8) == 2
+
+
+def test_boundary_request_completes_not_rejected(engine_model):
+    """A request whose written rows exactly fill the pool must be admitted
+    and complete — rounding the unwritten final-token row up to an extra
+    page would falsely *permanently* reject it."""
+    _, model, params = engine_model
+    eng = ServeEngine(model, params, batch_slots=1, max_len=32, paged=True,
+                      page_size=8, pool_pages=3)   # 2 usable pages
+    eng.submit(list(range(1, 10)), max_new_tokens=8)   # 16 written rows
+    done = eng.run_to_completion()
+    assert len(done) == 1 and len(done[0].generated) == 8
+    assert eng.allocator.free_pages == eng.allocator.total_pages
+
+
+# ---------------------------------------------------------------------------
+# ledger overcommit accounting
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_overcommit_split():
+    led = OverheadLedger()
+    led.record_preemption(pages_reclaimed=3, snapshot_bytes=1024)
+    led.record_preemption(pages_reclaimed=2)
+    led.record_resume(mode="snapshot")
+    led.record_resume(mode="reprefill", recompute_tokens=17)
+    out = led.overcommit_split()
+    assert out["preemptions"] == 2 and out["resumes"] == 2
+    assert out["pages_reclaimed"] == 5 and out["snapshot_bytes"] == 1024
+    assert out["snapshot_resumes"] == 1 and out["reprefill_resumes"] == 1
+    assert out["recompute_tokens"] == 17
+    led.reset()
+    assert led.overcommit_split()["preemptions"] == 0
+
+
+def test_engine_counters_mirror_ledger(engine_model):
+    _, model, params = engine_model
+    led = OverheadLedger()
+    eng = ServeEngine(model, params, batch_slots=2, max_len=32, paged=True,
+                      page_size=8, ledger=led,
+                      preemption=PreemptionPolicy(snapshot_threshold_tokens=0))
+    eng.submit([1, 2, 3], max_new_tokens=6)
+    eng.step()
+    eng.preempt()
+    eng.run_to_completion()
+    out = led.overcommit_split()
+    assert out["preemptions"] == eng.preemptions == 1
+    assert out["resumes"] == eng.resumes == 1
+    assert out["snapshot_resumes"] == 1
+    assert out["pages_reclaimed"] == eng.pages_reclaimed > 0
+    assert out["park_s"] > 0 and out["resume_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ServeTruncated: parked vs rejected vs pending
+# ---------------------------------------------------------------------------
+
+
+def test_truncation_reports_parked_separately(engine_model):
+    _, model, params = engine_model
+    eng = ServeEngine(model, params, batch_slots=2, max_len=32, paged=True,
+                      page_size=8)
+    eng.submit([1, 2, 3], max_new_tokens=8)
+    eng.submit([4, 5], max_new_tokens=8)
+    eng.step()
+    parked_uid = eng.preempt()
+    with pytest.raises(ServeTruncated) as ei:
+        eng.run_to_completion(max_steps=0)
+    err = ei.value
+    assert [r.uid for r in err.parked] == [parked_uid]
+    assert parked_uid not in [r.uid for r in err.pending]
+    assert err.rejected == []
+    # transient by construction: more steps finish everything, nothing leaks
+    done = eng.run_to_completion()
+    assert len(done) == 2 and all(len(r.generated) == 8 for r in done)
+    assert eng.allocator.free_pages == eng.allocator.total_pages
+
+
+def test_truncation_reports_permanently_rejected(engine_model):
+    """A request admissible at submit but impossible under a later, tighter
+    policy is *rejected* (permanent), not pending (transient)."""
+    _, model, params = engine_model
+    eng = ServeEngine(model, params, batch_slots=2, max_len=32, paged=True,
+                      page_size=8, pool_pages=6)
+    eng.submit([1] * 8, max_new_tokens=16)          # worst case: 3 pages
+    eng.admission = AdmissionPolicy(watermark_pages=4)   # cap drops to 1
+    # default max_steps: a permanently stuck head must fail FAST (the
+    # engine detects a no-op state), not spin out 10k empty steps
+    with pytest.raises(ServeTruncated) as ei:
+        eng.run_to_completion()
+    err = ei.value
+    assert len(err.rejected) == 1 and err.pending == [] and err.parked == []
+
+
+def test_truncation_rejects_unresumable_parked_victim(engine_model):
+    """A *parked* victim the tightened policy can never re-admit is rejected
+    (permanent), not parked (transient) — callers must not retry forever."""
+    _, model, params = engine_model
+    eng = ServeEngine(model, params, batch_slots=2, max_len=32, paged=True,
+                      page_size=8, pool_pages=6)
+    eng.submit([1, 2, 3], max_new_tokens=16)        # worst case: 3 pages
+    eng.step()
+    eng.preempt()
+    eng.admission = AdmissionPolicy(watermark_pages=4)   # cap drops to 1
+    with pytest.raises(ServeTruncated) as ei:
+        eng.run_to_completion()                     # fail-fast, not 10k spins
+    err = ei.value
+    assert len(err.rejected) == 1 and err.parked == [] and err.pending == []
+    assert err.rejected[0].parked                   # still holds its progress
+
+
+def test_preempt_requires_paged(engine_model):
+    _, model, params = engine_model
+    eng = ServeEngine(model, params, batch_slots=1, max_len=32)
+    with pytest.raises(RuntimeError, match="paged"):
+        eng.preempt()
