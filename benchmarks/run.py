@@ -75,6 +75,7 @@ def main(argv: list[str] | None = None) -> None:
         table6_dispatch,
         table7_paged,
         table8_overcommit,
+        table9_traffic,
     )
 
     suites = (
@@ -86,6 +87,7 @@ def main(argv: list[str] | None = None) -> None:
         (table6_dispatch.run, {"n": min(n, 64)}),
         (table7_paged.run, {"n": min(n, 64)}),
         (table8_overcommit.run, {"n": min(n, 64)}),
+        (table9_traffic.run, {"n": min(n, 64)}),
     )
     print("name,us_per_call,derived", flush=True)
     rows: list[str] = []

@@ -40,6 +40,7 @@ ASSERTED = (
     ("table8", "overcommit_wins"),
     ("table8", "serve_overcommit_identical"),
     ("table8", "serve_overcommit_wins"),
+    ("table9", "chunked_wins"),
 )
 
 #: deterministic metrics: current >= baseline * (1 - TOLERANCE)
@@ -50,10 +51,13 @@ TRACKED = (
     ("table1", "kv_cache_paged"),                # pool utilization
     ("table8", "overcommit_trace_r50"),          # overcommit sustained conc.
     ("table8", "serve_overcommit_concurrency"),  # real-jax overcommit ratio
+    ("table9", "ttft_p99_us_bursty_chunked"),    # virtual-clock p99 TTFT
 )
 
 #: tracked metrics where *lower* is better (regression = grew > tolerance)
-LOWER_IS_BETTER: set[tuple[str, str]] = set()
+LOWER_IS_BETTER: set[tuple[str, str]] = {
+    ("table9", "ttft_p99_us_bursty_chunked"),
+}
 
 
 def _index(payload: dict) -> dict[tuple[str, str], float]:

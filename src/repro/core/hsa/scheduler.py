@@ -396,6 +396,12 @@ class Scheduler:
 
     # -- reconfiguration prefetch (the lookahead pipeline) -----------------------
 
+    #: raw packets peeked per distinct-role window slot: consecutive
+    #: same-role packets collapse into one *group* (they share a stall, so
+    #: depth counts role switches, not packets), and the raw peek must be a
+    #: multiple of the group window to see past a burst of repeats
+    SCAN_BURST_FACTOR = 4
+
     def _scan_windows(self) -> tuple[dict, list]:
         """One pass over the stalls and every queue's lookahead window.
 
@@ -406,26 +412,41 @@ class Scheduler:
         read straight off the queues) — plus the ``(queue, role_key)``
         prefetch candidates from *blocked* queues (stalled, or head waiting
         on dependency signals; a stalled head itself is excluded — its stall
-        already owns the load)."""
+        already owns the load).
+
+        Distance is measured in *distinct-role groups*, not raw packets:
+        a burst of same-role packets is one reconfiguration however long it
+        is, so ``lookahead=1`` means "the immediately-next role switch" —
+        indexing by raw position would let any burst longer than the window
+        hide the next role from shallow depths entirely.
+        """
         ranks: dict = {
             s.role_key: -1 for s in self._stalls.values() if s.role_key is not None
         }
         candidates: list[tuple[Queue, Any]] = []
         if self.lookahead > 0:
+            depth = self.lookahead + 1
             for q in self.queues:
-                pkts = q.peek_window(self.lookahead + 1)
+                pkts = q.peek_window(self.SCAN_BURST_FACTOR * depth)
                 if not pkts:
                     continue
                 stalled = q.name in self._stalls
                 blocked = stalled or not self._deps_zero(pkts[0].deps)
-                for i, pkt in enumerate(pkts):
+                d = -1                     # distinct-role group index
+                prev: Any = object()       # sentinel: != every role key
+                for pkt in pkts:
                     rk = getattr(pkt, "role_key", None)
                     if rk is None:
                         continue
-                    if ranks.get(rk, i + 1) > i:
-                        ranks[rk] = i
-                    if blocked and not (i == 0 and stalled):
-                        candidates.append((q, rk))
+                    if rk != prev:
+                        d += 1
+                        prev = rk
+                        if d >= depth:
+                            break
+                        if ranks.get(rk, d + 1) > d:
+                            ranks[rk] = d
+                        if blocked and not (d == 0 and stalled):
+                            candidates.append((q, rk))
         return ranks, candidates
 
     def _protected_keys(self) -> dict:

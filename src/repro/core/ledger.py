@@ -72,9 +72,18 @@ RECONFIG_HIDDEN = "reconfig_hidden"
 PREEMPT_PARK = "preempt_park"
 PREEMPT_RESUME = "preempt_resume"
 
+# Serving latency under live traffic (the table9 SLO metrics).  One TTFT
+# sample per request (arrival -> first generated token, engine clock) and one
+# TPOT sample per request (mean inter-token time over its decode phase).
+# Both ride the same bounded quantile windows as dispatch_wait, so
+# ``quantile()`` gives the recent p50/p99 a feeder-facing SLO check wants —
+# not an all-time mean that a warmup spike poisons forever.
+TTFT = "ttft"
+TPOT = "tpot"
+
 CATEGORIES = (SETUP, RECONFIG, RECONFIG_EXPOSED, RECONFIG_HIDDEN, DISPATCH,
               DISPATCH_SUBMIT, DISPATCH_GRANT, DISPATCH_WAIT, EXEC, WAIT,
-              PREEMPT_PARK, PREEMPT_RESUME)
+              PREEMPT_PARK, PREEMPT_RESUME, TTFT, TPOT)
 
 OCCURRENCE = {
     SETUP: "once",
@@ -89,6 +98,8 @@ OCCURRENCE = {
     WAIT: "every dispatch",
     PREEMPT_PARK: "on pool pressure",
     PREEMPT_RESUME: "per resume",
+    TTFT: "per request",
+    TPOT: "per request",
 }
 
 
@@ -343,6 +354,24 @@ class OverheadLedger:
                 "exposed_n": float(exposed.count),
                 "hidden_n": float(hidden.count),
             }
+
+    def traffic_split(self) -> dict[str, float]:
+        """Serving-latency quantiles under live traffic (table9's SLO view).
+
+        For each of TTFT and TPOT: sample count, mean, and the p50/p99 of
+        the recent quantile window.  Quantiles are 0.0 when no samples
+        exist — callers grading SLOs should check ``*_n`` first so an
+        unwired ledger is distinguishable from a perfectly fast one.
+        """
+        out: dict[str, float] = {}
+        for cat in (TTFT, TPOT):
+            s = self.stat(cat)
+            out[f"{cat}_n"] = float(s.count)
+            out[f"{cat}_mean_s"] = s.total_s / s.count if s.count else 0.0
+            for q, name in ((0.5, "p50"), (0.99, "p99")):
+                v = self.quantile(cat, q)
+                out[f"{cat}_{name}_s"] = v if v is not None else 0.0
+        return out
 
     def dispatch_split(self) -> dict[str, float]:
         """Invocation-overhead round trip, split per leg (Table II row 3).

@@ -136,6 +136,69 @@ class FusionPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChunkPolicy:
+    """Pick the prefill chunk size for continuous batching.
+
+    Whole-prompt prefill makes one monolithic launch per admission: a long
+    prompt monopolizes the compute engine for its full length, so every
+    other request's first token (and every in-flight request's next token)
+    waits behind it — the paper's "simultaneously from other sources" fails
+    exactly at admission time.  Chunked prefill splits the prompt into
+    ``chunk``-token pieces that interleave with the fused decode launches,
+    bounding how long any single prefill piece can occupy the device.
+
+    The trade-off mirrors :class:`FusionPolicy` from the other side: decode
+    fusion makes decode launches *longer* to amortize packet overhead, while
+    prefill chunking makes prefill launches *shorter* to bound latency — and
+    the two meet in the step loop, where one step carries one chunk per
+    prefilling slot plus one fused decode.  ``decode_taper`` shrinks the
+    chunk as live decode slots pile up (their TPOT is what a fat chunk
+    stretches); ``fusion_taper`` shrinks it under deep decode fusion (the
+    step is already long, so the prefill share must not double it).
+
+    Chunk sizes are powers of two for the same reason fusion depths are:
+    every distinct (chunk, start) pair is a distinct jitted trace, and pow2
+    chunks over pow2-bucketed prompts keep the trace count at
+    ``log2(max_len)``-ish instead of per-prompt-length.
+    """
+
+    max_chunk: int = 64
+    min_chunk: int = 16
+    decode_taper: int = 0        # halve chunk per this many live decode slots
+    fusion_taper: int = 0        # halve chunk per this many fused decode steps
+
+    def __post_init__(self) -> None:
+        for name in ("max_chunk", "min_chunk"):
+            v = getattr(self, name)
+            if v < 1 or (v & (v - 1)):
+                raise ValueError(f"{name} must be a power of two >= 1, got {v}")
+        if self.max_chunk < self.min_chunk:
+            raise ValueError(
+                f"max_chunk {self.max_chunk} < min_chunk {self.min_chunk}"
+            )
+        if self.decode_taper < 0 or self.fusion_taper < 0:
+            raise ValueError("tapers must be >= 0")
+
+    @classmethod
+    def of(cls, value: "ChunkPolicy | int | None") -> "ChunkPolicy | None":
+        if value is None or isinstance(value, ChunkPolicy):
+            return value
+        c = int(value)
+        return cls(max_chunk=c, min_chunk=c)
+
+    def choose_chunk(self, *, live_decode: int = 0, fusion_k: int = 1) -> int:
+        """Chunk size for one request, fixed at its prefill start (a chunk
+        that changed mid-prefill would fragment the trace cache for no
+        latency gain — the knob reacts at admission granularity)."""
+        c = self.max_chunk
+        if self.decode_taper > 0 and live_decode > 0:
+            c >>= min(live_decode // self.decode_taper, c.bit_length() - 1)
+        if self.fusion_taper > 0 and fusion_k > 1:
+            c >>= min(fusion_k // self.fusion_taper, c.bit_length() - 1)
+        return max(self.min_chunk, c)
+
+
+@dataclasses.dataclass(frozen=True)
 class AdmissionPolicy:
     """Admit a request into the paged serving engine?
 

@@ -150,6 +150,52 @@ def attention_full(
     return y, k.swapaxes(1, 2), v.swapaxes(1, 2)   # caches as [B, Hkv, S, hd]
 
 
+def attention_prefill_chunk(
+    p: Params,
+    x: jax.Array,                      # [B, Sc, d] — prompt rows [start, start+Sc)
+    cache_k: jax.Array,                # [B, Hkv, Tc, hd] staging cache
+    cache_v: jax.Array,
+    start: int,                        # static: chunk's absolute first position
+    cfg: ArchConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One chunk of a split prefill against the partially-filled KV cache.
+
+    Bitwise-identical to the corresponding rows of :func:`attention_full`
+    over the whole prompt, with no new kernel: every per-row computation
+    (qkv matmul, rope at absolute positions, rmsnorm) is row-local, and the
+    ``flash_attention`` op already aligns a short query block to the *end*
+    of its key sequence (``qpos = arange(Sc) + (T - Sc)``) — so feeding it
+    the chunk's queries against the cache slice ``[:, :, :start+Sc]`` yields
+    exactly the causal mask the full prefill applied to those rows.  Masked
+    keys contribute an exact 0.0 after softmax, so the trailing
+    already-cached rows change nothing bit for bit.
+
+    ``start`` must be a static Python int: the cache slice bound is a trace
+    constant, so each (Sc, start) pair is one jitted trace — bounded by
+    ``max_len / chunk`` traces, the chunked analogue of prompt bucketing.
+    """
+    B, Sc, _ = x.shape
+    hd = cfg.head_dim
+    q, k, v = _qkv(p, x, cfg)
+    positions = start + jnp.arange(Sc)
+    cos, sin = rope_table(positions, hd, cfg.rope_theta)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.swapaxes(1, 2).astype(cache_k.dtype), (0, 0, start, 0)
+    )
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.swapaxes(1, 2).astype(cache_v.dtype), (0, 0, start, 0)
+    )
+    end = start + Sc
+    out = dispatch.op(
+        "flash_attention",
+        q.swapaxes(1, 2), cache_k[:, :, :end], cache_v[:, :, :end],
+        causal=True,
+    ).swapaxes(1, 2)                    # [B, Sc, H, hd]
+    y = dispatch.op("matmul", out.reshape(B, Sc, -1), p["wo"])
+    return y, cache_k, cache_v
+
+
 def decode_positions(pos: jax.Array) -> jax.Array:
     """Rope positions for one decode step: pos scalar -> [1], [B] -> [B, 1]."""
     return pos[None] if pos.ndim == 0 else pos[:, None]

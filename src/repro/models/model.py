@@ -218,6 +218,31 @@ def apply_layer_prefill(cfg, kind, p, x, positions, moe_info=None, memory=None):
     return x + y, cache, aux
 
 
+def apply_layer_prefill_chunk(cfg, kind, p, x, cache, start, moe_info=None):
+    """One prompt chunk through one layer against the partially-filled cache.
+
+    Only plain dense GQA layers are chunk-safe: MoE capacity routing depends
+    on the *other* tokens in the call (a chunk routes differently than the
+    full prompt — not row-local, so not bitwise-reproducible), recurrent
+    state folds sequentially, and windowed/ring caches clip by position.
+    The engine gates chunking on the segment plan; this raise is the
+    backstop for direct callers.
+    """
+    if kind != "dense" or cfg.mla is not None or cfg.attn_window is not None:
+        raise ValueError(
+            f"chunked prefill supports plain dense GQA layers only, not "
+            f"{kind!r} (mla={cfg.mla is not None}, window={cfg.attn_window})"
+        )
+    h = layers.apply_norm(p["ln1"], x, cfg.norm_eps)
+    a, ck, cv = layers.attention_prefill_chunk(
+        p["attn"], h, cache["k"], cache["v"], start, cfg
+    )
+    x = x + a
+    h2 = layers.apply_norm(p["ln2"], x, cfg.norm_eps)
+    y = layers.apply_mlp(p["mlp"], h2)
+    return x + y, {"k": ck, "v": cv}
+
+
 def _pad_cache_time(cfg: ArchConfig, caches, cache_len: int):
     """Pad prefill KV/latent caches along the time axis to ``cache_len``."""
     import jax.tree_util as jtu
@@ -549,6 +574,54 @@ class DecoderLM:
             caches = _pad_cache_time(cfg, caches, cache_len)
         cache = {"pos": jnp.asarray(S, jnp.int32), "segments": caches}
         return logits[:, 0], cache
+
+    # -- chunked prefill ------------------------------------------------------------
+
+    def prefill_chunk(self, params: Params, tokens: jax.Array, cache: dict, *,
+                      start: int, moe_info=None):
+        """One ``[B, Sc]`` prompt chunk at absolute positions
+        ``[start, start + Sc)`` -> (logits of the chunk's last row [B, V],
+        updated cache).
+
+        The cache is a full-capacity staging cache (leaves ``[L, B, Hkv,
+        max_len, hd]``); rows ``[0, start)`` hold the previous chunks' KV,
+        this call writes ``[start, start + Sc)``.  ``start`` must be a
+        static Python int (each (Sc, start) pair is one jitted trace — see
+        :func:`repro.models.layers.attention_prefill_chunk`).  Row-for-row
+        bitwise-identical to :meth:`prefill` over the whole prompt, which
+        is what lets the serving engine interleave prefill chunks with
+        decode without perturbing a single token stream.
+        """
+        cfg = self.cfg
+        h = self._embed_inputs(params, {"tokens": tokens})
+        new_segs = []
+
+        for seg, seg_params, seg_cache in zip(
+            self.segments, params["segments"], cache["segments"]
+        ):
+            def body(carry, xs, _seg=seg):
+                x = carry
+                dt0 = x.dtype
+                unit_params, unit_cache = xs
+                new_unit = {}
+                for i, kind in enumerate(_seg.kinds):
+                    x, c = apply_layer_prefill_chunk(
+                        cfg, kind, unit_params[str(i)], x, unit_cache[str(i)],
+                        start, moe_info=moe_info,
+                    )
+                    x = shard_act(x.astype(dt0), "batch", None, None)
+                    new_unit[str(i)] = c
+                return x, new_unit
+
+            h, new_seg = _scan(body, h, (seg_params, seg_cache), remat="none",
+                               unroll=self.unroll)
+            new_segs.append(new_seg)
+
+        h = layers.apply_norm(params["ln_f"], h, cfg.norm_eps)
+        logits = layers.unembed(params["embed"], h[:, -1:])
+        end = start + tokens.shape[1]
+        return logits[:, 0], {"pos": jnp.asarray(end, jnp.int32),
+                              "segments": new_segs}
 
     # -- decode ---------------------------------------------------------------------
 

@@ -20,6 +20,7 @@ splicing takes exactly each request's remaining budget.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable
 
@@ -31,10 +32,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import ledger as ledger_mod
+from repro.core.hsa.clock import WallClock
 from repro.core.policy import (
     RESUME_REPREFILL,
     RESUME_SNAPSHOT,
     AdmissionPolicy,
+    ChunkPolicy,
     FusionPolicy,
     PreemptionCandidate,
     PreemptionPolicy,
@@ -167,6 +170,11 @@ class Request:
     # committed tokens a re-prefill resume is replaying; the engine asserts
     # regenerated tokens match this prefix bitwise, then drops it
     replay: list[int] | None = None
+    # engine-clock timestamps (None until the event happens): arrival at
+    # submit, first generated token, completion — the TTFT/TPOT feed
+    arrival_t: float | None = None
+    first_token_t: float | None = None
+    finish_t: float | None = None
 
 
 @dataclasses.dataclass
@@ -177,6 +185,25 @@ class _Parked:
     pos: int                           # cache rows at park (prompt + gen - 1)
     mode: str                          # RESUME_SNAPSHOT | RESUME_REPREFILL
     snapshot: Any | None               # gather_pages tree (snapshot mode)
+
+
+@dataclasses.dataclass
+class _Prefilling:
+    """A request mid chunked-prefill: holds a slot and a staging cache.
+
+    ``tokens`` is the prompt padded to its bucket length — chunking runs
+    over the *same* padded token array the whole-prompt path prefills, so
+    every cache row (pads included) and the first-token fixup are bitwise
+    identical to the unchunked engine.
+    """
+
+    req: Request
+    tokens: np.ndarray                 # [b] prompt padded to bucket length
+    n: int                             # real prompt length
+    chunk: int                         # chunk rows per step, fixed at admit
+    cache: Any                         # staging {"pos", "segments"} tree
+    filled: int = 0                    # rows prefilled so far
+    stalled: bool = False              # paged: last chunk unfundable
 
 
 class ServeTruncated(RuntimeError):
@@ -243,7 +270,10 @@ class ServeEngine:
                  pool_pages: int | None = None,
                  admission: AdmissionPolicy | None = None,
                  preemption: PreemptionPolicy | None = None,
-                 ledger: "ledger_mod.OverheadLedger | None" = None):
+                 ledger: "ledger_mod.OverheadLedger | None" = None,
+                 prefill_chunk: "int | ChunkPolicy | None" = None,
+                 clock=None,
+                 step_time_model: "Callable[[int, int], float] | None" = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -336,6 +366,43 @@ class ServeEngine:
         self.peak_concurrency = 0
         # feedback staleness: producer -> (last sample count, silent rounds)
         self._wait_freshness: dict[str, tuple[int, int]] = {}
+        # -- chunked prefill (continuous batching) -------------------------
+        # split each prompt into prefill_chunk-row chunks that interleave
+        # with fused decode in the same step(): new requests join mid-stream
+        # instead of monopolizing a launch with a whole-prompt prefill
+        self.chunk_policy = ChunkPolicy.of(prefill_chunk)
+        if self.chunk_policy is not None and not self._chunk_safe():
+            raise ValueError(
+                "prefill_chunk requires plain dense-attention layers with "
+                "GQA k/v caches (MoE routing and recurrent state are not "
+                "row-local across chunk boundaries)"
+            )
+        self._prefilling: dict[int, _Prefilling] = {}
+        self._staging: dict[int, Any] = {}    # slot -> reusable segments tree
+        self.chunk_traces = 0                 # bumped at chunk *trace* time
+        self._last_fusion_k = 1               # feeds ChunkPolicy.choose_chunk
+        self._first_this_step: list[Request] = []
+        # engine clock: arrival/first-token/completion timestamps ride on it;
+        # a VirtualClock plus step_time_model makes latency deterministic
+        # (step_time_model(prefill_tokens, decode_tokens) -> seconds, applied
+        # after every step when the clock is virtual)
+        self.clock = clock if clock is not None else WallClock()
+        self.step_time_model = step_time_model
+        # submit() may run on feeder threads while step() is mid-flight:
+        # the queue, uid counter, and truncation classification share a lock
+        self._lock = threading.RLock()
+
+        def _traced_chunk(params, tokens, cache, start):
+            self.chunk_traces += 1    # side effect runs once per new shape
+            return self.model.prefill_chunk(params, tokens, cache, start=start)
+
+        _traced_chunk.__name__ = "prefill_chunk"
+        self._chunk_fn = jax.jit(_traced_chunk, static_argnames="start")
+        # the bucket-pad fixup decode (one token at the true position):
+        # jitted once so repeated prefills hit the trace cache instead of
+        # re-lowering an eager scan per request
+        self._fixup_fn = jax.jit(self.model.decode_step)
+        self._fixup_fn.__name__ = "prefill_fixup"
 
         def _traced_prefill(params, tokens):
             self.prefill_traces += 1   # side effect runs once per new shape
@@ -378,9 +445,19 @@ class ServeEngine:
             raise pkt.out.error
         return pkt.out.value
 
-    def submit(self, prompt: list[int], max_new_tokens: int = 32) -> int:
+    def submit(self, prompt: list[int], max_new_tokens: int = 32, *,
+               arrival_t: float | None = None) -> int:
+        """Queue a request; its uid.  ``arrival_t`` backdates the arrival
+        timestamp (a trace replayer delivers arrivals at step boundaries,
+        but the request arrived — and its TTFT clock started — earlier)."""
+        with self._lock:
+            return self._submit_locked(prompt, max_new_tokens, arrival_t)
+
+    def _submit_locked(self, prompt: list[int], max_new_tokens: int,
+                       arrival_t: float | None = None) -> int:
         self._uid += 1
         req = Request(self._uid, np.asarray(prompt, np.int32), max_new_tokens)
+        req.arrival_t = arrival_t if arrival_t is not None else self.clock.now()
         if self.paged:
             if len(req.prompt) + max_new_tokens > self.max_len:
                 # the block table maps exactly max_len rows: past it, decode
@@ -457,6 +534,16 @@ class ServeEngine:
         keys = self._cache_leaf_keys()
         return keys is not None and keys <= {"k", "v"}
 
+    def _chunk_safe(self) -> bool:
+        """True iff chunked prefill is *exact* for this model: every layer a
+        plain dense-attention block over GQA k/v caches.  Attention over the
+        causal prefix is row-local given the cache, so chunk boundaries are
+        invisible; MoE capacity routing and recurrent scans are not row-local
+        and would change values across a chunk boundary."""
+        if not self._paged_safe():
+            return False
+        return all(seg.kinds == ("dense",) for seg in self.model.segments)
+
     def _projected_pages(self, req: Request) -> int:
         return self.admission.projected_pages(
             len(req.prompt), req.max_new_tokens, self.page_size
@@ -475,10 +562,14 @@ class ServeEngine:
         return worst > self.allocator.total_pages - self.admission.watermark_pages
 
     def _projected_growth(self) -> int:
-        """Pages the already-admitted requests are still projected to map."""
+        """Pages the already-admitted requests are still projected to map.
+
+        Chunk-prefilling slots count too: their remaining prompt rows are
+        committed growth just like an active slot's remaining decode."""
+        live = list(self._active) + list(self._prefilling)
         return sum(
             max(0, self._projected[slot] - int(self._mapped[slot]))
-            for slot in self._active
+            for slot in live
         )
 
     def _admit_paged(self, req: Request) -> bool:
@@ -538,18 +629,19 @@ class ServeEngine:
         """
         if not self.paged:
             raise RuntimeError("preemption requires paged=True")
-        if uid is None:
-            victims = self.preemption.victims(self._candidates(), 1)
-            if not victims:
-                raise ValueError("no active request to preempt")
-            uid = victims[0]
-        slot = next(
-            (s for s, r in self._active.items() if r.uid == uid), None
-        )
-        if slot is None:
-            raise ValueError(f"request {uid} is not active")
-        self._park_slot(slot)
-        return uid
+        with self._lock:
+            if uid is None:
+                victims = self.preemption.victims(self._candidates(), 1)
+                if not victims:
+                    raise ValueError("no active request to preempt")
+                uid = victims[0]
+            slot = next(
+                (s for s, r in self._active.items() if r.uid == uid), None
+            )
+            if slot is None:
+                raise ValueError(f"request {uid} is not active")
+            self._park_slot(slot)
+            return uid
 
     def resume(self, uid: int) -> bool:
         """Force a resume attempt for a parked request.
@@ -559,15 +651,22 @@ class ServeEngine:
         not parked: resuming a request twice (or one that is active, done,
         or unknown) is a caller bug, not a transient condition.
         """
-        entry = next((e for e in self._parked if e.req.uid == uid), None)
-        if entry is None:
-            raise ValueError(f"request {uid} is not parked (double resume?)")
-        slot = next(
-            (s for s in range(self.slots) if s not in self._active), None
-        )
-        if slot is None:
-            return False
-        return self._try_resume(entry, slot)
+        with self._lock:
+            entry = next(
+                (e for e in self._parked if e.req.uid == uid), None
+            )
+            if entry is None:
+                raise ValueError(
+                    f"request {uid} is not parked (double resume?)"
+                )
+            slot = next(
+                (s for s in range(self.slots)
+                 if s not in self._active and s not in self._prefilling),
+                None,
+            )
+            if slot is None:
+                return False
+            return self._try_resume(entry, slot)
 
     def _candidates(self) -> list[PreemptionCandidate]:
         return [
@@ -759,7 +858,7 @@ class ServeEngine:
                 "segments": cache["segments"],
             }
             logits, _ = self._launch(
-                self.model.decode_step, self.params,
+                self._fixup_fn, self.params,
                 jnp.asarray(req.prompt[-1:][None, :]), fix_cache,
             )
         req_key = np.asarray(jax.random.fold_in(self._base_key, req.uid))
@@ -811,6 +910,155 @@ class ServeEngine:
             splice, self._cache["segments"], cache["segments"]
         )
         self._pos[slot] = len(req.prompt)
+
+    # -- chunked prefill (continuous batching) --------------------------------
+
+    def _chunk_for_new(self, req: Request) -> int:
+        """Chunk size a newly admitted request will prefill at (fixed for the
+        request's whole prefill, so its trace set is independent of traffic)."""
+        return self.chunk_policy.choose_chunk(
+            live_decode=len(self._active), fusion_k=self._last_fusion_k
+        )
+
+    def _admit_chunked(self, req: Request) -> bool:
+        """Paged admission for a chunked prefill: charge the *first chunk's*
+        pages, not the whole prompt — the rest of the prompt is projected
+        growth, reserve-scaled like decode growth.  This is what lets a new
+        request join while long prompts are still streaming in."""
+        chunk = self._chunk_for_new(req)
+        first = paged_mod.pages_for(
+            min(len(req.prompt), chunk), self.page_size
+        )
+        return self.admission.admit(
+            free_pages=self.allocator.free_pages,
+            projected_growth_pages=self._projected_growth(),
+            request_pages=first,
+        )
+
+    def _start_chunked(self, slot: int, req: Request) -> None:
+        """Admit ``req`` into ``slot`` as a chunked prefill."""
+        n = len(req.prompt)
+        b = self._bucket_len(n) if self.bucket_prompts else n
+        tokens = np.pad(req.prompt, (0, b - n)) if b > n else req.prompt
+        staging = self._staging.get(slot)
+        if staging is None:
+            specs = self.model.cache_specs(1, self.max_len)["segments"]
+            staging = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), specs
+            )
+        # the staging tree is reused across occupants without re-zeroing:
+        # chunk c only attends rows [0, end) written by chunks before it,
+        # and decode masks rows >= pos — stale rows are never read with
+        # nonzero weight, so they cannot perturb a single bit
+        if self.paged and self._cache is None:
+            self._cache = {
+                "segments": paged_mod.build_pool(
+                    staging, self.allocator.num_pages, self.page_size
+                )
+            }
+            self._token_bytes = paged_mod.pool_token_bytes(
+                self._cache["segments"]
+            )
+        self._prefilling[slot] = _Prefilling(
+            req=req, tokens=tokens, n=n, chunk=self._chunk_for_new(req),
+            cache={"pos": jnp.asarray(0, jnp.int32), "segments": staging},
+        )
+        if self.paged:
+            self._table[slot] = paged_mod.TRASH_PAGE
+            self._mapped[slot] = 0
+            self._projected[slot] = self._projected_pages(req)
+
+    def _chunk_step(self, slot: int, entry: _Prefilling) -> int:
+        """Run one prefill chunk for ``slot``; rows processed (0 = stalled)."""
+        req = entry.req
+        b = len(entry.tokens)
+        start = entry.filled
+        size = min(entry.chunk, b - start)
+        if self.paged:
+            # fund this chunk's pages: only rows < n are ever scattered, so
+            # the mapping target is the pages covering the new *real* rows.
+            # A shortfall stalls the chunk — decode keeps running and frees
+            # pages; total deadlock (nothing running at all) aborts the
+            # youngest prefill back to the queue in the step loop.
+            need = paged_mod.pages_for(min(start + size, entry.n),
+                                       self.page_size)
+            have = int(self._mapped[slot])
+            if need > have:
+                if self.allocator.free_pages < need - have:
+                    entry.stalled = True
+                    return 0
+                pages = self.allocator.allocate(req.uid, need - have)
+                self._table[slot, have:need] = pages
+                self._mapped[slot] = need
+        entry.stalled = False
+        toks = jnp.asarray(entry.tokens[None, start:start + size])
+        logits, entry.cache = self._launch(
+            self._chunk_fn, self.params, toks, entry.cache, start=start
+        )
+        if self.paged and start < entry.n:
+            # scatter only the chunk's real rows into their pages; pad rows
+            # stay in staging (decode masks them, like the unchunked path)
+            count = min(start + size, entry.n) - start
+            self._cache["segments"] = paged_mod.scatter_chunk(
+                self._cache["segments"], entry.cache["segments"],
+                jnp.asarray(self._table[slot], jnp.int32), start, count,
+                self.page_size,
+            )
+        entry.filled += size
+        if entry.filled >= b:
+            self._finish_chunked(slot, entry, logits)
+        return size
+
+    def _finish_chunked(self, slot: int, entry: _Prefilling, logits) -> None:
+        """Prompt fully prefilled: derive token 0 exactly as the unchunked
+        path would, then move the request into the decode batch."""
+        req, n = entry.req, entry.n
+        pad = len(entry.tokens) - n
+        if pad:
+            # the last chunk's logits sit at a pad position — same fixup as
+            # the unchunked path: one decode step of the last prompt token
+            # at its true position, keeping the prefill cache verbatim
+            fix_cache = {
+                "pos": jnp.asarray([n - 1], jnp.int32),
+                "segments": entry.cache["segments"],
+            }
+            logits, _ = self._launch(
+                self._fixup_fn, self.params,
+                jnp.asarray(req.prompt[-1:][None, :]), fix_cache,
+            )
+        req_key = np.asarray(jax.random.fold_in(self._base_key, req.uid))
+        tok = self._sample_token(np.asarray(logits, np.float32)[0], req_key, 0)
+        req.generated.append(int(tok))
+        self._slot_key[slot] = req_key
+        self._slot_tok[slot] = tok
+        if not self.paged:
+            if self._cache is None:
+                self._cache = {
+                    "segments": jax.tree.map(
+                        lambda x: jnp.repeat(
+                            jnp.zeros_like(x), self.slots, axis=1
+                        ),
+                        entry.cache["segments"],
+                    )
+                }
+                self._token_bytes = paged_mod.pool_token_bytes(
+                    self._cache["segments"]
+                )
+
+            def splice(full, one):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, one, slot, axis=1
+                )
+
+            self._cache["segments"] = jax.tree.map(
+                splice, self._cache["segments"], entry.cache["segments"]
+            )
+        self._staging[slot] = entry.cache["segments"]
+        self._pos[slot] = n
+        del self._prefilling[slot]
+        self._active[slot] = req
+        if req.first_token_t is None:
+            self._first_this_step.append(req)
 
     def _sample_token(self, logits: np.ndarray, req_key: np.ndarray,
                       t: int) -> int:
@@ -958,13 +1206,21 @@ class ServeEngine:
         return max(1, min(k, max(remaining, default=1)))
 
     def step(self) -> list[Request]:
-        """Admit queued requests, decode up to ``decode_fusion`` tokens for
-        all live slots in one fused launch.
+        """Admit queued requests, run one prefill chunk per chunk-prefilling
+        slot, then decode up to ``decode_fusion`` tokens for all live slots
+        in one fused launch.
 
         Returns requests completed this step.
         """
+        with self._lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> list[Request]:
+        self._first_this_step = []
+        chunked = self.chunk_policy is not None
+        prefill_tokens = 0
         for slot in range(self.slots):
-            if slot in self._active:
+            if slot in self._active or slot in self._prefilling:
                 continue
             if self.paged and self._parked:
                 # parked requests were admitted before anything still queued
@@ -977,16 +1233,91 @@ class ServeEngine:
                 continue
             if not self._queue:
                 break
-            if self.paged and not self._admit_paged(self._queue[0]):
-                # head-of-line blocking is deliberate: skipping ahead to
-                # smaller requests would starve large ones forever
-                break
+            if self.paged:
+                head = self._queue[0]
+                admitted = (self._admit_chunked(head) if chunked
+                            else self._admit_paged(head))
+                if not admitted:
+                    # head-of-line blocking is deliberate: skipping ahead to
+                    # smaller requests would starve large ones forever
+                    break
             req = self._queue.pop(0)
-            self._prefill_slot(slot, req)
-            self._active[slot] = req
-        if not self._active:
-            return []
+            if chunked:
+                self._start_chunked(slot, req)
+            else:
+                self._prefill_slot(slot, req)
+                prefill_tokens += (self._bucket_len(len(req.prompt))
+                                   if self.bucket_prompts else len(req.prompt))
+                self._active[slot] = req
+                if req.first_token_t is None:
+                    self._first_this_step.append(req)
 
+        # -- chunk phase: one prefill chunk per prefilling slot, oldest
+        # first (uid order), so under page pressure the senior prefill funds
+        # before junior ones and always makes progress ----------------------
+        if self._prefilling:
+            order = sorted(
+                self._prefilling,
+                key=lambda s: self._prefilling[s].req.uid,
+            )
+            for slot in order:
+                prefill_tokens += self._chunk_step(slot, self._prefilling[slot])
+            if (self.paged and self._prefilling and prefill_tokens == 0
+                    and not self._active):
+                # every prefill stalled and nothing is decoding: no pages
+                # will free on their own.  Abort the youngest prefill back
+                # into the queue (uid order preserved) — its pages fund the
+                # senior ones, which then always complete (a lone admitted
+                # request can fund any of its chunks by construction).
+                slot = max(
+                    self._prefilling,
+                    key=lambda s: self._prefilling[s].req.uid,
+                )
+                entry = self._prefilling.pop(slot)
+                self._release_slot(slot, entry.req)
+                idx = next(
+                    (i for i, r in enumerate(self._queue)
+                     if r.uid > entry.req.uid),
+                    len(self._queue),
+                )
+                self._queue.insert(idx, entry.req)
+
+        finished = self._decode_locked() if self._active else []
+
+        # -- engine clock: advance virtual time by the step's modeled cost,
+        # then stamp this step's latency events at the new now --------------
+        decode_tokens = self._decode_tokens_last
+        self._decode_tokens_last = 0
+        if (self.step_time_model is not None
+                and getattr(self.clock, "virtual", False)):
+            self.clock.advance(
+                self.step_time_model(prefill_tokens, decode_tokens)
+            )
+        now = self.clock.now()
+        for req in self._first_this_step:
+            req.first_token_t = now
+            if self.ledger is not None and req.arrival_t is not None:
+                self.ledger.record(
+                    ledger_mod.TTFT, now - req.arrival_t,
+                    producer=self._producer, uid=req.uid,
+                )
+        for req in finished:
+            req.finish_t = now
+            if self.ledger is not None and req.first_token_t is not None:
+                self.ledger.record(
+                    ledger_mod.TPOT,
+                    (req.finish_t - req.first_token_t)
+                    / max(1, len(req.generated) - 1),
+                    producer=self._producer, uid=req.uid,
+                )
+        self._record_memory()
+        return finished
+
+    #: decode tokens of the last fused launch (k × live slots) — the decode
+    #: half of the step_time_model charge, reset by the step loop
+    _decode_tokens_last = 0
+
+    def _decode_locked(self) -> list[Request]:
         k = self._choose_fusion()
         if self.paged:
             # fund this launch's on-demand growth first: under overcommit
@@ -1005,6 +1336,8 @@ class ServeEngine:
                 for r in self._active.values()
             )))
         n_live = len(self._active)          # post-preemption: slots decoding
+        self._last_fusion_k = k
+        self._decode_tokens_last = k * n_live
         self._concurrency_sum += n_live
         self._concurrency_n += 1
         self.peak_concurrency = max(self.peak_concurrency, n_live)
@@ -1020,7 +1353,16 @@ class ServeEngine:
                 # on-demand growth, launch-granular: map through the last
                 # position this launch can write for the slot (funded above)
                 self._grow_to(slot, self._launch_pages(slot, req, k))
-        table = jnp.asarray(self._table) if self.paged else None
+        tbl = self._table if self.paged else None
+        if self.paged and self._prefilling:
+            # a mid-prefill slot already has real pages mapped, but it is not
+            # in this launch's active set — its masked dummy writes must land
+            # on the scratch page (as an unmapped slot's would), not on the
+            # chunk rows already scattered into the pool
+            tbl = tbl.copy()
+            for pslot in self._prefilling:
+                tbl[pslot] = paged_mod.TRASH_PAGE
+        table = jnp.asarray(tbl) if self.paged else None
         # per-slot positions: continuous batching — slots joined at different
         # times decode against their own sequence positions
         segments, pos, tok, toks, valid = self._launch(
@@ -1058,7 +1400,6 @@ class ServeEngine:
                 if self.paged:
                     self._release_slot(slot, req)
                 del self._active[slot]
-        self._record_memory()
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
@@ -1077,33 +1418,44 @@ class ServeEngine:
         done: list[Request] = []
         for _ in range(max_steps):
             done += self.step()
-            if not self._active and not self._queue and not self._parked:
-                return done
-            if not self._active and self.paged:
-                # nothing is running, so nothing will ever free pages: if the
-                # seniority head (parked before queued) can never fit, every
-                # further step is a no-op — fail fast with the classification
-                # instead of spinning out the remaining max_steps
-                head = (self._parked[0].req if self._parked
-                        else self._queue[0] if self._queue else None)
-                if head is not None and self._never_fits(head):
-                    break
-        if self._active or self._queue or self._parked:
-            pending = list(self._active.values())
-            parked: list[Request] = []
-            rejected: list[Request] = []
-            for req in self._queue:
-                if self.paged and self._never_fits(req):
-                    rejected.append(req)
-                else:
-                    pending.append(req)
-            for entry in self._parked:
-                # a parked victim the tightened policy can never re-admit is
-                # just as permanently dead as an inadmissible queued request
-                if self._never_fits(entry.req):
-                    rejected.append(entry.req)
-                else:
-                    parked.append(entry.req)
-            raise ServeTruncated(done, pending, parked=parked,
-                                 rejected=rejected)
+            # classification and the stop check hold the lock so a feeder
+            # thread's submit() lands either fully before the check (and is
+            # admitted at the next step boundary) or fully after it — a
+            # half-appended queue can never be misread as empty or rejected
+            with self._lock:
+                if (not self._active and not self._prefilling
+                        and not self._queue and not self._parked):
+                    return done
+                if not self._active and not self._prefilling and self.paged:
+                    # nothing is running, so nothing will ever free pages: if
+                    # the seniority head (parked before queued) can never
+                    # fit, every further step is a no-op — fail fast with the
+                    # classification instead of spinning out max_steps
+                    head = (self._parked[0].req if self._parked
+                            else self._queue[0] if self._queue else None)
+                    if head is not None and self._never_fits(head):
+                        break
+        with self._lock:
+            if (self._active or self._prefilling or self._queue
+                    or self._parked):
+                pending = list(self._active.values()) + [
+                    e.req for e in self._prefilling.values()
+                ]
+                parked: list[Request] = []
+                rejected: list[Request] = []
+                for req in self._queue:
+                    if self.paged and self._never_fits(req):
+                        rejected.append(req)
+                    else:
+                        pending.append(req)
+                for entry in self._parked:
+                    # a parked victim the tightened policy can never
+                    # re-admit is just as permanently dead as an
+                    # inadmissible queued request
+                    if self._never_fits(entry.req):
+                        rejected.append(entry.req)
+                    else:
+                        parked.append(entry.req)
+                raise ServeTruncated(done, pending, parked=parked,
+                                     rejected=rejected)
         return done

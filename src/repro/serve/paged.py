@@ -187,6 +187,29 @@ def scatter_prefill(pool_segments, slot_segments, pages: jax.Array,
     return jax.tree.map(leaf, pool_segments, slot_segments)
 
 
+def scatter_chunk(pool_segments, slot_segments, table_row: jax.Array,
+                  start: int, count: int, page_size: int):
+    """Write one prefill chunk's rows ``[start, start+count)`` into the pool.
+
+    Chunk-granular sibling of :func:`scatter_prefill`: the rows land in
+    whatever pages ``table_row`` (the slot's full block-table row) maps
+    their positions to, page-alignment-free — a chunk may straddle a page
+    boundary or fill the middle of a page another chunk started.  Only real
+    prompt rows are scattered; pad rows stay in staging (attention masks
+    them by ``length``, exactly like the unchunked path's page tails).
+    """
+    pos = start + jnp.arange(count)
+    pages = table_row[pos // page_size]                       # [count]
+    offs = pos % page_size                                    # [count]
+
+    def leaf(pool, one):
+        src = one[:, 0, :, start:start + count]               # [L,H,count,hd]
+        src = jnp.moveaxis(src, 2, 0)                         # [count,L,H,hd]
+        return pool.at[:, pages, :, offs].set(src.astype(pool.dtype))
+
+    return jax.tree.map(leaf, pool_segments, slot_segments)
+
+
 # ---------------------------------------------------------------------------
 # page snapshot save/restore (preemption's zero-recompute resume path)
 # ---------------------------------------------------------------------------

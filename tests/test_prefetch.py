@@ -439,3 +439,48 @@ def test_simulate_lru_lookahead_reduces_exposed_not_correctness():
     assert ahead.exposed_s + ahead.hidden_s == pytest.approx(
         ahead.misses * cost.reconfig_s
     )
+
+
+# ---------------------------------------------------------------------------
+# regression: depth 1 must see past a same-role burst at the head
+# ---------------------------------------------------------------------------
+
+
+def test_depth1_prefetches_next_role_behind_same_role_burst():
+    """Regression for the table5 ``lookahead1 == lookahead0`` symptom
+    (``prefetch_issued=0``): the lookahead window used raw packet positions,
+    so a burst of same-role packets at a stalled head filled the whole
+    depth-1 window and the next role was never scanned.  Distance is now
+    counted in distinct-role *groups*: while roleB's demand load stalls the
+    queue, depth 1 must speculatively load roleC — the immediately-next role
+    switch — even though its first packet sits at raw index >= 4."""
+
+    def build(lookahead):
+        sched, lib, rm, led = _mk_sched(num_regions=3, lookahead=lookahead)
+        rb = _mk_role(lib, 8, "roleB")
+        rc = _mk_role(lib, 16, "roleC")
+        q = sched.add_queue(Queue(None, 64, name="B"))
+        pkts = [q.dispatch(rb.key, _x(8), _x(8)) for _ in range(4)]
+        pkts += [q.dispatch(rc.key, _x(16), _x(16)) for _ in range(4)]
+        sched.run_until_idle()
+        assert all(p.out.error is None for p in pkts)
+        return sched, rm, led
+
+    s1, rm1, led1 = build(1)
+    briefs = [e.brief() for e in s1.event_log()]
+    assert ("prefetch_start", "B", "roleC") in briefs
+    assert rm1.stats.prefetch_issued == 1
+    assert rm1.stats.prefetch_hits == 1
+    assert s1.stats["B"].reconfig_hidden_s > 0.0
+
+    # the reactive twin pays roleC's load fully exposed
+    s0, rm0, led0 = build(0)
+    assert rm0.stats.prefetch_issued == 0
+    assert s1.stats["B"].reconfig_s < s0.stats["B"].reconfig_s
+    assert (led1.reconfig_split()["exposed_s"]
+            < led0.reconfig_split()["exposed_s"])
+
+    # virtual clock: the schedule is a pure function of the trace
+    s1b, _, _ = build(1)
+    assert [(e.t, e.brief()) for e in s1b.event_log()] \
+        == [(e.t, e.brief()) for e in s1.event_log()]
