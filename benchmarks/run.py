@@ -76,6 +76,7 @@ def main(argv: list[str] | None = None) -> None:
         table7_paged,
         table8_overcommit,
         table9_traffic,
+        table10_faults,
     )
 
     suites = (
@@ -88,6 +89,7 @@ def main(argv: list[str] | None = None) -> None:
         (table7_paged.run, {"n": min(n, 64)}),
         (table8_overcommit.run, {"n": min(n, 64)}),
         (table9_traffic.run, {"n": min(n, 64)}),
+        (table10_faults.run, {"n": min(n, 48)}),
     )
     print("name,us_per_call,derived", flush=True)
     rows: list[str] = []

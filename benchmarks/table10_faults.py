@@ -1,0 +1,256 @@
+"""Table X (extension): self-healing serving under injected hardware faults.
+
+The paper's runtime reconfigures hardware *while requests are in flight* —
+which only earns the word "transparent" if a load or launch that dies
+mid-flight is also invisible to the client.  This benchmark drives the full
+serving stack (ServeEngine -> HSA queue -> Scheduler -> RegionManager) on a
+deterministic ``VirtualClock`` under a seeded ``FaultPlan`` and grades the
+recovery machinery on two axes:
+
+  - **goodput** — generated tokens per virtual second, swept over injected
+    fault rate x recovery policy.  Every lost attempt, backoff window,
+    watchdog kill, and re-prefill replay burns modeled time, so goodput
+    degradation is an exact property of the schedule.
+  - **transparency** — completed token streams must be bitwise-identical to
+    the fault-free run.  Recovery that perturbs a single sampled token is a
+    correctness bug, not a performance tradeoff.
+
+Two recovery policies face the same fault schedules:
+
+  - ``sched``  — scheduler-level RetryPolicy: transient faults retry in
+    place with exponential backoff below the engine; the engine's park/
+    replay path is a backstop for budget blow-through.
+  - ``engine`` — no scheduler retry: every fault surfaces as a FaultError
+    and the engine parks the live batch via the preemption machinery,
+    then resumes by re-prefill replay (PR 5 slot-parking reused as the
+    fault-recovery substrate).
+
+A side experiment exercises the reconfig layer: a foreign tenant queue
+dispatches region-backed roles, so load faults hit ``RegionManager`` and
+retry through ``abort_prefetch`` while serving continues.
+
+The headline (``fault_recovery_wins``, asserted in CI): at every swept rate
+up to 10% both policies complete *all* requests with zero stream
+divergence, every injected fault is visible in
+``ledger.availability_split()``, and goodput at the worst point stays above
+``GOODPUT_FLOOR`` of fault-free goodput.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.core.hsa import FaultPlan, Queue, Scheduler, VirtualClock
+from repro.core.ledger import OverheadLedger
+from repro.core.policy import RetryPolicy
+from repro.core.reconfig import RegionManager
+from repro.core.roles import RoleLibrary
+from repro.models import build_model
+from repro.models.params import init_params
+from repro.serve.engine import ServeEngine
+
+SLOTS = 4
+MAX_LEN = 32
+PAGE = 8
+FUSION = 2
+SEED = 20260808
+
+# virtual cost model (seconds): every launch pays the launch overhead, a
+# region load pays reconfig-scale time, a wedged launch burns its whole
+# watchdog window (WATCHDOG_FACTOR x EXEC_S) before being killed.
+EXEC_S = 1e-3
+RECONFIG_S = 5e-3
+
+RATES = (0.02, 0.05, 0.10)        # injected fault probability per attempt
+# worst-case goodput vs fault-free at 10% injected faults.  The engine-park
+# policy lands ~0.51 (re-prefill replay is the dominant cost); the floor
+# leaves margin for schedule drift in later PRs without losing the claim
+GOODPUT_FLOOR = 0.45
+
+POLICIES = {
+    "sched": dict(
+        sched_retry=RetryPolicy(backoff_s=1e-4, max_backoff_s=4e-3),
+        eng_retry=RetryPolicy(max_request_recoveries=32),
+    ),
+    "engine": dict(
+        sched_retry=None,
+        eng_retry=RetryPolicy(max_request_recoveries=32),
+    ),
+}
+
+
+def _cost(kind: str, what: str, measured: float) -> float:
+    return RECONFIG_S if kind == "reconfig" else EXEC_S
+
+
+def make_requests(n: int) -> list[tuple[list[int], int]]:
+    import numpy as np
+
+    rng = np.random.default_rng(SEED)
+    return [
+        (
+            [int(t) for t in rng.integers(1, 120, size=int(rng.integers(2, 9)))],
+            int(rng.integers(4, 13)),
+        )
+        for _ in range(n)
+    ]
+
+
+def run_once(model, params, reqs, *, plan=None, sched_retry=None,
+             eng_retry=None) -> dict:
+    ledger = OverheadLedger()
+    clock = VirtualClock()
+    lib = RoleLibrary(ledger=ledger)
+    rm = RegionManager(4, ledger=ledger)
+    sched = Scheduler(
+        rm, lib, ledger=ledger, clock=clock, cost_model=_cost,
+        retry=sched_retry, faults=plan, expected_exec_s=EXEC_S,
+    )
+    q = sched.add_queue(Queue(None, 512, name="serve"))
+    eng = ServeEngine(
+        model, params, batch_slots=SLOTS, max_len=MAX_LEN, paged=True,
+        page_size=PAGE, decode_fusion=FUSION, seed=0, clock=clock,
+        hsa_queue=q, hsa_scheduler=sched, retry=eng_retry,
+    )
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done = eng.run_to_completion(max_steps=200_000)
+    # in drain mode the clock only jumps when a grant must wait (stall or
+    # backoff); the schedule's true extent is the last stamped event
+    makespan = max((e.t for e in sched.event_log()), default=clock.now())
+    tokens = sum(len(r.generated) for r in done)
+    return {
+        "streams": {r.uid: list(r.generated) for r in sorted(
+            done, key=lambda r: r.uid)},
+        "completed": len(done),
+        "tokens": tokens,
+        "makespan": makespan,
+        "goodput": tokens / makespan if makespan > 0 else 0.0,
+        "avail": ledger.availability_split(),
+        "injected": 0 if plan is None else len(plan.trace),
+    }
+
+
+def make_plan(rate: float) -> FaultPlan:
+    # split the budget across fault classes; wedges are the expensive ones
+    return FaultPlan(seed=7, exec_rate=rate * 0.8, wedge_rate=rate * 0.2)
+
+
+def run(n: int = 48) -> list[str]:
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(0))
+    reqs = make_requests(max(16, min(n, 48)))
+
+    base = run_once(model, params, reqs)
+    rows = [
+        f"table10,goodput_tok_s_faultfree,{base['goodput']:.1f},"
+        f"tokens={base['tokens']};makespan_us={base['makespan'] * 1e6:.0f};"
+        f"requests={base['completed']}"
+    ]
+
+    wins = True
+    worst_ratio = 1.0
+    faults_total = 0
+    for rate in RATES:
+        for pname, pol in POLICIES.items():
+            plan = make_plan(rate)
+            r = run_once(model, params, reqs, plan=plan, **pol)
+            a = r["avail"]
+            identical = r["streams"] == base["streams"]
+            complete = r["completed"] == len(reqs) and a["failed_requests"] == 0
+            # every injected fault must be visible in the availability split
+            accounted = a["faults"] == r["injected"] > 0
+            ratio = r["goodput"] / base["goodput"] if base["goodput"] else 0.0
+            worst_ratio = min(worst_ratio, ratio)
+            faults_total += a["faults"]
+            wins = wins and identical and complete and accounted
+            rows.append(
+                f"table10,goodput_tok_s_r{int(rate * 100):02d}_{pname},"
+                f"{r['goodput']:.1f},"
+                f"goodput_ratio={ratio:.3f};"
+                f"faults={a['faults']:.0f};wedges={a['wedges']:.0f};"
+                f"retries={a['retries']:.0f};recoveries={a['recoveries']:.0f};"
+                f"recompute_tokens={a['recovery_recompute_tokens']:.0f};"
+                f"mttr_us={a['mttr_s'] * 1e6:.0f};"
+                f"failed={a['failed_requests']:.0f};"
+                f"bitwise_identical={int(identical)};"
+                f"completed={r['completed']}"
+            )
+
+    # reconfig-layer arm: a foreign tenant's region loads fault and retry
+    # through abort_prefetch while the engine serves the same traffic
+    tenant = run_tenant_arm(model, params, reqs[:16])
+    rows.append(
+        f"table10,load_fault_retries,{tenant['retries']:.0f},"
+        f"load_faults={tenant['load_faults']:.0f};"
+        f"tenant_failed={tenant['tenant_failed']};"
+        f"streams_ok={int(tenant['streams_ok'])}"
+    )
+    wins = wins and tenant["load_faults"] > 0 and tenant["tenant_failed"] == 0
+    wins = wins and tenant["streams_ok"] and worst_ratio >= GOODPUT_FLOOR
+
+    rows.append(
+        f"table10,fault_recovery_wins,{int(wins)},"
+        f"worst_goodput_ratio={worst_ratio:.3f};floor={GOODPUT_FLOOR};"
+        f"faults_total={faults_total:.0f};"
+        f"rates={'|'.join(str(r) for r in RATES)}"
+    )
+    return rows
+
+
+def run_tenant_arm(model, params, reqs) -> dict:
+    """Serve alongside a role-dispatching tenant whose region loads fault."""
+    import jax.numpy as jnp
+
+    from repro.core.registry import GLOBAL_REGISTRY
+    from repro.core.roles import Role
+
+    ledger = OverheadLedger()
+    clock = VirtualClock()
+    lib = RoleLibrary(ledger=ledger)
+    rm = RegionManager(2, ledger=ledger)
+    # forced, not rate-drawn: the scheduler's lookahead batching minimizes
+    # reconfigs, so only a handful of loads happen — script the faults so
+    # the retry-through-abort_prefetch path is exercised deterministically
+    plan = FaultPlan(seed=11)
+    plan.force("load", count=3)
+    sched = Scheduler(
+        rm, lib, ledger=ledger, clock=clock, cost_model=_cost,
+        retry=RetryPolicy(backoff_s=1e-4, max_backoff_s=4e-3),
+        faults=plan, expected_exec_s=EXEC_S,
+    )
+    q = sched.add_queue(Queue(None, 512, name="serve"))
+    tq = sched.add_queue(Queue(None, 512, name="tenant"))
+    impl = GLOBAL_REGISTRY.resolve("matmul", "any", ("xla",))
+    spec = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    roles = [lib.add(Role(impl, (spec, spec), name=f"t{i}")) for i in range(3)]
+    eng = ServeEngine(
+        model, params, batch_slots=SLOTS, max_len=MAX_LEN, paged=True,
+        page_size=PAGE, decode_fusion=FUSION, seed=0, clock=clock,
+        hsa_queue=q, hsa_scheduler=sched, retry=RetryPolicy(),
+    )
+    base = run_once(model, params, reqs)
+    x = jnp.ones((8, 8))
+    tenant_pkts = []
+    for i, (p, m) in enumerate(reqs):
+        eng.submit(p, max_new_tokens=m)
+        # rotate roles so region pressure forces evictions + reloads
+        tenant_pkts.append(tq.dispatch(roles[i % len(roles)].key, x, x))
+    done = eng.run_to_completion(max_steps=200_000)
+    sched.run_until_idle()       # engine drains stop at serve: finish tenant
+    streams = {r.uid: list(r.generated) for r in sorted(
+        done, key=lambda r: r.uid)}
+    a = ledger.availability_split()
+    return {
+        "load_faults": a["load_faults"],
+        "retries": a["retries"],
+        "tenant_failed": sum(1 for p in tenant_pkts if p.out.error is not None),
+        "streams_ok": streams == base["streams"] and len(done) == len(reqs),
+    }
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

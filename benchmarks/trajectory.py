@@ -41,6 +41,7 @@ ASSERTED = (
     ("table8", "serve_overcommit_identical"),
     ("table8", "serve_overcommit_wins"),
     ("table9", "chunked_wins"),
+    ("table10", "fault_recovery_wins"),
 )
 
 #: deterministic metrics: current >= baseline * (1 - TOLERANCE)

@@ -3,6 +3,15 @@
 from repro.core.hsa.agent import Agent, MemoryRegion
 from repro.core.hsa.clock import Clock, VirtualClock, WallClock
 from repro.core.hsa.executor import Executor, run_packet_sync
+from repro.core.hsa.faults import (
+    FaultError,
+    FaultEvent,
+    FaultPlan,
+    InjectedFault,
+    InjectedLoadFault,
+    PermanentFault,
+    WedgedLaunch,
+)
 from repro.core.hsa.queue import (
     BarrierAndPacket,
     Box,
@@ -29,6 +38,13 @@ __all__ = [
     "WallClock",
     "Executor",
     "run_packet_sync",
+    "FaultError",
+    "FaultEvent",
+    "FaultPlan",
+    "InjectedFault",
+    "InjectedLoadFault",
+    "PermanentFault",
+    "WedgedLaunch",
     "BarrierAndPacket",
     "Box",
     "KernelDispatchPacket",

@@ -1,0 +1,205 @@
+"""Deterministic fault injection for the HSA runtime.
+
+Real accelerator runtimes fail in three characteristic ways, and the paper's
+"hide the complexity of controlling new hardware" promise only holds if the
+runtime absorbs all three without user-visible effect:
+
+  - **exec faults** — a kernel launch raises (transient: a retry succeeds;
+    permanent: the packet is unrunnable no matter how often it is retried);
+  - **load faults** — a partial-bitstream / region load aborts mid-flight
+    (the FPGA story's reconfiguration failure);
+  - **wedged launches** — the launch neither completes nor errors: its
+    completion signal never fires, and only a watchdog deadline kills it.
+
+A :class:`FaultPlan` injects all three *deterministically*: one seeded RNG,
+one draw per attempt, scheduled on the injectable clock — so every fault
+trace is a reproducible virtual-clock event log and a recovery bug replays
+exactly.  Tests wanting surgical faults script them with :meth:`force`
+(consumed before any random draw).
+
+The injected exceptions all derive from :class:`FaultError`, which is the
+type the recovery stack gates on: a ``FaultError`` is the hardware's problem
+and is absorbed by retry/quarantine/park-resume; any other exception is a
+programming error and still surfaces to the caller unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any
+
+
+class FaultError(RuntimeError):
+    """Base class for hardware-attributable launch failures.
+
+    Recovery layers (scheduler retry, reconfig reload, engine park/resume)
+    absorb ``FaultError`` subclasses only — user code bugs propagate."""
+
+
+class InjectedFault(FaultError):
+    """Transient kernel-exec failure: a retry may succeed."""
+
+
+class PermanentFault(InjectedFault):
+    """Kernel-exec failure no retry can absorb (broken region, bad SKU)."""
+
+
+class InjectedLoadFault(FaultError):
+    """Region (partial-bitstream) load aborted mid-flight."""
+
+
+class WedgedLaunch(FaultError):
+    """Launch that never completes: no error, no completion signal.
+
+    Only the scheduler's watchdog deadline converts a wedge into this
+    exception; the time charged for the attempt is the full watchdog
+    window, not the expected exec time."""
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One injected fault, stamped on the plan's clock."""
+
+    t: float
+    kind: str                  # "exec" | "load" | "wedge"
+    what: str                  # packet .what / role name
+    queue: str | None = None
+    permanent: bool = False
+    forced: bool = False
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Seeded fault schedule over launch/load attempts.
+
+    Rates are per-attempt probabilities drawn from one ``random.Random``:
+    a single draw per exec attempt is compared against cumulative
+    ``wedge_rate`` / ``permanent_rate`` / ``exec_rate`` thresholds (first
+    band wins), and one draw per load attempt against ``load_rate`` — so a
+    given seed produces the same fault trace regardless of which faults a
+    test cares about.  ``trace`` accumulates every injected fault as a
+    clock-stamped :class:`FaultEvent`.
+    """
+
+    seed: int = 0
+    exec_rate: float = 0.0        # transient exec exception
+    load_rate: float = 0.0        # region load abort
+    wedge_rate: float = 0.0       # completion never fires
+    permanent_rate: float = 0.0   # unretryable exec failure
+    clock: Any = None             # bound by the scheduler (bind_clock)
+
+    def __post_init__(self) -> None:
+        for name in ("exec_rate", "load_rate", "wedge_rate", "permanent_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.exec_rate + self.wedge_rate + self.permanent_rate > 1.0:
+            raise ValueError("exec_rate + wedge_rate + permanent_rate > 1")
+        self._rng = random.Random(self.seed)
+        self.trace: list[FaultEvent] = []
+        self._forced: list[dict[str, Any]] = []
+
+    # -- wiring ------------------------------------------------------------
+
+    def bind_clock(self, clock: Any) -> None:
+        """Attach the runtime's clock so trace events are stamped in the
+        same timeline as the scheduler's event log.  First binding wins
+        (a plan shared by scheduler + region manager keeps one timeline)."""
+        if self.clock is None:
+            self.clock = clock
+
+    def _now(self) -> float:
+        return self.clock.now() if self.clock is not None else 0.0
+
+    # -- scripted faults ---------------------------------------------------
+
+    def force(self, kind: str, what: str | None = None, *,
+              permanent: bool = False, count: int = 1) -> None:
+        """Script ``count`` faults of ``kind`` ("exec" | "load" | "wedge")
+        against the next matching attempts (``what`` is a substring match on
+        the packet's ``.what`` / role name; None matches any).  Forced
+        faults are consumed before any random draw, so a test can hit one
+        specific launch without touching the seeded schedule."""
+        if kind not in ("exec", "load", "wedge"):
+            raise ValueError(f"unknown fault kind {kind!r}")
+        if count < 1:
+            raise ValueError(f"count must be >= 1, got {count}")
+        self._forced.append(
+            {"kind": kind, "what": what, "permanent": permanent,
+             "count": count}
+        )
+
+    def _take_forced(self, kinds: tuple[str, ...], what: str) -> dict | None:
+        for entry in self._forced:
+            if entry["kind"] in kinds and (
+                entry["what"] is None or entry["what"] in what
+            ):
+                entry["count"] -= 1
+                if entry["count"] == 0:
+                    self._forced.remove(entry)
+                return entry
+        return None
+
+    # -- draws -------------------------------------------------------------
+
+    def _log(self, kind: str, what: str, queue: str | None,
+             permanent: bool, forced: bool) -> None:
+        self.trace.append(FaultEvent(
+            t=self._now(), kind=kind, what=what, queue=queue,
+            permanent=permanent, forced=forced,
+        ))
+
+    def draw_exec(self, what: str, *,
+                  queue: str | None = None) -> FaultError | None:
+        """Fault (or None) for one kernel-exec attempt of ``what``."""
+        forced = self._take_forced(("exec", "wedge"), what)
+        if forced is not None:
+            kind = forced["kind"]
+            permanent = bool(forced["permanent"])
+            self._log(kind, what, queue, permanent, forced=True)
+            if kind == "wedge":
+                return WedgedLaunch(f"wedged launch (forced): {what}")
+            if permanent:
+                return PermanentFault(f"permanent exec fault (forced): {what}")
+            return InjectedFault(f"exec fault (forced): {what}")
+        r = self._rng.random()
+        if r < self.wedge_rate:
+            self._log("wedge", what, queue, False, forced=False)
+            return WedgedLaunch(f"wedged launch: {what}")
+        r -= self.wedge_rate
+        if r < self.permanent_rate:
+            self._log("exec", what, queue, True, forced=False)
+            return PermanentFault(f"permanent exec fault: {what}")
+        r -= self.permanent_rate
+        if r < self.exec_rate:
+            self._log("exec", what, queue, False, forced=False)
+            return InjectedFault(f"exec fault: {what}")
+        return None
+
+    def draw_load(self, role: str, *,
+                  queue: str | None = None) -> FaultError | None:
+        """Fault (or None) for one region-load attempt of ``role``."""
+        forced = self._take_forced(("load",), role)
+        if forced is not None:
+            self._log("load", role, queue, bool(forced["permanent"]),
+                      forced=True)
+            return InjectedLoadFault(f"load fault (forced): {role}")
+        if self._rng.random() < self.load_rate:
+            self._log("load", role, queue, False, forced=False)
+            return InjectedLoadFault(f"load fault: {role}")
+        return None
+
+    def load_hook(self, role: str) -> None:
+        """RegionManager ``fault_hook`` adapter: raise instead of return,
+        matching the real failure mode (``role.load()`` raising)."""
+        err = self.draw_load(role)
+        if err is not None:
+            raise err
+
+    def __repr__(self) -> str:
+        return (
+            f"FaultPlan(seed={self.seed}, exec={self.exec_rate}, "
+            f"load={self.load_rate}, wedge={self.wedge_rate}, "
+            f"permanent={self.permanent_rate}, injected={len(self.trace)})"
+        )

@@ -153,6 +153,16 @@ class Queue:
         for packet in packets:
             if now is not None and packet.enqueue_t is None:
                 packet.enqueue_t = now
+            # Completion waits inherit the queue's time source so timed waits
+            # (engine launch waits, watchdog probes) are deterministic under a
+            # VirtualClock without the producer having to plumb it per packet.
+            completion = packet.completion
+            if (
+                self.clock is not None
+                and completion is not None
+                and getattr(completion, "clock", None) is None
+            ):
+                completion.clock = self.clock
         with self._lock:
             if self._write - self._read + len(packets) > self.size:
                 raise QueueFullError(f"queue {self.name} full ({self.size} packets)")
@@ -274,6 +284,18 @@ class Queue:
             self._ring[self._read % self.size] = None
             self._read += 1
             return pkt
+
+    def requeue_head(self, packet: Packet) -> None:
+        """Consumer-side undo: push a just-popped packet back into the head
+        slot so the grant loop re-presents it without reordering it behind
+        later submissions.  Used by the scheduler's fault-retry path; the
+        packet keeps its original ``enqueue_t`` so WAIT accounting spans the
+        whole retried lifetime."""
+        with self._lock:
+            if self._write - self._read + 1 > self.size:
+                raise QueueFullError(f"queue {self.name} full ({self.size} packets)")
+            self._read -= 1
+            self._ring[self._read % self.size] = packet
 
     def pending(self) -> int:
         with self._lock:

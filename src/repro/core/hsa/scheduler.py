@@ -55,8 +55,11 @@ import jax
 from repro.core import ledger as ledger_mod
 from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
 from repro.core.hsa.clock import Clock, VirtualClock, WallClock
+from repro.core.hsa.faults import (
+    FaultError, FaultPlan, InjectedLoadFault, PermanentFault, WedgedLaunch,
+)
 from repro.core.hsa.queue import BarrierAndPacket, KernelDispatchPacket, Packet, Queue
-from repro.core.policy import PrefetchPolicy
+from repro.core.policy import PrefetchPolicy, RetryPolicy
 from repro.core.reconfig import RegionManager
 from repro.core.roles import RoleLibrary
 
@@ -150,6 +153,9 @@ class Scheduler:
         lookahead: "PrefetchPolicy | int" = 0,
         burst_grants: bool = True,
         keep_events: int = 100_000,
+        retry: "RetryPolicy | int | None" = None,
+        faults: "FaultPlan | None" = None,
+        expected_exec_s: float | Callable[[str], float] | None = None,
     ) -> None:
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; choose from {POLICIES}")
@@ -166,6 +172,20 @@ class Scheduler:
         self.lookahead = PrefetchPolicy.of(lookahead).lookahead
         self.burst_grants = burst_grants
         self.keep_events = keep_events
+        # fault tolerance: retry=None keeps the legacy fail-fast semantics
+        # (one error kills the packet); a RetryPolicy turns on per-packet
+        # retry/backoff, the wedge watchdog, and queue quarantine.  A
+        # FaultPlan deterministically injects the faults the policy absorbs.
+        self.retry = RetryPolicy.of(retry)
+        self.faults = faults
+        # expected exec duration (seconds, or a fn of packet .what) the
+        # watchdog deadline is derived from — callers with a step_time_model
+        # thread it here so wedge kills track the workload's real tempo
+        self.expected_exec_s = expected_exec_s
+        if faults is not None:
+            faults.bind_clock(self.clock)
+            if regions.fault_hook is None:
+                regions.fault_hook = faults.load_hook
 
         self.queues: list[Queue] = []
         self.stats: dict[str, QueueStats] = {}
@@ -177,6 +197,10 @@ class Scheduler:
         self._grant_ptr = 0
         self._stalls: dict[str, _Stall] = {}       # queue name -> reconfig in flight
         self._prefetches: dict[Any, _Prefetch] = {}  # role key -> speculative load
+        self._backoff_until: dict[str, float] = {}   # queue -> no grants before t
+        self._consecutive_faults: dict[str, int] = {}
+        self._quarantined: set[str] = set()
+        self._migrated_counts: dict[str, int] = {}   # origin queue -> in flight
         self._seq = 0
         self._t0 = self.clock.now()
         self._compute_free_t = self._t0
@@ -234,10 +258,35 @@ class Scheduler:
         # exactly the signal's, so no unbounded id-keyed map / stale-id reuse
         return max([now] + [getattr(d, "_complete_t", now) for d in deps])
 
-    def _complete(self, sig: Any, t: float) -> None:
+    def _deps_error(self, deps: Iterable[Any]) -> BaseException | None:
+        # like _complete_t, upstream errors ride on the signal objects: a
+        # failed packet's completion still reaches 0 (waiters wake) but
+        # carries the error, so barrier-AND chains propagate failure instead
+        # of reporting success over a dead dependency
+        for d in deps:
+            err = getattr(d, "_error", None)
+            if err is not None:
+                return err
+        return None
+
+    def _complete(self, sig: Any, t: float,
+                  error: BaseException | None = None) -> None:
         if sig is not None:
             sig._complete_t = t
+            if error is not None:
+                sig._error = error
             sig.store(0)
+
+    def _note_done(self, pkt: Packet) -> None:
+        self._completed += 1
+        src = getattr(pkt, "_migrated_from", None)
+        if src is not None:
+            pkt._migrated_from = None
+            c = self._migrated_counts.get(src, 0) - 1
+            if c > 0:
+                self._migrated_counts[src] = c
+            else:
+                self._migrated_counts.pop(src, None)
 
     def _log(self, t: float, kind: str, queue: str, what: str) -> SchedEvent:
         ev = SchedEvent(t=t, kind=kind, queue=queue, what=what, seq=self._seq)
@@ -264,6 +313,16 @@ class Scheduler:
         n = len(self.queues)
         if n == 0:
             return None
+
+        # expire elapsed retry backoffs; move late submissions off
+        # quarantined queues before anything can grant from them
+        for qname, until in list(self._backoff_until.items()):
+            if until <= now:
+                del self._backoff_until[qname]
+        if self._quarantined:
+            for q in self.queues:
+                if q.name in self._quarantined and q.pending():
+                    self._migrate_pending(q)
 
         # retire finished prefetches before stalls: a joined stall's packet
         # must find its role resident when the grant loop re-reaches it
@@ -306,11 +365,19 @@ class Scheduler:
                 )
                 self._log(end, "reconfig_end", qname, stall.role_name)
             if stall.error is not None:
-                # the load can never succeed (e.g. all regions pinned):
-                # surface it to the waiter instead of re-stalling forever
                 q = next(qq for qq in self.queues if qq.name == qname)
                 pkt = q.peek()
                 if isinstance(pkt, KernelDispatchPacket):
+                    if isinstance(stall.error, FaultError) and self.retry is not None:
+                        # transient load fault: clean up through the
+                        # abort_prefetch path and retry the load with
+                        # backoff instead of failing the head packet
+                        ev = self._load_fault(q, pkt, stall, end)
+                        if ev is not None:
+                            return ev
+                    # the load can never succeed (e.g. all regions pinned,
+                    # or the retry budget ran out): surface it to the
+                    # waiter instead of re-stalling forever
                     return self._fail(q, pkt, stall.error, end)
 
         # speculate for blocked queues before granting: a prefetch issued at
@@ -331,7 +398,9 @@ class Scheduler:
         for gi in probes:
             qi = order[gi]
             q = self.queues[qi]
-            if q.name in self._stalls:
+            if q.name in self._stalls or q.name in self._quarantined:
+                continue
+            if self._backoff_until.get(q.name, 0.0) > now:
                 continue
             pkt = q.peek()
             if pkt is None:
@@ -343,14 +412,17 @@ class Scheduler:
             return self._grant(q, pkt, now)
 
         # nothing ready now: on a virtual clock, jump to the next retire
-        # (stall or in-flight prefetch, whichever completes first)
-        if self._virtual and (self._stalls or self._prefetches):
-            target = min(
+        # (stall, in-flight prefetch, or retry-backoff expiry — whichever
+        # completes first)
+        if self._virtual:
+            targets = (
                 [s.end_t for s in self._stalls.values()]
                 + [p.end_t for p in self._prefetches.values()]
+                + [b for b in self._backoff_until.values() if b > now]
             )
-            self.clock.advance_to(target)
-            return self._step_locked()
+            if targets:
+                self.clock.advance_to(min(targets))
+                return self._step_locked()
 
         if (
             self._virtual
@@ -385,7 +457,10 @@ class Scheduler:
         bid = getattr(pkt, "burst_id", None)
         if not self.burst_grants or bid is None:
             return ev
-        while q.name not in self._stalls:
+        while (
+            q.name not in self._stalls
+            and self._backoff_until.get(q.name, 0.0) <= self.clock.now()
+        ):
             nxt = q.peek()
             if nxt is None or getattr(nxt, "burst_id", None) != bid:
                 break
@@ -503,6 +578,17 @@ class Scheduler:
                     role, queue=q.name, protect=protect,
                     target_rank=protect.get(key),
                 )
+            except FaultError:
+                # injected load fault on a *speculative* load: account it
+                # (it is a real fault of the reconfig engine) but don't
+                # punish the beneficiary queue — demand will retry properly
+                self.ledger.record(
+                    ledger_mod.FAULT, 0.0, queue=q.name, what=role.name,
+                    kind="load",
+                )
+                self.ledger.record_fault(kind="load")
+                self._log(start, "fault", q.name, f"{role.name}!load")
+                continue
             except RuntimeError:
                 continue    # structural (all pinned): the demand path fails it
             if res is None:
@@ -549,6 +635,12 @@ class Scheduler:
         st = self.stats.get(pf.queue)
         if pf.error is not None:
             self.regions.abort_prefetch(pf.role_key)
+            if isinstance(pf.error, FaultError):
+                self.ledger.record(
+                    ledger_mod.FAULT, 0.0, queue=pf.queue, what=pf.role.name,
+                    kind="load",
+                )
+                self.ledger.record_fault(kind="load")
             self._log(end, "prefetch_end", pf.queue, f"{pf.role.name}!error")
             return
         if not pf.started:
@@ -617,13 +709,21 @@ class Scheduler:
         if isinstance(pkt, BarrierAndPacket):
             q.pop()
             t = self._deps_time(pkt.deps, now)
+            err = self._deps_error(pkt.deps)
             self.stats[q.name].barriers += 1
-            self._completed += 1
-            ev = self._log(t, "barrier", q.name, f"and[{len(pkt.deps)}]")
-            self._complete(pkt.completion, t)
+            self._note_done(pkt)
+            what = f"and[{len(pkt.deps)}]" + ("!error" if err is not None else "")
+            ev = self._log(t, "barrier", q.name, what)
+            self._complete(pkt.completion, t, error=err)
             return ev
 
         assert isinstance(pkt, KernelDispatchPacket)
+        dep_err = self._deps_error(pkt.deps)
+        if dep_err is not None:
+            # an upstream dependency failed: this packet must not run on its
+            # (missing) result — fail it with the propagated error, which its
+            # own completion signal carries onward through the chain
+            return self._fail(q, pkt, dep_err, now)
         role = None
         if pkt.role_key is not None:
             try:
@@ -644,10 +744,153 @@ class Scheduler:
               now: float) -> SchedEvent:
         q.pop()
         pkt.out.error = err
-        self._completed += 1
+        self._note_done(pkt)
         ev = self._log(now, "error", q.name, pkt.what)
-        self._complete(pkt.completion, now)
+        self._complete(pkt.completion, now, error=err)
         return ev
+
+    # -- fault handling (retry / backoff / watchdog / quarantine) ---------------
+
+    _WATCHDOG_FALLBACK = RetryPolicy()
+
+    def _watchdog_s(self, what: str) -> float:
+        """Watchdog window for one launch of ``what`` — how long a wedged
+        launch occupies the compute engine before being killed."""
+        e = self.expected_exec_s
+        expected = 0.0 if e is None else (e(what) if callable(e) else float(e))
+        policy = self.retry if self.retry is not None else self._WATCHDOG_FALLBACK
+        return policy.watchdog_deadline(expected)
+
+    def _handle_fault(self, q: Queue, pkt: KernelDispatchPacket,
+                      err: BaseException, *, kind: str, seconds: float,
+                      t: float) -> SchedEvent:
+        """A launch attempt died to a hardware-class fault (already popped):
+        account it, then retry in place with backoff or fail the packet."""
+        permanent = isinstance(err, PermanentFault)
+        self.ledger.record(
+            ledger_mod.FAULT, seconds, queue=q.name, what=pkt.what, kind=kind,
+        )
+        self.ledger.record_fault(kind=kind, permanent=permanent)
+        self._log(t, "fault", q.name, f"{pkt.what}!{kind}")
+        k = self._consecutive_faults.get(q.name, 0) + 1
+        self._consecutive_faults[q.name] = k
+
+        attempts = getattr(pkt, "_attempts", 1)
+        retryable = (
+            self.retry is not None
+            and not permanent
+            and attempts <= self.retry.max_retries
+        )
+        if retryable:
+            pkt._attempts = attempts + 1
+            pkt.out.error = None
+            q.requeue_head(pkt)
+            backoff = self.retry.backoff(attempts)
+            self._backoff_until[q.name] = max(
+                self._backoff_until.get(q.name, 0.0), t + backoff
+            )
+            self.ledger.record(
+                ledger_mod.RETRY, backoff, queue=q.name, what=pkt.what,
+            )
+            self.ledger.record_retry()
+            ev = self._log(t, "retry", q.name, f"{pkt.what}#{attempts}")
+        else:
+            pkt.out.error = err
+            self._note_done(pkt)
+            ev = self._log(t, "error", q.name, pkt.what)
+            self._complete(pkt.completion, t, error=err)
+        self._maybe_quarantine(q, k, t)
+        return ev
+
+    def _load_fault(self, q: Queue, pkt: KernelDispatchPacket, stall: _Stall,
+                    t: float) -> SchedEvent | None:
+        """A demand region load died to a transient fault.  Clean up through
+        the abort_prefetch path and retry the load (the head packet stays
+        queued; the grant loop re-stalls it after the backoff).  Returns None
+        when the retry budget is exhausted — the caller fails the packet."""
+        attempts = getattr(pkt, "_attempts", 1)
+        self.ledger.record(
+            ledger_mod.FAULT, max(0.0, t - stall.start_t), queue=q.name,
+            what=stall.role_name, kind="load",
+        )
+        self.ledger.record_fault(kind="load")
+        self._log(t, "fault", q.name, f"{stall.role_name}!load")
+        k = self._consecutive_faults.get(q.name, 0) + 1
+        self._consecutive_faults[q.name] = k
+        if attempts > self.retry.max_retries:
+            self._maybe_quarantine(q, k, t)
+            return None
+        if stall.role_key is not None:
+            self.regions.abort_prefetch(stall.role_key)
+        pkt._attempts = attempts + 1
+        backoff = self.retry.backoff(attempts)
+        self._backoff_until[q.name] = max(
+            self._backoff_until.get(q.name, 0.0), t + backoff
+        )
+        self.ledger.record(
+            ledger_mod.RETRY, backoff, queue=q.name, what=stall.role_name,
+        )
+        self.ledger.record_retry()
+        ev = self._log(t, "retry", q.name, f"{stall.role_name}#{attempts}")
+        self._maybe_quarantine(q, k, t)
+        return ev
+
+    def _maybe_quarantine(self, q: Queue, consecutive: int, t: float) -> None:
+        if (
+            self.retry is None
+            or self.retry.quarantine_after <= 0
+            or consecutive < self.retry.quarantine_after
+            or q.name in self._quarantined
+        ):
+            return
+        siblings = [
+            qq for qq in self.queues
+            if qq.name != q.name and qq.name not in self._quarantined
+        ]
+        if not siblings:
+            # a lone queue has nowhere to send its packets: keep serving it
+            # (resetting the streak so the check doesn't fire every fault)
+            self._consecutive_faults[q.name] = 0
+            return
+        self._quarantined.add(q.name)
+        self._backoff_until.pop(q.name, None)
+        n = self._migrate_pending(q)
+        self.ledger.record_quarantine(migrated=n)
+        self._log(t, "quarantine", q.name, f"migrated[{n}]")
+
+    def _migrate_pending(self, q: Queue) -> int:
+        """Round-robin every pending packet of ``q`` onto non-quarantined
+        sibling queues.  Packets keep their enqueue_t (WAIT accounting spans
+        the migration) and are tagged with their origin so ``drain(q)`` still
+        waits for them."""
+        siblings = [
+            qq for qq in self.queues
+            if qq.name != q.name and qq.name not in self._quarantined
+        ]
+        if not siblings:
+            return 0
+        n = 0
+        while True:
+            pkt = q.pop()
+            if pkt is None:
+                break
+            if getattr(pkt, "_migrated_from", None) is None:
+                pkt._migrated_from = q.name
+                self._migrated_counts[q.name] = (
+                    self._migrated_counts.get(q.name, 0) + 1
+                )
+            siblings[n % len(siblings)].submit(pkt)
+            n += 1
+        return n
+
+    def reinstate(self, name: str) -> None:
+        """Lift a queue's quarantine (operator action / sibling recovered)."""
+        self._quarantined.discard(name)
+        self._consecutive_faults.pop(name, None)
+
+    @property
+    def quarantined_queues(self) -> frozenset[str]:
+        return frozenset(self._quarantined)
 
     def _begin_reconfig(self, q: Queue, pkt: KernelDispatchPacket, role: Any,
                         now: float) -> SchedEvent:
@@ -696,67 +939,95 @@ class Scheduler:
         start = max(now, self._compute_free_t, self._deps_time(pkt.deps, now))
         q.pop()
         st = self.stats[q.name]
-        wait = max(0.0, start - (pkt.enqueue_t if pkt.enqueue_t is not None else start))
-        st.wait_s += wait
-        self.ledger.record(
-            ledger_mod.WAIT, wait, queue=q.name, what=pkt.what, producer=pkt.producer
-        )
+        if getattr(pkt, "_attempts", 1) == 1:
+            # retries keep the original enqueue_t; WAIT is the first attempt's
+            # (the retry delay is priced separately as RETRY backoff)
+            wait = max(
+                0.0,
+                start - (pkt.enqueue_t if pkt.enqueue_t is not None else start),
+            )
+            st.wait_s += wait
+            self.ledger.record(
+                ledger_mod.WAIT, wait, queue=q.name, what=pkt.what,
+                producer=pkt.producer,
+            )
         self._log(start, "exec_start", q.name, pkt.what)
 
+        fault = (
+            self.faults.draw_exec(pkt.what, queue=q.name)
+            if self.faults is not None else None
+        )
+        wedged = isinstance(fault, WedgedLaunch)
         measured = 0.0
-        try:
-            t0 = time.perf_counter_ns()
-            if role is not None:
-                if getattr(pkt, "_reconfigured", False):
-                    # stall already accounted this packet's lookup; if the role
-                    # was evicted meanwhile (or its reconfig failed), re-load
-                    # properly instead of executing outside region management
-                    if not self.regions.touch(role.key):
-                        # lazy protect: the window scan only runs if this
-                        # lookup actually misses and must evict
+        if fault is not None:
+            pkt.out.error = fault
+        else:
+            try:
+                t0 = time.perf_counter_ns()
+                if role is not None:
+                    if getattr(pkt, "_reconfigured", False):
+                        # stall already accounted this packet's lookup; if the role
+                        # was evicted meanwhile (or its reconfig failed), re-load
+                        # properly instead of executing outside region management
+                        if not self.regions.touch(role.key):
+                            # lazy protect: the window scan only runs if this
+                            # lookup actually misses and must evict
+                            self.regions.ensure_resident(
+                                role, queue=q.name, protect=self._protected_keys
+                            )
+                    else:
                         self.regions.ensure_resident(
                             role, queue=q.name, protect=self._protected_keys
                         )
+                    out = role(*pkt.args)
                 else:
-                    self.regions.ensure_resident(
-                        role, queue=q.name, protect=self._protected_keys
-                    )
-                out = role(*pkt.args)
-            else:
-                out = pkt.fn(*pkt.args)
-            t1 = time.perf_counter_ns()
-            self.ledger.record(
-                ledger_mod.DISPATCH, (t1 - t0) * 1e-9,
-                role=pkt.what, producer=pkt.producer, queue=q.name,
-            )
-            self.ledger.record(
-                ledger_mod.DISPATCH_GRANT, (t1 - g0) * 1e-9,
-                role=pkt.what, producer=pkt.producer, queue=q.name,
-                burst=pkt.burst_n,
-            )
-            out = jax.block_until_ready(out)
-            t2 = time.perf_counter_ns()
-            self.ledger.record(
-                ledger_mod.EXEC, (t2 - t1) * 1e-9, role=pkt.what, queue=q.name
-            )
-            measured = (t2 - t0) * 1e-9
-            pkt.out.value = out
-        except BaseException as e:          # surface to waiter, don't kill the loop
-            pkt.out.error = e
+                    out = pkt.fn(*pkt.args)
+                t1 = time.perf_counter_ns()
+                self.ledger.record(
+                    ledger_mod.DISPATCH, (t1 - t0) * 1e-9,
+                    role=pkt.what, producer=pkt.producer, queue=q.name,
+                )
+                self.ledger.record(
+                    ledger_mod.DISPATCH_GRANT, (t1 - g0) * 1e-9,
+                    role=pkt.what, producer=pkt.producer, queue=q.name,
+                    burst=pkt.burst_n,
+                )
+                out = jax.block_until_ready(out)
+                t2 = time.perf_counter_ns()
+                self.ledger.record(
+                    ledger_mod.EXEC, (t2 - t1) * 1e-9, role=pkt.what, queue=q.name
+                )
+                measured = (t2 - t0) * 1e-9
+                pkt.out.value = out
+            except BaseException as e:      # surface to waiter, don't kill the loop
+                pkt.out.error = e
 
-        # keyed by role.name to match the reconfig path (calibration dicts use
-        # role names, not shape-specialized key strings)
-        dur = self.cost_model(
-            "exec", role.name if role is not None else pkt.what, measured
-        )
+        if wedged:
+            # the launch never completes: only the watchdog ends it, and the
+            # attempt is charged its full deadline window on the timeline
+            dur = self._watchdog_s(pkt.what)
+        else:
+            # keyed by role.name to match the reconfig path (calibration dicts
+            # use role names, not shape-specialized key strings)
+            dur = self.cost_model(
+                "exec", role.name if role is not None else pkt.what, measured
+            )
         end = start + dur
         self._compute_free_t = end
         self._busy_s += dur
+
+        err = pkt.out.error
+        if isinstance(err, FaultError):
+            kind = ("wedge" if wedged
+                    else "load" if isinstance(err, InjectedLoadFault)
+                    else "exec")
+            return self._handle_fault(q, pkt, err, kind=kind, seconds=dur, t=end)
+        self._consecutive_faults.pop(q.name, None)
         st.exec_s += dur
         st.dispatched += 1
-        self._completed += 1
+        self._note_done(pkt)
         ev = self._log(end, "exec_end", q.name, pkt.what)
-        self._complete(pkt.completion, end)
+        self._complete(pkt.completion, end, error=err)
         return ev
 
     # -- cooperative driving -------------------------------------------------------
@@ -808,7 +1079,11 @@ class Scheduler:
             self.add_queue(queue)
         before = self._completed
         for _ in range(max_steps):
-            if queue.pending() == 0 and queue.name not in self._stalls:
+            if (
+                queue.pending() == 0
+                and queue.name not in self._stalls
+                and not self._migrated_counts.get(queue.name)
+            ):
                 break
             ev = self.step()
             if ev is None and not self._await_stall():

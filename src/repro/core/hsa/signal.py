@@ -10,14 +10,15 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Iterable
+from typing import Any, Callable, Iterable
 
 
 class Signal:
-    def __init__(self, initial: int = 1, name: str = "") -> None:
+    def __init__(self, initial: int = 1, name: str = "", clock: Any = None) -> None:
         self._value = int(initial)
         self._cond = threading.Condition()
         self.name = name
+        self.clock = clock  # optional injectable time source for timed waits
 
     # -- atomics ---------------------------------------------------------------
 
@@ -51,11 +52,26 @@ class Signal:
 
     # -- waits -------------------------------------------------------------------
 
+    def _now(self) -> float:
+        return time.monotonic() if self.clock is None else self.clock.now()
+
     def _wait(self, pred: Callable[[int], bool], timeout: float | None) -> bool:
-        deadline = None if timeout is None else time.monotonic() + timeout
+        clk = self.clock
+        if timeout is not None and clk is not None and getattr(clk, "virtual", False):
+            # Virtual time never moves inside a blocking wait, so a timed wait
+            # is modeled as a deterministic advance-and-recheck: either the
+            # value is already there, or the timeout window elapses on the
+            # virtual clock and the wait reports whatever the value then is.
+            with self._cond:
+                if pred(self._value):
+                    return True
+            clk.sleep(max(0.0, timeout))
+            with self._cond:
+                return pred(self._value)
+        deadline = None if timeout is None else self._now() + timeout
         with self._cond:
             while not pred(self._value):
-                remaining = None if deadline is None else deadline - time.monotonic()
+                remaining = None if deadline is None else deadline - self._now()
                 if remaining is not None and remaining <= 0:
                     return False
                 self._cond.wait(remaining)
@@ -81,6 +97,7 @@ def wait_all(
     signals: Iterable["Signal"],
     target: int = 0,
     timeout: float | None = None,
+    clock: Any = None,
 ) -> bool:
     """Block until every signal reads ``target``; one wait covers a burst.
 
@@ -89,10 +106,22 @@ def wait_all(
     (waiting on an already-satisfied signal returns immediately, so order
     only affects which signal eats the remaining budget on timeout).
     Returns False as soon as the deadline expires with any signal unmet.
+
+    The deadline is tracked on ``clock`` when given, else on the first
+    component signal that carries one, else on ``time.monotonic`` — so a
+    burst wait under :class:`VirtualClock` stays deterministic end to end.
     """
-    deadline = None if timeout is None else time.monotonic() + timeout
+    signals = tuple(signals)
+    clk = clock
+    if clk is None:
+        for sig in signals:
+            if getattr(sig, "clock", None) is not None:
+                clk = sig.clock
+                break
+    now = time.monotonic if clk is None else clk.now
+    deadline = None if timeout is None else now() + timeout
     for sig in signals:
-        remaining = None if deadline is None else deadline - time.monotonic()
+        remaining = None if deadline is None else deadline - now()
         if not sig.wait_eq(target, remaining):
             return False
     return True

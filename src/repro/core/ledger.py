@@ -81,9 +81,19 @@ PREEMPT_RESUME = "preempt_resume"
 TTFT = "ttft"
 TPOT = "tpot"
 
+# Fault tolerance (the self-healing runtime's availability accounting).
+# FAULT is the schedule time an attempt lost to an injected/real failure
+# (a wedged launch charges its whole watchdog window); RETRY is backoff
+# delay spent between attempts; RECOVER is engine-clock time from a
+# request's fault-park to its successful resume (MTTR samples).
+FAULT = "fault"
+RETRY = "retry"
+RECOVER = "recover"
+
 CATEGORIES = (SETUP, RECONFIG, RECONFIG_EXPOSED, RECONFIG_HIDDEN, DISPATCH,
               DISPATCH_SUBMIT, DISPATCH_GRANT, DISPATCH_WAIT, EXEC, WAIT,
-              PREEMPT_PARK, PREEMPT_RESUME, TTFT, TPOT)
+              PREEMPT_PARK, PREEMPT_RESUME, TTFT, TPOT,
+              FAULT, RETRY, RECOVER)
 
 OCCURRENCE = {
     SETUP: "once",
@@ -100,6 +110,9 @@ OCCURRENCE = {
     PREEMPT_RESUME: "per resume",
     TTFT: "per request",
     TPOT: "per request",
+    FAULT: "on fault",
+    RETRY: "per retry",
+    RECOVER: "per recovery",
 }
 
 
@@ -143,6 +156,14 @@ class OverheadLedger:
         "reprefill_resumes": 0.0, "snapshot_bytes": 0.0,
     }
 
+    _FAULT_ZERO = {
+        "faults": 0.0, "exec_faults": 0.0, "load_faults": 0.0,
+        "wedges": 0.0, "permanent_faults": 0.0, "retries": 0.0,
+        "quarantines": 0.0, "migrated_packets": 0.0,
+        "recoveries": 0.0, "failed_requests": 0.0,
+        "recovery_recompute_tokens": 0.0, "mttr_total_s": 0.0,
+    }
+
     def __init__(self, keep_entries: bool = False) -> None:
         self._lock = threading.Lock()
         self._stats: dict[str, Stat] = {c: Stat() for c in CATEGORIES}
@@ -153,6 +174,7 @@ class OverheadLedger:
         self._recent: dict[tuple[str | None, str], deque[float]] = {}
         self._memory: dict[str, dict[str, float]] = {}
         self._preempt: dict[str, float] = dict(self._PREEMPT_ZERO)
+        self._fault: dict[str, float] = dict(self._FAULT_ZERO)
 
     def record(self, category: str, seconds: float, **meta: Any) -> None:
         if category not in self._stats:
@@ -242,6 +264,7 @@ class OverheadLedger:
             self._recent = {}
             self._memory = {}
             self._preempt = dict(self._PREEMPT_ZERO)
+            self._fault = dict(self._FAULT_ZERO)
             if self._entries is not None:
                 self._entries = []
 
@@ -334,6 +357,79 @@ class OverheadLedger:
         out["launches"] = float(launches)
         out["preemption_rate"] = (
             out["preemptions"] / launches if launches else 0.0
+        )
+        return out
+
+    # -- availability accounting (fault injection + self-healing) ------------
+
+    def record_fault(self, *, kind: str, permanent: bool = False) -> None:
+        """One failed attempt.  ``kind`` is ``"exec"``, ``"load"`` or
+        ``"wedge"`` (a wedge is counted as an exec-class fault too — it is a
+        launch that never completed).  ``permanent`` marks faults the retry
+        policy is forbidden to absorb."""
+        if kind not in ("exec", "load", "wedge"):
+            raise ValueError(f"unknown fault kind {kind!r}")
+        with self._lock:
+            self._fault["faults"] += 1.0
+            if kind == "load":
+                self._fault["load_faults"] += 1.0
+            else:
+                self._fault["exec_faults"] += 1.0
+                if kind == "wedge":
+                    self._fault["wedges"] += 1.0
+            if permanent:
+                self._fault["permanent_faults"] += 1.0
+
+    def record_retry(self) -> None:
+        """One retry attempt issued after a fault (backoff seconds ride the
+        RETRY category via ``record``)."""
+        with self._lock:
+            self._fault["retries"] += 1.0
+
+    def record_quarantine(self, *, migrated: int) -> None:
+        """One queue quarantined; ``migrated`` pending packets moved to
+        sibling queues."""
+        with self._lock:
+            self._fault["quarantines"] += 1.0
+            self._fault["migrated_packets"] += float(migrated)
+
+    def record_recovery(self, *, mttr_s: float = 0.0,
+                        recompute_tokens: int = 0,
+                        failed: bool = False) -> None:
+        """One request-level recovery outcome.  A successful recovery samples
+        ``mttr_s`` (engine clock, fault-park -> resumed) and the re-prefill
+        replay's wasted ``recompute_tokens``; ``failed=True`` counts a
+        request whose recovery budget ran out instead."""
+        with self._lock:
+            if failed:
+                self._fault["failed_requests"] += 1.0
+            else:
+                self._fault["recoveries"] += 1.0
+                self._fault["mttr_total_s"] += float(mttr_s)
+                self._fault["recovery_recompute_tokens"] += float(
+                    recompute_tokens)
+
+    def availability_split(self) -> dict[str, float]:
+        """Fault/retry/recovery counters + timings (the table10 view).
+
+        ``fault_rate`` is faults per attempt, where attempts = successful
+        execs + faulted attempts (so a fault-free ledger reads 0.0 and a
+        ledger that never executed reads 0.0 with ``attempts`` = 0 —
+        distinguishable).  ``mttr_s`` is the mean engine-clock time from a
+        request's fault-park to its resume."""
+        with self._lock:
+            out = dict(self._fault)
+            out["fault_s"] = self._stats[FAULT].total_s
+            out["retry_backoff_s"] = self._stats[RETRY].total_s
+            out["recover_s"] = self._stats[RECOVER].total_s
+            execs = self._stats[EXEC].count
+        out["attempts"] = float(execs) + out["faults"]
+        out["fault_rate"] = (
+            out["faults"] / out["attempts"] if out["attempts"] else 0.0
+        )
+        out["mttr_s"] = (
+            out["mttr_total_s"] / out["recoveries"] if out["recoveries"]
+            else 0.0
         )
         return out
 

@@ -380,6 +380,98 @@ class PreemptionPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How the runtime absorbs faults before the user ever sees one.
+
+    The paper's promise is a runtime that "hides the complexity of
+    controlling new hardware" — and real accelerator hardware faults: kernel
+    launches error, partial-bitstream loads abort, doorbells wedge.  This
+    policy spans the three recovery layers:
+
+      - **scheduler** — a faulted packet is retried in place (``requeue_head``,
+        so queue order is preserved) up to ``max_retries`` times with
+        exponential backoff (``backoff_s * backoff_factor**attempt``, capped
+        at ``max_backoff_s``); a launch whose completion never fires is
+        killed by a watchdog after :meth:`watchdog_deadline` of its expected
+        duration; a queue that faults ``quarantine_after`` consecutive times
+        is quarantined — its pending packets migrate to sibling queues;
+      - **reconfig** — a failed region load retries through the
+        ``abort_prefetch`` cleanup path instead of failing the head packet;
+      - **engine** — a launch that exhausts its packet budget (or faults
+        permanently) parks the affected requests via the preemption
+        machinery and resumes them by re-prefill replay, at most
+        ``max_request_recoveries`` times per request, keeping completed
+        streams bitwise-identical to fault-free runs.
+    """
+
+    max_retries: int = 3
+    backoff_s: float = 1e-3
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 1.0
+    watchdog_factor: float = 8.0
+    watchdog_floor_s: float = 1e-3
+    quarantine_after: int = 3            # K consecutive faults; 0 disables
+    max_request_recoveries: int = 2      # engine-level park/replay budget
+
+    def __post_init__(self) -> None:
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_s < 0:
+            raise ValueError(f"backoff_s must be >= 0, got {self.backoff_s}")
+        if self.backoff_factor < 1.0:
+            raise ValueError(
+                f"backoff_factor must be >= 1, got {self.backoff_factor}"
+            )
+        if self.max_backoff_s < self.backoff_s:
+            raise ValueError(
+                f"max_backoff_s {self.max_backoff_s} < backoff_s {self.backoff_s}"
+            )
+        if self.watchdog_factor < 1.0:
+            raise ValueError(
+                f"watchdog_factor must be >= 1, got {self.watchdog_factor}"
+            )
+        if self.watchdog_floor_s < 0:
+            raise ValueError(
+                f"watchdog_floor_s must be >= 0, got {self.watchdog_floor_s}"
+            )
+        if self.quarantine_after < 0:
+            raise ValueError(
+                f"quarantine_after must be >= 0, got {self.quarantine_after}"
+            )
+        if self.max_request_recoveries < 0:
+            raise ValueError(
+                "max_request_recoveries must be >= 0, got "
+                f"{self.max_request_recoveries}"
+            )
+
+    @classmethod
+    def of(cls, value: "RetryPolicy | int | None") -> "RetryPolicy | None":
+        """``None`` keeps retries off (legacy fail-fast semantics); an int is
+        a plain ``max_retries`` with the other knobs at their defaults."""
+        if value is None or isinstance(value, RetryPolicy):
+            return value
+        return cls(max_retries=int(value))
+
+    def backoff(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (1-based: the delay
+        between the first fault and the second try is ``backoff(1)``)."""
+        if attempt < 1:
+            raise ValueError(f"attempt must be >= 1, got {attempt}")
+        return min(
+            self.max_backoff_s,
+            self.backoff_s * self.backoff_factor ** (attempt - 1),
+        )
+
+    def watchdog_deadline(self, expected_s: float) -> float:
+        """How long a launch may run before the watchdog declares it wedged.
+
+        Derived from the caller's expected duration (the engine's
+        ``step_time_model`` or a measured exec cost), floored so a
+        nominally-instant launch still gets a real window."""
+        return max(self.watchdog_floor_s, self.watchdog_factor * expected_s)
+
+
+@dataclasses.dataclass(frozen=True)
 class Invocation:
     """One op call site in a model step: (op type, site id e.g. layer index)."""
 

@@ -94,6 +94,10 @@ class RegionManager:
         self.num_regions = num_regions
         self.ledger = ledger
         self.stats = ResidencyStats()
+        # fault injection: called with the role name before every load
+        # attempt; raising (FaultError) models the load aborting mid-flight
+        # (see repro.core.hsa.faults.FaultPlan.load_hook)
+        self.fault_hook: Callable[[str], None] | None = None
         self._resident: "OrderedDict[RoleKey, Role]" = OrderedDict()  # LRU: oldest first
         self._pinned: set[RoleKey] = set()
         self._prefetching: dict[RoleKey, Role] = {}   # speculative loads in flight
@@ -249,6 +253,8 @@ class RegionManager:
     def _load(self, role: Role, *, queue, evicted, prefetch: bool) -> float:
         import time
 
+        if self.fault_hook is not None:
+            self.fault_hook(role.name)
         t0 = time.perf_counter_ns()
         role.load()
         dt = (time.perf_counter_ns() - t0) * 1e-9

@@ -33,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core import ledger as ledger_mod
 from repro.core.hsa.clock import WallClock
+from repro.core.hsa.faults import FaultError
 from repro.core.policy import (
     RESUME_REPREFILL,
     RESUME_SNAPSHOT,
@@ -41,6 +42,7 @@ from repro.core.policy import (
     FusionPolicy,
     PreemptionCandidate,
     PreemptionPolicy,
+    RetryPolicy,
 )
 from repro.dist import act
 from repro.dist.sharding import ShardingRules
@@ -167,6 +169,9 @@ class Request:
     done: bool = False
     parked: bool = False               # preempted, awaiting resume
     preemptions: int = 0               # times this request was parked
+    fault_recoveries: int = 0          # fault-triggered park/requeue cycles
+    # the fault that permanently killed this request (recovery budget spent)
+    failed: BaseException | None = None
     # committed tokens a re-prefill resume is replaying; the engine asserts
     # regenerated tokens match this prefix bitwise, then drops it
     replay: list[int] | None = None
@@ -185,6 +190,9 @@ class _Parked:
     pos: int                           # cache rows at park (prompt + gen - 1)
     mode: str                          # RESUME_SNAPSHOT | RESUME_REPREFILL
     snapshot: Any | None               # gather_pages tree (snapshot mode)
+    # engine-clock time the fault that parked this request fired (None for
+    # pool-pressure parks); resume - fault_t is the request's MTTR sample
+    fault_t: float | None = None
 
 
 @dataclasses.dataclass
@@ -222,19 +230,27 @@ class ServeTruncated(RuntimeError):
       permanent, no number of steps completes them.  (``submit`` refuses
       these up front; they appear here only if the policy was tightened
       after submission.)
+    - ``failed`` — requests killed by a hardware fault after the engine's
+      recovery budget (``RetryPolicy.max_request_recoveries``) was spent:
+      permanent, and raised as soon as everything else drains — the step
+      loop never spins retrying them.  Each carries the fatal error on
+      ``req.failed``.
     """
 
     def __init__(self, done: list[Request], pending: list[Request], *,
                  parked: list[Request] | tuple = (),
-                 rejected: list[Request] | tuple = ()) -> None:
+                 rejected: list[Request] | tuple = (),
+                 failed: list[Request] | tuple = ()) -> None:
         self.done = done
         self.pending = pending
         self.parked = list(parked)
         self.rejected = list(rejected)
+        self.failed = list(failed)
         super().__init__(
             f"serving truncated at max_steps: {len(done)} requests done, "
             f"{len(pending)} pending, {len(self.parked)} parked, "
-            f"{len(self.rejected)} permanently rejected"
+            f"{len(self.rejected)} permanently rejected, "
+            f"{len(self.failed)} failed to faults"
         )
 
 
@@ -273,7 +289,8 @@ class ServeEngine:
                  ledger: "ledger_mod.OverheadLedger | None" = None,
                  prefill_chunk: "int | ChunkPolicy | None" = None,
                  clock=None,
-                 step_time_model: "Callable[[int, int], float] | None" = None):
+                 step_time_model: "Callable[[int, int], float] | None" = None,
+                 retry: "RetryPolicy | int | None" = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -329,6 +346,13 @@ class ServeEngine:
         # requests were admitted before anything still queued, so they also
         # resume before anything still queued (strict seniority, no starvation)
         self._parked: list[_Parked] = []
+        # fault recovery: with a RetryPolicy, a launch dying to a FaultError
+        # (after the scheduler's own retries) parks its requests for
+        # re-prefill replay instead of raising; a request whose recovery
+        # budget is spent lands in _failed and surfaces via ServeTruncated.
+        # Any non-FaultError still propagates — bugs are not retried.
+        self.retry = RetryPolicy.of(retry)
+        self._failed: list[Request] = []
         # overcommit counters (mirrored into the ledger when one is attached)
         self.preemptions = 0
         self.resumes = 0
@@ -678,12 +702,19 @@ class ServeEngine:
             for slot, req in self._active.items()
         ]
 
-    def _park_slot(self, slot: int) -> None:
-        """Reclaim one active request's pages; keep its progress on the host."""
+    def _park_slot(self, slot: int, *, mode: str | None = None,
+                   fault_t: float | None = None) -> None:
+        """Reclaim one active request's pages; keep its progress on the host.
+
+        ``mode`` overrides the policy's resume-mode choice (fault recovery
+        forces re-prefill: device-side cache state after a failed launch is
+        untrusted, so nothing is snapshotted from it); ``fault_t`` stamps the
+        park as fault-triggered for MTTR accounting at resume."""
         req = self._active.pop(slot)
         t0 = time.perf_counter_ns()
         pos = int(self._pos[slot])
-        mode = self.preemption.resume_mode(tokens_done=pos)
+        if mode is None:
+            mode = self.preemption.resume_mode(tokens_done=pos)
         snapshot = None
         snap_bytes = 0
         reclaimed = int(self._mapped[slot])
@@ -699,7 +730,7 @@ class ServeEngine:
         req.parked = True
         req.preemptions += 1
         self._parked.append(_Parked(req=req, pos=pos, mode=mode,
-                                    snapshot=snapshot))
+                                    snapshot=snapshot, fault_t=fault_t))
         self._parked.sort(key=lambda e: e.req.uid)
         self.preemptions += 1
         self.pages_reclaimed += reclaimed
@@ -761,7 +792,16 @@ class ServeEngine:
             recompute = len(req.prompt) + len(committed) - 1
             req.replay = committed
             req.generated = []
-            self._prefill_slot(slot, req)
+            try:
+                self._prefill_slot(slot, req)
+            except FaultError as e:
+                # the recovery prefill itself died to hardware: re-park (the
+                # committed tokens live on in req.replay) or give up once the
+                # recovery budget is spent — never leave it half-resumed
+                if self.retry is None:
+                    raise
+                self._repark_faulted(entry, e)
+                return False
             if req.generated[0] != committed[0]:
                 raise RuntimeError(
                     f"preemption replay diverged at request {req.uid} token 0: "
@@ -781,7 +821,97 @@ class ServeEngine:
             self.ledger.record_resume(
                 mode=entry.mode, recompute_tokens=recompute
             )
+        if entry.fault_t is not None:
+            # fault-triggered park now healed: park-to-resume on the engine
+            # clock is this request's repair time (the MTTR feed), and the
+            # replayed tokens are recovery recompute, not overcommit churn
+            mttr = max(0.0, self.clock.now() - entry.fault_t)
+            if self.ledger is not None:
+                self.ledger.record(
+                    ledger_mod.RECOVER, mttr, producer=self._producer,
+                    what=entry.mode, uid=req.uid,
+                )
+                self.ledger.record_recovery(
+                    mttr_s=mttr, recompute_tokens=recompute
+                )
         return True
+
+    # -- fault recovery -------------------------------------------------------
+
+    @property
+    def failed_requests(self) -> list[Request]:
+        """Requests permanently killed by faults (recovery budget spent)."""
+        return list(self._failed)
+
+    def _fail_request(self, req: Request, err: BaseException) -> None:
+        """Recovery budget spent: the request is dead.  It moves to the
+        ``failed`` bucket (surfaced by ``run_to_completion`` via
+        :class:`ServeTruncated`) instead of being retried forever."""
+        req.failed = err
+        req.parked = False
+        self._failed.append(req)
+        if self.ledger is not None:
+            self.ledger.record_recovery(failed=True)
+
+    def _repark_faulted(self, entry: _Parked, err: FaultError) -> None:
+        """A fault-interrupted resume goes back to the parked list (budget
+        permitting) with its fault timestamp set so the eventual successful
+        resume reports the full outage as MTTR."""
+        req = entry.req
+        req.fault_recoveries += 1
+        if req.fault_recoveries > self.retry.max_request_recoveries:
+            self._fail_request(req, err)
+            return
+        if entry.fault_t is None:
+            entry.fault_t = self.clock.now()
+        self._parked.append(entry)
+        self._parked.sort(key=lambda e: e.req.uid)
+
+    def _recover_decode_fault(self, err: FaultError) -> None:
+        """A decode launch died to hardware after the scheduler's own
+        retries: park every live slot for re-prefill replay.
+
+        The failed launch's carry was never committed (cache, positions and
+        tokens are as they were before the launch), but the device-side KV
+        behind them is untrusted after a fault — so recovery forces
+        ``RESUME_REPREFILL``: recompute the prompt cache from scratch and
+        replay the committed tokens, which position-indexed sampling makes
+        bitwise-identical to the fault-free stream.  Requests whose recovery
+        budget is spent fail instead of parking.  Recovery needs the paged
+        park/resume machinery and an engine RetryPolicy; otherwise the fault
+        propagates unchanged (the legacy fail-loud behavior).
+        """
+        if self.retry is None or not self.paged:
+            raise err
+        now = self.clock.now()
+        for slot in sorted(self._active):
+            req = self._active[slot]
+            req.fault_recoveries += 1
+            if req.fault_recoveries > self.retry.max_request_recoveries:
+                self._active.pop(slot)
+                self._release_slot(slot, req)
+                self._fail_request(req, err)
+                continue
+            self._park_slot(slot, mode=RESUME_REPREFILL, fault_t=now)
+
+    def _abort_prefill_to_queue(self, slot: int, err: FaultError) -> None:
+        """A chunked prefill's launch faulted: drop the partial staging work,
+        return the request to the queue in uid order (budget permitting) —
+        the re-admitted prefill recomputes every chunk from row 0, so the
+        eventual stream is untouched by the fault."""
+        entry = self._prefilling.pop(slot)
+        req = entry.req
+        if self.paged:
+            self._release_slot(slot, req)
+        req.fault_recoveries += 1
+        if req.fault_recoveries > self.retry.max_request_recoveries:
+            self._fail_request(req, err)
+            return
+        idx = next(
+            (i for i, r in enumerate(self._queue) if r.uid > req.uid),
+            len(self._queue),
+        )
+        self._queue.insert(idx, req)
 
     def _fund_growth(self, k: int) -> int:
         """Make this launch's page growth allocatable; the funded depth.
@@ -1245,7 +1375,20 @@ class ServeEngine:
             if chunked:
                 self._start_chunked(slot, req)
             else:
-                self._prefill_slot(slot, req)
+                try:
+                    self._prefill_slot(slot, req)
+                except FaultError as e:
+                    if self.retry is None:
+                        raise
+                    # the prefill launch faulted before any engine state was
+                    # touched: the request simply goes back to the queue head
+                    # (FIFO preserved) for the next step, or fails on budget
+                    req.fault_recoveries += 1
+                    if req.fault_recoveries > self.retry.max_request_recoveries:
+                        self._fail_request(req, e)
+                    else:
+                        self._queue.insert(0, req)
+                    continue
                 prefill_tokens += (self._bucket_len(len(req.prompt))
                                    if self.bucket_prompts else len(req.prompt))
                 self._active[slot] = req
@@ -1261,7 +1404,14 @@ class ServeEngine:
                 key=lambda s: self._prefilling[s].req.uid,
             )
             for slot in order:
-                prefill_tokens += self._chunk_step(slot, self._prefilling[slot])
+                try:
+                    prefill_tokens += self._chunk_step(
+                        slot, self._prefilling[slot]
+                    )
+                except FaultError as e:
+                    if self.retry is None:
+                        raise
+                    self._abort_prefill_to_queue(slot, e)
             if (self.paged and self._prefilling and prefill_tokens == 0
                     and not self._active):
                 # every prefill stalled and nothing is decoding: no pages
@@ -1365,13 +1515,17 @@ class ServeEngine:
         table = jnp.asarray(tbl) if self.paged else None
         # per-slot positions: continuous batching — slots joined at different
         # times decode against their own sequence positions
-        segments, pos, tok, toks, valid = self._launch(
-            self._fused_decode_fn(k), self.params, self._cache["segments"],
-            table, jnp.asarray(self._pos, jnp.int32),
-            jnp.asarray(self._slot_tok),
-            jnp.asarray(self._slot_key), jnp.asarray(counts),
-            jnp.asarray(active), jnp.asarray(remaining),
-        )
+        try:
+            segments, pos, tok, toks, valid = self._launch(
+                self._fused_decode_fn(k), self.params, self._cache["segments"],
+                table, jnp.asarray(self._pos, jnp.int32),
+                jnp.asarray(self._slot_tok),
+                jnp.asarray(self._slot_key), jnp.asarray(counts),
+                jnp.asarray(active), jnp.asarray(remaining),
+            )
+        except FaultError as e:
+            self._recover_decode_fault(e)
+            return []
         self._cache = {"segments": segments}
         self._pos = np.asarray(pos, np.int64)
         self._slot_tok = np.asarray(tok, np.int32).copy()
@@ -1412,8 +1566,12 @@ class ServeEngine:
         transient), ``rejected`` (worst case can never fit the pool under
         the *current* admission policy — permanent; ``submit`` refuses these
         up front, so they only appear when the policy was tightened after
-        submission).  Transient pool exhaustion itself never raises: the
-        engine preempts and resumes through it.
+        submission), ``failed`` (killed by a hardware fault after the
+        recovery budget was spent — permanent, raised as soon as the live
+        work drains instead of spinning out ``max_steps``).  Transient pool
+        exhaustion itself never raises: the engine preempts and resumes
+        through it — and with an engine :class:`RetryPolicy`, transient
+        hardware faults likewise never raise.
         """
         done: list[Request] = []
         for _ in range(max_steps):
@@ -1425,6 +1583,11 @@ class ServeEngine:
             with self._lock:
                 if (not self._active and not self._prefilling
                         and not self._queue and not self._parked):
+                    if self._failed:
+                        # fault-killed requests are permanent: raise the
+                        # classification as soon as the live work drains
+                        # instead of burning the remaining steps on no-ops
+                        break
                     return done
                 if not self._active and not self._prefilling and self.paged:
                     # nothing is running, so nothing will ever free pages: if
@@ -1437,7 +1600,7 @@ class ServeEngine:
                         break
         with self._lock:
             if (self._active or self._prefilling or self._queue
-                    or self._parked):
+                    or self._parked or self._failed):
                 pending = list(self._active.values()) + [
                     e.req for e in self._prefilling.values()
                 ]
@@ -1457,5 +1620,6 @@ class ServeEngine:
                     else:
                         parked.append(entry.req)
                 raise ServeTruncated(done, pending, parked=parked,
-                                     rejected=rejected)
+                                     rejected=rejected,
+                                     failed=list(self._failed))
         return done
