@@ -77,6 +77,7 @@ def main(argv: list[str] | None = None) -> None:
         table8_overcommit,
         table9_traffic,
         table10_faults,
+        table11_spill,
     )
 
     suites = (
@@ -90,6 +91,7 @@ def main(argv: list[str] | None = None) -> None:
         (table8_overcommit.run, {"n": min(n, 64)}),
         (table9_traffic.run, {"n": min(n, 64)}),
         (table10_faults.run, {"n": min(n, 48)}),
+        (table11_spill.run, {"n": min(n, 64)}),
     )
     print("name,us_per_call,derived", flush=True)
     rows: list[str] = []

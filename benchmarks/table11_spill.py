@@ -1,0 +1,392 @@
+"""Table XI (extension): tiered KV page pool under host-memory oversubscription.
+
+Table VIII bought concurrency with overcommit and paid for it by parking
+snapshots on the host — but an *unbounded* host stash is just the stranded
+memory problem moved one tier down.  PR 8 bounds it: parked snapshots spill
+D2H into a budgeted :class:`HostArena`, refills stream back H2D *ahead of
+need* (the PR 2 prefetch idea: a parked request scheduled for resume is a
+role named in a lookahead window, one tier lower), and when the budget is
+oversubscribed a :class:`SpillPolicy` demotes victims from snapshot-resume
+to re-prefill replay — degrading resume *cost*, never correctness.
+
+Two measurements:
+
+  1. **Calibrated trace** — the real ``PageAllocator`` + ``HostArena`` +
+     ``SpillPolicy`` + ``TransferEngine`` on a virtual clock, driven by the
+     table7 long-tail mix, swept over ``growth_reserve`` x host budget
+     (unbounded, then 1/2 and 1/4 of the unbounded run's measured peak).
+     The budget is asserted *every step*; every submission must complete.
+     A lookahead-0 arm shows demand refills fully exposed; lookahead-4
+     must hide the majority of refill time behind decode steps.
+  2. **Real-jax serving path** — ``ServeEngine(paged=True)`` with
+     ``host_budget_bytes`` set to half the unbounded run's peak, stepped
+     manually so the budget and arena free-list invariants are asserted
+     every step.  Streams must be bitwise-identical to an unconstrained
+     dense run — including an arm with 5% injected D2H/H2D transfer
+     faults on top of the budget squeeze.
+
+Acceptance (CI-asserted): half-peak budget completes every request with
+zero drops and zero pool escapes, never exceeds the budget, hides the
+majority of refill time at lookahead >= 4, and keeps real-path streams
+bitwise-identical to dense — faults included.
+"""
+
+from __future__ import annotations
+
+from repro.core.hsa.clock import VirtualClock
+from repro.core.ledger import OverheadLedger
+from repro.core.policy import (
+    RESUME_SNAPSHOT,
+    AdmissionPolicy,
+    PreemptionCandidate,
+    PreemptionPolicy,
+    SpillCandidate,
+    SpillPolicy,
+)
+from repro.core.reconfig import TransferEngine
+from repro.serve.paged import HostArena, PageAllocator, PagePoolExhausted, pages_for
+
+from benchmarks.table7_paged import request_mix
+
+RESERVE_SWEEP = (1.0, 0.5)
+PAGE_SIZE = 16
+POOL_TOKENS = 512
+TOKEN_BYTES = 1024                     # nominal KV bytes/token for the trace
+PAGE_BYTES = PAGE_SIZE * TOKEN_BYTES
+STEP_S = 1e-3                          # one decode step of model time
+TRACE_BW = 48e6                        # B/s: ~0.7 ms per 2-page snapshot
+
+
+def simulate_tiered(reqs, pool_tokens, page_size, admission, preemption,
+                    spill, *, budget_bytes=None):
+    """Table8's overcommit trace with the host tier made explicit: parked
+    snapshots spill into a budgeted ``HostArena`` over a shared DMA
+    timeline, refills are pumped for the first ``spill.refill_lookahead``
+    parked requests each step, and budget overflow demotes policy-chosen
+    victims to re-prefill replay.  The budget is asserted every step."""
+    alloc = PageAllocator(pool_tokens // page_size + 1)
+    arena = HostArena(budget_bytes)
+    arena.configure(PAGE_BYTES)
+    clock = VirtualClock()
+    ledger = OverheadLedger()
+    xfer = TransferEngine(bandwidth_bytes_s=TRACE_BW, clock=clock,
+                          ledger=ledger)
+    queue = list(reqs)
+    live: dict[int, list[int]] = {}    # uid -> [pos, end, mapped, projected]
+    # uid -> [pos, end, projected, snapshot?, refill Transfer|None]
+    parked: dict[int, list] = {}
+    uid = 0
+    conc_sum = conc_n = 0
+    steps = completed = 0
+    preemptions = resumes = recompute = escapes = 0
+    spills = refills = demotions = 0
+
+    def growth() -> int:
+        return sum(max(0, r[3] - r[2]) for r in live.values())
+
+    def demote(u: int) -> None:
+        nonlocal demotions
+        entry = parked[u]
+        if arena.holds(u):
+            arena.discard(u)
+        if entry[4] is not None:
+            xfer.cancel(entry[4])
+            entry[4] = None
+        entry[3] = False
+        demotions += 1
+
+    def spill_snapshot(u: int, nbytes: int) -> bool:
+        """Mirror of the engine's spill path: D2H over the shared timeline,
+        demoting SpillPolicy victims when the budget falls short."""
+        nonlocal spills
+        if not arena.can_ever_fit(nbytes):
+            return False
+        t = xfer.issue("d2h", f"kv[uid={u}]", nbytes)
+        if t.error is not None:
+            return False
+        while not arena.fits(nbytes):
+            cands = [SpillCandidate(uid=v, arena_bytes=arena.bytes_of(v),
+                                    tokens_done=parked[v][0])
+                     for v in parked if parked[v][3] and arena.holds(v)]
+            if not cands:
+                return False
+            short = arena.blocks_for(nbytes) - arena.free_blocks
+            for v in spill.victims(cands, short * arena.block_bytes):
+                demote(v)
+        arena.store(u, None, nbytes)
+        spills += 1
+        return True
+
+    while queue or live or parked:
+        # resume parked, oldest first; an unfundable head blocks the rest
+        for u in sorted(parked):
+            pos, end, projected, snap, refill = parked[u]
+            need_now = max(pages_for(pos, page_size), projected)
+            if not admission.admit(free_pages=alloc.free_pages,
+                                   projected_growth_pages=growth(),
+                                   request_pages=need_now):
+                break
+            if snap:
+                if refill is None:       # demand refill: fully exposed
+                    refill = xfer.issue("h2d", f"kv[uid={u}]",
+                                        arena.bytes_of(u))
+                if refill.error is not None:
+                    demote(u)
+                    recompute += pos
+                else:
+                    xfer.wait(refill)
+                    arena.take(u)
+                    refills += 1
+            else:
+                recompute += pos         # prompt recompute + token replay
+            del parked[u]
+            mapped = pages_for(pos, page_size)
+            alloc.allocate(u, mapped)
+            live[u] = [pos, end, mapped, projected]
+            resumes += 1
+        # FIFO admissions, blocked while a parked request waits its turn
+        while queue and not parked:
+            p, t = queue[0]
+            projected = admission.projected_pages(p, t, page_size)
+            if not admission.admit(free_pages=alloc.free_pages,
+                                   projected_growth_pages=growth(),
+                                   request_pages=projected):
+                break
+            queue.pop(0)
+            uid += 1
+            mapped = pages_for(p, page_size)
+            alloc.allocate(uid, mapped)
+            live[uid] = [p, p + t, mapped, projected]
+        if queue or parked:              # saturated: admission-limited phase
+            conc_sum += len(live)
+            conc_n += 1
+        steps += 1
+        # fund this step's growth, parking victims while the pool falls short
+        while True:
+            needed = sum(
+                max(0, pages_for(r[0] + 1, page_size) - r[2])
+                for r in live.values()
+            )
+            shortfall = needed - alloc.free_pages
+            if shortfall <= 0:
+                break
+            cands = [
+                PreemptionCandidate(uid=u, mapped_pages=r[2], tokens_done=r[0])
+                for u, r in live.items()
+            ]
+            victims = preemption.victims(cands, shortfall)
+            if not victims:
+                break
+            v = victims[0]
+            pos, end, mapped, projected = live.pop(v)
+            alloc.free(v, alloc.pages_of(v))
+            snap = preemption.resume_mode(tokens_done=pos) == RESUME_SNAPSHOT
+            if snap:
+                snap = spill_snapshot(v, pages_for(pos, page_size) * PAGE_BYTES)
+            parked[v] = [pos, end, projected, snap, None]
+            preemptions += 1
+        # decode one token per live request
+        for u, r in list(live.items()):
+            need = pages_for(r[0] + 1, page_size)
+            if need > r[2]:
+                try:
+                    alloc.allocate(u, need - r[2])
+                except PagePoolExhausted:
+                    escapes += 1           # must never happen
+                    continue
+                r[2] = need
+            r[0] += 1
+            if r[0] >= r[1]:
+                alloc.free(u, alloc.pages_of(u))
+                del live[u]
+                completed += 1
+        # ahead-of-need refill: the first `lookahead` parked requests are
+        # the resume window — stream their snapshots back behind this step
+        for u in sorted(parked)[: spill.refill_lookahead]:
+            entry = parked[u]
+            if entry[3] and entry[4] is None and arena.holds(u):
+                entry[4] = xfer.issue("h2d", f"kv[uid={u}]", arena.bytes_of(u))
+                if entry[4].error is not None:
+                    demote(u)
+        clock.advance(STEP_S)            # this step's model time hides DMAs
+        arena.check_invariants()
+        if budget_bytes is not None:
+            assert arena.used_bytes <= budget_bytes, "host budget exceeded"
+    alloc.check_invariants()
+    assert alloc.free_pages == alloc.total_pages, "trace leaked pages"
+    assert not arena.entries(), "trace leaked arena snapshots"
+    split = ledger.spill_split()
+    return {
+        "sustained": conc_sum / max(1, conc_n),
+        "steps": steps,
+        "completed": completed,
+        "preemptions": preemptions,
+        "resumes": resumes,
+        "recompute_tokens": recompute,
+        "exhaustion_escapes": escapes,
+        "spills": spills,
+        "refills": refills,
+        "demotions": demotions,
+        "host_peak_bytes": arena.peak_bytes,
+        "refill_hidden_frac": split["refill_hidden_frac"],
+    }
+
+
+def _run_serving(requests, *, dense=False, budget=None, lookahead=4,
+                 faults=None):
+    """Real-jax path: tiny LM, 8-slot paged engine on an 11-page pool with
+    the host tier budgeted.  Stepped manually so the host budget and arena
+    free-list invariants are asserted *every* step, not just at the end."""
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import build_model
+    from repro.models.params import init_params
+    from repro.serve.engine import ServeEngine
+
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(0))
+    if dense:
+        eng = ServeEngine(model, params, batch_slots=len(requests),
+                          max_len=64, decode_fusion=2)
+        for prompt, max_new in requests:
+            eng.submit(prompt, max_new_tokens=max_new)
+        done = sorted(eng.run_to_completion(max_steps=100_000),
+                      key=lambda r: r.uid)
+        return eng, [r.generated for r in done]
+    ledger = OverheadLedger()
+    eng = ServeEngine(
+        model, params, batch_slots=8, max_len=64, decode_fusion=2,
+        paged=True, page_size=16, pool_pages=11,
+        admission=AdmissionPolicy(growth_reserve=0.5),
+        preemption=PreemptionPolicy(snapshot_threshold_tokens=16),
+        ledger=ledger, clock=VirtualClock(),
+        step_time_model=lambda prefill, decode: STEP_S,
+        host_budget_bytes=budget,
+        spill=SpillPolicy(refill_lookahead=lookahead),
+        faults=faults,
+        transfer_bandwidth_bytes_s=64e6,   # ~0.5-1 ms per snapshot: one
+        #                                    step of lookahead fully hides it
+    )
+    for prompt, max_new in requests:
+        eng.submit(prompt, max_new_tokens=max_new)
+    done, steps = [], 0
+    while len(done) < len(requests):
+        steps += 1
+        assert steps <= 100_000, "serving arm failed to converge"
+        done.extend(eng.step())
+        eng.arena.check_invariants()
+        if budget is not None:
+            assert eng.arena.used_bytes <= budget, "host budget exceeded"
+    done = sorted(done, key=lambda r: r.uid)
+    eng.allocator.check_invariants()
+    assert eng.allocator.free_pages == eng.allocator.total_pages
+    assert not eng.arena.entries(), "arena leaked snapshots"
+    return eng, [r.generated for r in done]
+
+
+def run(n: int = 64) -> list[str]:
+    rows = []
+    reqs = request_mix(max(32, n))
+    preemption = PreemptionPolicy()
+    spill = SpillPolicy()
+
+    # -- calibrated trace: reserve x host budget sweep ----------------------
+    trace_clean = True
+    trace_wins = True
+    hidden_la4 = hidden_la0 = 0.0
+    for reserve in RESERVE_SWEEP:
+        admission = AdmissionPolicy(growth_reserve=reserve)
+        base = simulate_tiered(reqs, POOL_TOKENS, PAGE_SIZE, admission,
+                               preemption, spill, budget_bytes=None)
+        peak = base["host_peak_bytes"]
+        cells = {"unbounded": base}
+        for frac, tag in ((2, "half"), (4, "quarter")):
+            if peak == 0:                # reserve=1.0 never parks
+                continue
+            cells[tag] = simulate_tiered(
+                reqs, POOL_TOKENS, PAGE_SIZE, admission, preemption, spill,
+                budget_bytes=max(PAGE_BYTES, peak // frac))
+        for tag, out in cells.items():
+            trace_clean &= (out["completed"] == len(reqs)
+                            and out["exhaustion_escapes"] == 0)
+            rows.append(
+                f"table11,spill_trace_r{int(reserve * 100)}_{tag},"
+                f"{out['sustained']:.2f},"
+                f"completed={out['completed']};spills={out['spills']};"
+                f"refills={out['refills']};demotions={out['demotions']};"
+                f"recompute_tokens={out['recompute_tokens']};"
+                f"host_peak_bytes={out['host_peak_bytes']};"
+                f"hidden_frac={out['refill_hidden_frac']:.2f}"
+            )
+        if reserve < 1.0 and peak > 0:
+            # the budgeted pool must not give back what overcommit bought
+            trace_wins &= (cells["half"]["sustained"]
+                           >= 0.98 * base["sustained"])
+            hidden_la4 = cells["half"]["refill_hidden_frac"]
+            la0 = simulate_tiered(
+                reqs, POOL_TOKENS, PAGE_SIZE, admission, preemption,
+                SpillPolicy(refill_lookahead=0),
+                budget_bytes=max(PAGE_BYTES, peak // 2))
+            hidden_la0 = la0["refill_hidden_frac"]
+            trace_wins &= hidden_la4 > 0.5 and hidden_la4 > hidden_la0
+    rows.append(
+        f"table11,spill_refill_hidden_frac,{hidden_la4:.2f},"
+        f"lookahead4={hidden_la4:.2f};lookahead0={hidden_la0:.2f}"
+    )
+
+    # -- real-jax serving path ---------------------------------------------
+    serving_reqs = [([3 + i, 14, 15], 40 if i % 4 == 0 else 24)
+                    for i in range(8)]
+    _, dense_streams = _run_serving(serving_reqs, dense=True)
+    unbounded, unb_streams = _run_serving(serving_reqs, budget=None)
+    peak = unbounded.arena.peak_bytes
+    budget = max(unbounded.arena.block_bytes or 1, peak // 2)
+    capped, cap_streams = _run_serving(serving_reqs, budget=budget)
+    from repro.core.hsa.faults import FaultPlan
+    plan = FaultPlan(seed=3, transfer_rate=0.05)
+    plan.force("d2h")                    # guarantee both directions fault
+    plan.force("h2d")
+    faulted, fault_streams = _run_serving(serving_reqs, budget=budget,
+                                          faults=plan)
+    identical = int(unb_streams == dense_streams
+                    and cap_streams == dense_streams
+                    and fault_streams == dense_streams)
+    cap_split = capped.ledger.spill_split()
+    serve_hidden = cap_split["refill_hidden_frac"]
+    rows.append(
+        f"table11,serve_spill_identical,{identical},"
+        f"unbounded_peak_bytes={peak};budget_bytes={budget};"
+        f"capped_host_peak={capped.arena.peak_bytes};"
+        f"spills={capped.spills};refills={capped.refills};"
+        f"demotions={capped.demotions};"
+        f"replay_fallback_tokens={capped.replay_fallback_tokens};"
+        f"hidden_frac={serve_hidden:.2f}"
+    )
+    rows.append(
+        f"table11,serve_spill_faulted,"
+        f"{int(fault_streams == dense_streams)},"
+        f"transfer_faults={faulted.transfer_faults};"
+        f"injected={len(plan.trace)};demotions={faulted.demotions};"
+        f"spills={faulted.spills};refills={faulted.refills}"
+    )
+    wins = int(
+        trace_clean and trace_wins and identical == 1
+        and capped.arena.peak_bytes <= budget
+        and capped.spills > 0 and capped.refills > 0
+        and serve_hidden > 0.5
+        and faulted.transfer_faults > 0
+    )
+    rows.append(
+        f"table11,spill_wins,{wins},"
+        f"trace_clean={int(trace_clean)};trace_wins={int(trace_wins)};"
+        f"identical={identical};serve_hidden_frac={serve_hidden:.2f};"
+        f"faults_absorbed={faulted.transfer_faults}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

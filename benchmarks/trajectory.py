@@ -42,6 +42,9 @@ ASSERTED = (
     ("table8", "serve_overcommit_wins"),
     ("table9", "chunked_wins"),
     ("table10", "fault_recovery_wins"),
+    ("table11", "spill_wins"),
+    ("table11", "serve_spill_identical"),
+    ("table11", "serve_spill_faulted"),
 )
 
 #: deterministic metrics: current >= baseline * (1 - TOLERANCE)
@@ -53,6 +56,7 @@ TRACKED = (
     ("table8", "overcommit_trace_r50"),          # overcommit sustained conc.
     ("table8", "serve_overcommit_concurrency"),  # real-jax overcommit ratio
     ("table9", "ttft_p99_us_bursty_chunked"),    # virtual-clock p99 TTFT
+    ("table11", "spill_refill_hidden_frac"),     # refill overlap with decode
 )
 
 #: tracked metrics where *lower* is better (regression = grew > tolerance)

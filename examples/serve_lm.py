@@ -171,6 +171,38 @@ def main():
           f"{oc['pages_reclaimed']:.0f}, recompute tokens "
           f"{oc['recompute_tokens']:.0f}")
 
+    # --- tiered KV pool: budgeted host arena --------------------------------
+    # The overcommitted engine above parks snapshots on the host without
+    # limit.  host_budget_bytes bounds that tier: parked KV spills D2H into
+    # a fixed arena, streams back H2D ahead of resume, and when the budget
+    # is oversubscribed the SpillPolicy demotes victims to re-prefill
+    # replay — output never changes, only the cost of coming back does.
+    from repro.core.policy import SpillPolicy
+
+    tled = _Ledger()
+    tiered_eng = ServeEngine(
+        model, params, batch_slots=8, max_len=96, temperature=0.0,
+        decode_fusion=4, paged=True, page_size=8, pool_pages=6,
+        admission=AdmissionPolicy(growth_reserve=0.5),
+        preemption=PreemptionPolicy(snapshot_threshold_tokens=4),
+        ledger=tled, host_budget_bytes=4096,
+        spill=SpillPolicy(refill_lookahead=4),
+    )
+    for p in prompts:
+        tiered_eng.submit(p, max_new_tokens=12)
+    tiered_done = tiered_eng.run_to_completion()
+    tiered_same = {r.uid: r.generated for r in tiered_done} == {
+        r.uid: r.generated for r in done
+    }
+    sp = tled.spill_split()
+    print(f"\ntiered engine (host_budget_bytes=4096): "
+          f"bitwise-identical through spill/refill/demotion: {tiered_same}")
+    print(f"  spills={sp['spills']:.0f} ({sp['spill_bytes']:.0f} B), "
+          f"refills={sp['refills']:.0f}, demotions={sp['demotions']:.0f} "
+          f"(replay fallback {sp['replay_fallback_tokens']:.0f} tokens), "
+          f"host peak {sp['host_peak_bytes']:.0f} B of "
+          f"{sp['host_budget_bytes']:.0f} B budget")
+
     print("\nshared-agent ledger:")
     for line in ledger.table().splitlines():
         print(" ", line)

@@ -9,9 +9,11 @@ runtime absorbs all three without user-visible effect:
   - **load faults** — a partial-bitstream / region load aborts mid-flight
     (the FPGA story's reconfiguration failure);
   - **wedged launches** — the launch neither completes nor errors: its
-    completion signal never fires, and only a watchdog deadline kills it.
+    completion signal never fires, and only a watchdog deadline kills it;
+  - **transfer faults** — a D2H/H2D DMA between the page-pool tiers aborts
+    (the spill/refill analogue of a load fault).
 
-A :class:`FaultPlan` injects all three *deterministically*: one seeded RNG,
+A :class:`FaultPlan` injects all of them *deterministically*: one seeded RNG,
 one draw per attempt, scheduled on the injectable clock — so every fault
 trace is a reproducible virtual-clock event log and a recovery bug replays
 exactly.  Tests wanting surgical faults script them with :meth:`force`
@@ -49,6 +51,15 @@ class InjectedLoadFault(FaultError):
     """Region (partial-bitstream) load aborted mid-flight."""
 
 
+class InjectedTransferFault(FaultError):
+    """D2H spill or H2D refill DMA aborted mid-flight.
+
+    The tiered KV pool's failure mode: a faulted spill parks its victim by
+    re-prefill replay instead of snapshot; a faulted refill demotes the
+    parked snapshot to replay — either way the committed token prefix is
+    regenerated bitwise-identically, so the fault never reaches the user."""
+
+
 class WedgedLaunch(FaultError):
     """Launch that never completes: no error, no completion signal.
 
@@ -62,8 +73,8 @@ class FaultEvent:
     """One injected fault, stamped on the plan's clock."""
 
     t: float
-    kind: str                  # "exec" | "load" | "wedge"
-    what: str                  # packet .what / role name
+    kind: str                  # "exec" | "load" | "wedge" | "d2h" | "h2d"
+    what: str                  # packet .what / role name / transfer tag
     queue: str | None = None
     permanent: bool = False
     forced: bool = False
@@ -87,10 +98,12 @@ class FaultPlan:
     load_rate: float = 0.0        # region load abort
     wedge_rate: float = 0.0       # completion never fires
     permanent_rate: float = 0.0   # unretryable exec failure
+    transfer_rate: float = 0.0    # D2H/H2D DMA abort (spill/refill tier)
     clock: Any = None             # bound by the scheduler (bind_clock)
 
     def __post_init__(self) -> None:
-        for name in ("exec_rate", "load_rate", "wedge_rate", "permanent_rate"):
+        for name in ("exec_rate", "load_rate", "wedge_rate", "permanent_rate",
+                     "transfer_rate"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {v}")
@@ -116,12 +129,13 @@ class FaultPlan:
 
     def force(self, kind: str, what: str | None = None, *,
               permanent: bool = False, count: int = 1) -> None:
-        """Script ``count`` faults of ``kind`` ("exec" | "load" | "wedge")
-        against the next matching attempts (``what`` is a substring match on
-        the packet's ``.what`` / role name; None matches any).  Forced
-        faults are consumed before any random draw, so a test can hit one
-        specific launch without touching the seeded schedule."""
-        if kind not in ("exec", "load", "wedge"):
+        """Script ``count`` faults of ``kind`` ("exec" | "load" | "wedge" |
+        "d2h" | "h2d") against the next matching attempts (``what`` is a
+        substring match on the packet's ``.what`` / role name / transfer
+        tag; None matches any).  Forced faults are consumed before any
+        random draw, so a test can hit one specific launch without touching
+        the seeded schedule."""
+        if kind not in ("exec", "load", "wedge", "d2h", "h2d"):
             raise ValueError(f"unknown fault kind {kind!r}")
         if count < 1:
             raise ValueError(f"count must be >= 1, got {count}")
@@ -190,6 +204,23 @@ class FaultPlan:
             return InjectedLoadFault(f"load fault: {role}")
         return None
 
+    def draw_transfer(self, kind: str, what: str, *,
+                      queue: str | None = None) -> FaultError | None:
+        """Fault (or None) for one DMA attempt of ``kind`` ("d2h" | "h2d")
+        moving ``what`` between the pool tiers."""
+        if kind not in ("d2h", "h2d"):
+            raise ValueError(f"transfer kind must be d2h|h2d, got {kind!r}")
+        forced = self._take_forced((kind,), what)
+        if forced is not None:
+            self._log(kind, what, queue, False, forced=True)
+            return InjectedTransferFault(
+                f"{kind} transfer fault (forced): {what}"
+            )
+        if self._rng.random() < self.transfer_rate:
+            self._log(kind, what, queue, False, forced=False)
+            return InjectedTransferFault(f"{kind} transfer fault: {what}")
+        return None
+
     def load_hook(self, role: str) -> None:
         """RegionManager ``fault_hook`` adapter: raise instead of return,
         matching the real failure mode (``role.load()`` raising)."""
@@ -201,5 +232,6 @@ class FaultPlan:
         return (
             f"FaultPlan(seed={self.seed}, exec={self.exec_rate}, "
             f"load={self.load_rate}, wedge={self.wedge_rate}, "
-            f"permanent={self.permanent_rate}, injected={len(self.trace)})"
+            f"permanent={self.permanent_rate}, "
+            f"transfer={self.transfer_rate}, injected={len(self.trace)})"
         )

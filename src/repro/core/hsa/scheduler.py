@@ -208,6 +208,8 @@ class Scheduler:
         self._busy_s = 0.0
         self._completed = 0
 
+        self._refill_sources: list[Callable[[], Any]] = []
+
         self._doorbell_counter = 0
         self._work = threading.Condition()
         # serializes consumers: the worker thread and a legacy synchronous
@@ -216,6 +218,20 @@ class Scheduler:
         self._worker: threading.Thread | None = None
         self._stop = threading.Event()
         self._reconfig_pool: ThreadPoolExecutor | None = None
+
+    # -- refill sources (tiered-pool ahead-of-need pump) -----------------------
+
+    def register_refill_source(self, pump: Callable[[], Any]) -> None:
+        """Register a tiered-pool refill pump, called once per scheduling
+        step right after speculative region prefetches are issued.
+
+        The pump (e.g. ``ServeEngine._pump_refills_external``) issues H2D
+        arena refills for parked requests nearing resume — the memory-tier
+        twin of ``_issue_prefetches``.  Pumps must never block on the
+        caller: a pump that cannot take its own lock should return and try
+        again next step.
+        """
+        self._refill_sources.append(pump)
 
     # -- queue management -----------------------------------------------------
 
@@ -387,6 +403,13 @@ class Scheduler:
         ev = self._issue_prefetches(now)
         if ev is not None:
             return ev
+
+        # pump registered refill sources at the same point in the step: a
+        # parked request scheduled for resume is a "role named in a
+        # lookahead window" one tier down, and its H2D refill is issued on
+        # the transfer engine ahead of the resume that would stall on it
+        for pump in self._refill_sources:
+            pump()
 
         order = self._grant_order
         width = len(order)

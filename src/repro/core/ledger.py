@@ -90,10 +90,24 @@ FAULT = "fault"
 RETRY = "retry"
 RECOVER = "recover"
 
+# Tiered KV page pool (the host-arena second tier).  SPILL is the D2H DMA
+# time parking a snapshot into the arena (engine-timeline: it never stalls
+# compute — the gather already happened, only later refills queue behind
+# it).  REFILL is the H2D DMA duration bringing a snapshot back; like
+# reconfiguration it splits into *exposed* (the resume step sat stalled on
+# the transfer) vs *hidden* (the ahead-of-need pump issued it early enough
+# to overlap decode) — driving exposed toward zero is what the refill
+# lookahead exists for.
+SPILL = "spill"
+REFILL = "refill"
+REFILL_EXPOSED = "refill_exposed"
+REFILL_HIDDEN = "refill_hidden"
+
 CATEGORIES = (SETUP, RECONFIG, RECONFIG_EXPOSED, RECONFIG_HIDDEN, DISPATCH,
               DISPATCH_SUBMIT, DISPATCH_GRANT, DISPATCH_WAIT, EXEC, WAIT,
               PREEMPT_PARK, PREEMPT_RESUME, TTFT, TPOT,
-              FAULT, RETRY, RECOVER)
+              FAULT, RETRY, RECOVER,
+              SPILL, REFILL, REFILL_EXPOSED, REFILL_HIDDEN)
 
 OCCURRENCE = {
     SETUP: "once",
@@ -113,6 +127,10 @@ OCCURRENCE = {
     FAULT: "on fault",
     RETRY: "per retry",
     RECOVER: "per recovery",
+    SPILL: "on spill",
+    REFILL: "per refill",
+    REFILL_EXPOSED: "per refill",
+    REFILL_HIDDEN: "per refill",
 }
 
 
@@ -158,10 +176,19 @@ class OverheadLedger:
 
     _FAULT_ZERO = {
         "faults": 0.0, "exec_faults": 0.0, "load_faults": 0.0,
-        "wedges": 0.0, "permanent_faults": 0.0, "retries": 0.0,
+        "wedges": 0.0, "permanent_faults": 0.0, "transfer_faults": 0.0,
+        "retries": 0.0,
         "quarantines": 0.0, "migrated_packets": 0.0,
         "recoveries": 0.0, "failed_requests": 0.0,
         "recovery_recompute_tokens": 0.0, "mttr_total_s": 0.0,
+    }
+
+    _SPILL_ZERO = {
+        "spills": 0.0, "refills": 0.0, "spill_bytes": 0.0,
+        "refill_bytes": 0.0, "demotions": 0.0, "demoted_bytes": 0.0,
+        "replay_fallback_tokens": 0.0,
+        "host_used_bytes": 0.0, "host_peak_bytes": 0.0,
+        "host_budget_bytes": math.inf,   # inf = unbounded / no budget set
     }
 
     def __init__(self, keep_entries: bool = False) -> None:
@@ -175,6 +202,7 @@ class OverheadLedger:
         self._memory: dict[str, dict[str, float]] = {}
         self._preempt: dict[str, float] = dict(self._PREEMPT_ZERO)
         self._fault: dict[str, float] = dict(self._FAULT_ZERO)
+        self._spill: dict[str, float] = dict(self._SPILL_ZERO)
 
     def record(self, category: str, seconds: float, **meta: Any) -> None:
         if category not in self._stats:
@@ -265,6 +293,7 @@ class OverheadLedger:
             self._memory = {}
             self._preempt = dict(self._PREEMPT_ZERO)
             self._fault = dict(self._FAULT_ZERO)
+            self._spill = dict(self._SPILL_ZERO)
             if self._entries is not None:
                 self._entries = []
 
@@ -301,14 +330,39 @@ class OverheadLedger:
                                            float(reserved_bytes - used_bytes))
             m["samples"] += 1.0
 
+    def record_host_memory(self, *, used_bytes: float,
+                           budget_bytes: float | None = None) -> None:
+        """Record a point-in-time host-arena occupancy sample (the page
+        pool's second tier).  ``budget_bytes=None`` means unbounded and is
+        reported as ``inf`` — distinguishable from a genuine zero budget
+        (a valid configuration: every park demotes to replay)."""
+        budget = math.inf if budget_bytes is None else float(budget_bytes)
+        if used_bytes > budget + 1e-9:
+            raise ValueError(
+                f"host used {used_bytes} > budget {budget} — the arena "
+                "crossed its hard ceiling"
+            )
+        with self._lock:
+            self._spill["host_used_bytes"] = float(used_bytes)
+            self._spill["host_peak_bytes"] = max(
+                self._spill["host_peak_bytes"], float(used_bytes)
+            )
+            self._spill["host_budget_bytes"] = budget
+
     def memory_split(self, label: str = "kv_cache") -> dict[str, float]:
         """Reserved vs used vs stranded bytes for ``label`` (Table I row).
 
         ``utilization`` = used / reserved of the latest sample (1.0 when
-        nothing is reserved: an empty pool strands nothing).
+        nothing is reserved: an empty pool strands nothing).  The host-tier
+        rows (``host_used_bytes`` / ``host_peak_bytes`` /
+        ``host_budget_bytes``) ride along so one call prices both tiers of
+        the page pool.
         """
         with self._lock:
             m = dict(self._memory.get(label, {}))
+            host = {k: self._spill[k] for k in
+                    ("host_used_bytes", "host_peak_bytes",
+                     "host_budget_bytes")}
         if not m:
             m = {"reserved_bytes": 0.0, "used_bytes": 0.0,
                  "stranded_bytes": 0.0, "peak_reserved_bytes": 0.0,
@@ -316,6 +370,7 @@ class OverheadLedger:
         m["utilization"] = (
             m["used_bytes"] / m["reserved_bytes"] if m["reserved_bytes"] else 1.0
         )
+        m.update(host)
         return m
 
     # -- overcommit accounting (Table I "overcommit" row) --------------------
@@ -348,7 +403,10 @@ class OverheadLedger:
         through an HSA queue).  ``launches`` is exposed alongside so a rate
         of 0.0 from an unwired ledger is distinguishable from a genuinely
         preemption-free run; consumers wanting the raw count read
-        ``preemptions``."""
+        ``preemptions``.  ``snapshot_bytes`` is *net* of demotions: a
+        snapshot demoted to replay gives its bytes back (see
+        :meth:`record_demotion`), so a demote-then-re-park cycle does not
+        double-count."""
         with self._lock:
             out = dict(self._preempt)
             out["park_s"] = self._stats[PREEMPT_PARK].total_s
@@ -360,19 +418,75 @@ class OverheadLedger:
         )
         return out
 
+    # -- tiered-pool accounting (host arena spill/refill) --------------------
+
+    def record_spill(self, *, nbytes: int) -> None:
+        """One snapshot spilled D2H into the host arena (DMA seconds ride
+        the SPILL category via ``record``)."""
+        with self._lock:
+            self._spill["spills"] += 1.0
+            self._spill["spill_bytes"] += float(nbytes)
+
+    def record_refill(self, *, nbytes: int) -> None:
+        """One snapshot refilled H2D out of the arena (duration and its
+        exposed/hidden split ride REFILL / REFILL_EXPOSED / REFILL_HIDDEN)."""
+        with self._lock:
+            self._spill["refills"] += 1.0
+            self._spill["refill_bytes"] += float(nbytes)
+
+    def record_demotion(self, *, bytes_freed: int,
+                        replay_tokens: int) -> None:
+        """One parked snapshot demoted to re-prefill replay: its arena bytes
+        went back to the budget and ``replay_tokens`` of recompute were
+        accepted in exchange.  The freed bytes also come *off* the
+        overcommit ``snapshot_bytes`` counter — a demoted snapshot no longer
+        holds host memory, and a later re-park of the same request must not
+        count its bytes twice."""
+        with self._lock:
+            self._spill["demotions"] += 1.0
+            self._spill["demoted_bytes"] += float(bytes_freed)
+            self._spill["replay_fallback_tokens"] += float(replay_tokens)
+            self._preempt["snapshot_bytes"] = max(
+                0.0, self._preempt["snapshot_bytes"] - float(bytes_freed)
+            )
+
+    def spill_split(self) -> dict[str, float]:
+        """Tiered-pool counters + timings (the table11 view).
+
+        Byte flows (spill/refill/demoted), host occupancy vs budget, the
+        replay tokens demotions cost, and the refill time split into exposed
+        (a resume stalled on the DMA) vs hidden (the lookahead pump issued
+        it early enough to overlap decode).  ``refill_hidden_frac`` is
+        hidden / (hidden + exposed), 0.0 when no refills ran."""
+        with self._lock:
+            out = dict(self._spill)
+            out["spill_s"] = self._stats[SPILL].total_s
+            out["refill_s"] = self._stats[REFILL].total_s
+            out["refill_exposed_s"] = self._stats[REFILL_EXPOSED].total_s
+            out["refill_hidden_s"] = self._stats[REFILL_HIDDEN].total_s
+            out["transfer_faults"] = self._fault["transfer_faults"]
+        split = out["refill_exposed_s"] + out["refill_hidden_s"]
+        out["refill_hidden_frac"] = (
+            out["refill_hidden_s"] / split if split else 0.0
+        )
+        return out
+
     # -- availability accounting (fault injection + self-healing) ------------
 
     def record_fault(self, *, kind: str, permanent: bool = False) -> None:
-        """One failed attempt.  ``kind`` is ``"exec"``, ``"load"`` or
-        ``"wedge"`` (a wedge is counted as an exec-class fault too — it is a
-        launch that never completed).  ``permanent`` marks faults the retry
-        policy is forbidden to absorb."""
-        if kind not in ("exec", "load", "wedge"):
+        """One failed attempt.  ``kind`` is ``"exec"``, ``"load"``,
+        ``"wedge"``, or a tier-transfer kind ``"d2h"`` / ``"h2d"`` (a wedge
+        is counted as an exec-class fault too — it is a launch that never
+        completed).  ``permanent`` marks faults the retry policy is
+        forbidden to absorb."""
+        if kind not in ("exec", "load", "wedge", "d2h", "h2d"):
             raise ValueError(f"unknown fault kind {kind!r}")
         with self._lock:
             self._fault["faults"] += 1.0
             if kind == "load":
                 self._fault["load_faults"] += 1.0
+            elif kind in ("d2h", "h2d"):
+                self._fault["transfer_faults"] += 1.0
             else:
                 self._fault["exec_faults"] += 1.0
                 if kind == "wedge":

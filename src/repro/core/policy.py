@@ -380,6 +380,100 @@ class PreemptionPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpillCandidate:
+    """What the :class:`SpillPolicy` sees of one parked snapshot.
+
+    ``arena_bytes`` is what demoting it returns to the host budget;
+    ``tokens_done`` is what the demotion costs later — the re-prefill
+    replay a snapshot resume would have avoided."""
+
+    uid: int
+    arena_bytes: int
+    tokens_done: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SpillPolicy:
+    """Who loses their host snapshot when the arena passes its byte budget,
+    and how far ahead of need refills are issued.
+
+    The device tier already degrades gracefully (pool pressure parks
+    victims, :class:`PreemptionPolicy`); this policy is the same discipline
+    one tier down.  When a new snapshot does not fit the
+    ``host_budget_bytes`` arena, parked snapshots are **demoted** to
+    re-prefill replay — their arena bytes are dropped and the request keeps
+    only its committed token prefix, which the replay path regenerates
+    bitwise-identically.  Work is rejected only when replay is disabled
+    (``allow_replay=False``), in which case the over-budget store raises
+    :class:`~repro.serve.paged.HostArenaExhausted`.
+
+    ``order`` ranks demotion victims:
+
+      - ``"cheapest_replay"`` (default) — fewest ``tokens_done`` first: the
+        resume-cost crossover.  A snapshot's whole value is the recompute it
+        avoids, which grows linearly with cached rows, so the snapshot
+        worth the least is the first to give its bytes back.
+      - ``"largest"`` — most ``arena_bytes`` first (fewest victims per
+        reclaim, at the cost of demoting the most valuable snapshot).
+      - ``"oldest"`` — earliest-parked first (store-order eviction, the
+        arena's native ``eviction_order``).
+
+    ``refill_lookahead`` is the ahead-of-need depth: how many parked
+    snapshots from the resume head get their H2D refill issued on the
+    transfer engine *before* the resume step would stall on it — a parked
+    request scheduled for resume is a "role named in a lookahead window",
+    and this is its prefetch.  0 disables (refill on demand, fully
+    exposed).
+    """
+
+    order: str = "cheapest_replay"
+    refill_lookahead: int = 4
+    allow_replay: bool = True
+
+    _ORDERS = ("cheapest_replay", "largest", "oldest")
+
+    def __post_init__(self) -> None:
+        if self.order not in self._ORDERS:
+            raise ValueError(
+                f"order must be one of {self._ORDERS}, got {self.order!r}"
+            )
+        if self.refill_lookahead < 0:
+            raise ValueError(
+                f"refill_lookahead must be >= 0, got {self.refill_lookahead}"
+            )
+
+    @classmethod
+    def of(cls, value: "SpillPolicy | None") -> "SpillPolicy":
+        """``None`` means the defaults (demote cheapest replay, lookahead 4)."""
+        return value if isinstance(value, SpillPolicy) else cls()
+
+    def victims(self, candidates: Sequence[SpillCandidate],
+                bytes_needed: int) -> list[int]:
+        """Uids to demote, in order, until ``bytes_needed`` is covered.
+
+        Returns the shortest prefix of the ranked candidates whose summed
+        ``arena_bytes`` reaches ``bytes_needed`` — or every candidate when
+        even that falls short (the caller then demotes the incoming
+        snapshot itself)."""
+        if bytes_needed <= 0:
+            return []
+        if self.order == "cheapest_replay":
+            ranked = sorted(candidates, key=lambda c: (c.tokens_done, c.uid))
+        elif self.order == "largest":
+            ranked = sorted(candidates, key=lambda c: (-c.arena_bytes, c.uid))
+        else:                                   # oldest; uid is park order
+            ranked = sorted(candidates, key=lambda c: c.uid)
+        out: list[int] = []
+        covered = 0
+        for c in ranked:
+            if covered >= bytes_needed:
+                break
+            out.append(c.uid)
+            covered += c.arena_bytes
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
 class RetryPolicy:
     """How the runtime absorbs faults before the user ever sees one.
 

@@ -376,3 +376,153 @@ class RegionManager:
 
     def __iter__(self) -> Iterator[Role]:
         return iter(self._resident.values())
+
+
+# ---------------------------------------------------------------------------
+# transfer engine: the DMA timeline between the page-pool tiers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Transfer:
+    """One D2H spill or H2D refill on the transfer engine's timeline.
+
+    ``start_t``/``ready_t`` are engine-clock stamps: the DMA begins when
+    the (single) engine frees up and completes ``duration_s`` later, so
+    back-to-back transfers queue exactly like region loads on the
+    reconfiguration engine.  ``error`` is set instead when the fault plan
+    aborted the attempt — the caller falls back (replay) rather than wait.
+    """
+
+    kind: str                  # "d2h" | "h2d"
+    what: str                  # transfer tag, e.g. "kv[uid=3]"
+    nbytes: int
+    start_t: float = 0.0
+    ready_t: float = 0.0
+    duration_s: float = 0.0
+    error: Exception | None = None
+    waited: bool = False
+
+
+class TransferEngine:
+    """Single-engine DMA timeline for tier spills (D2H) and refills (H2D).
+
+    The reconfiguration engine's twin, one level down the memory
+    hierarchy: region loads move *kernels* into bounded device residency,
+    this engine moves *cold KV pages* between the bounded device pool and
+    the budgeted host arena.  Durations are bandwidth-priced
+    (``nbytes / bandwidth_bytes_s``) on the injectable clock, so on a
+    ``VirtualClock`` every overlap question — did the refill hide behind
+    decode, or did the resume stall on it? — is a deterministic assertion.
+
+    Attribution mirrors the reconfig exposed/hidden split: ``wait`` charges
+    the caller only the *exposed* residue (``ready_t - now``, clipped at 0)
+    and books the rest as hidden — the part the ahead-of-need pump
+    overlapped with compute.  A d2h spill is never waited on (the gather
+    already made the host copy; the timeline cost only delays later
+    refills queued behind it), so its full duration rides the SPILL
+    category at issue time.
+
+    A fault plan with ``transfer_rate`` (or forced ``"d2h"``/``"h2d"``
+    faults) aborts attempts at issue: the engine is held for
+    ``fault_backoff_s`` (the abort/backoff window), the ledger prices the
+    fault, and the returned :class:`Transfer` carries ``error`` for the
+    caller's fallback path.
+    """
+
+    def __init__(self, *, bandwidth_bytes_s: float = 8e9,
+                 clock=None, ledger: OverheadLedger = GLOBAL_LEDGER,
+                 faults=None, fault_backoff_s: float = 1e-3) -> None:
+        if bandwidth_bytes_s <= 0:
+            raise ValueError(
+                f"bandwidth_bytes_s must be > 0, got {bandwidth_bytes_s}"
+            )
+        if fault_backoff_s < 0:
+            raise ValueError(
+                f"fault_backoff_s must be >= 0, got {fault_backoff_s}"
+            )
+        if clock is None:
+            from repro.core.hsa.clock import WallClock
+            clock = WallClock()
+        self.bandwidth_bytes_s = bandwidth_bytes_s
+        self.clock = clock
+        self.ledger = ledger
+        self.faults = faults
+        self.fault_backoff_s = fault_backoff_s
+        if faults is not None:
+            faults.bind_clock(clock)
+        self._free_t = clock.now()
+        self.issued = 0
+        self.completed = 0
+        self.faulted = 0
+        self.cancelled = 0
+        self.bytes_moved = 0
+
+    def issue(self, kind: str, what: str, nbytes: int) -> Transfer:
+        """Queue one transfer on the engine timeline; returns immediately.
+
+        The transfer's ``ready_t`` accounts for the engine being busy with
+        earlier transfers.  On an injected fault the engine backs off and
+        the returned transfer carries ``error`` instead of a timeline."""
+        if kind not in ("d2h", "h2d"):
+            raise ValueError(f"transfer kind must be d2h|h2d, got {kind!r}")
+        if nbytes < 0:
+            raise ValueError(f"nbytes must be >= 0, got {nbytes}")
+        now = self.clock.now()
+        if self.faults is not None:
+            err = self.faults.draw_transfer(kind, what)
+            if err is not None:
+                self.faulted += 1
+                self._free_t = max(self._free_t, now) + self.fault_backoff_s
+                self.ledger.record(ledger_mod.FAULT, 0.0, what=what,
+                                   kind=kind)
+                self.ledger.record(ledger_mod.RETRY, self.fault_backoff_s,
+                                   what=what)
+                self.ledger.record_fault(kind=kind)
+                return Transfer(kind, what, nbytes, error=err)
+        dur = nbytes / self.bandwidth_bytes_s
+        start = max(now, self._free_t)
+        ready = start + dur
+        self._free_t = ready
+        self.issued += 1
+        self.bytes_moved += nbytes
+        if kind == "d2h":
+            self.completed += 1          # never waited: done at ready_t
+            self.ledger.record(ledger_mod.SPILL, dur, what=what)
+            self.ledger.record_spill(nbytes=nbytes)
+        return Transfer(kind, what, nbytes, start, ready, dur)
+
+    def wait(self, xfer: Transfer) -> float:
+        """Block on a refill until its DMA completes; returns the *exposed*
+        seconds (virtual clocks are advanced by exactly that residue).
+
+        Records the refill's duration plus its exposed/hidden attribution;
+        waiting twice on the same transfer is a hard error (the bytes were
+        already consumed)."""
+        if xfer.error is not None:
+            raise xfer.error
+        if xfer.waited:
+            raise ValueError(f"transfer {xfer.what} already waited on")
+        xfer.waited = True
+        now = self.clock.now()
+        exposed = max(0.0, xfer.ready_t - now)
+        if exposed and getattr(self.clock, "virtual", False):
+            self.clock.advance(exposed)
+        hidden = max(0.0, xfer.duration_s - exposed)
+        if xfer.kind == "h2d":
+            self.completed += 1
+            self.ledger.record(ledger_mod.REFILL, xfer.duration_s,
+                               what=xfer.what)
+            self.ledger.record(ledger_mod.REFILL_EXPOSED, exposed,
+                               what=xfer.what)
+            self.ledger.record(ledger_mod.REFILL_HIDDEN, hidden,
+                               what=xfer.what)
+            self.ledger.record_refill(nbytes=xfer.nbytes)
+        return exposed
+
+    def cancel(self, xfer: Transfer) -> None:
+        """Drop an in-flight refill (its target was demoted to replay).
+        The timeline slot is already spent — cancellation only stops the
+        exposed/hidden accounting from ever being charged."""
+        if xfer.error is None and not xfer.waited:
+            self.cancelled += 1

@@ -43,7 +43,10 @@ from repro.core.policy import (
     PreemptionCandidate,
     PreemptionPolicy,
     RetryPolicy,
+    SpillCandidate,
+    SpillPolicy,
 )
+from repro.core.reconfig import TransferEngine
 from repro.dist import act
 from repro.dist.sharding import ShardingRules
 from repro.serve import paged as paged_mod
@@ -189,10 +192,16 @@ class _Parked:
     req: Request
     pos: int                           # cache rows at park (prompt + gen - 1)
     mode: str                          # RESUME_SNAPSHOT | RESUME_REPREFILL
-    snapshot: Any | None               # gather_pages tree (snapshot mode)
+    # snapshot-mode KV lives in the engine's HostArena (keyed by uid), not
+    # here — the arena's budget/free-list is the single accounting point;
+    # this field stays None and exists only for introspection symmetry
+    snapshot: Any | None
     # engine-clock time the fault that parked this request fired (None for
     # pool-pressure parks); resume - fault_t is the request's MTTR sample
     fault_t: float | None = None
+    # in-flight H2D refill handle (a reconfig.Transfer) issued by the
+    # ahead-of-need pump; the resume waits on it instead of a cold DMA
+    refill: Any | None = None
 
 
 @dataclasses.dataclass
@@ -290,7 +299,11 @@ class ServeEngine:
                  prefill_chunk: "int | ChunkPolicy | None" = None,
                  clock=None,
                  step_time_model: "Callable[[int, int], float] | None" = None,
-                 retry: "RetryPolicy | int | None" = None):
+                 retry: "RetryPolicy | int | None" = None,
+                 host_budget_bytes: int | None = None,
+                 spill: "SpillPolicy | None" = None,
+                 faults=None,
+                 transfer_bandwidth_bytes_s: float = 8e9):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -358,6 +371,12 @@ class ServeEngine:
         self.resumes = 0
         self.pages_reclaimed = 0
         self.recompute_tokens = 0
+        # tiered-pool counters (host arena spill/refill/demotion)
+        self.spills = 0
+        self.refills = 0
+        self.demotions = 0
+        self.replay_fallback_tokens = 0
+        self.transfer_faults = 0
         if paged:
             if not self._paged_safe():
                 raise ValueError(
@@ -412,6 +431,38 @@ class ServeEngine:
         # after every step when the clock is virtual)
         self.clock = clock if clock is not None else WallClock()
         self.step_time_model = step_time_model
+        # -- tiered KV pool (host arena, tier 1) ---------------------------
+        # parked snapshots spill D2H into a budgeted HostArena and stream
+        # back H2D ahead of need on the TransferEngine timeline; past the
+        # budget, SpillPolicy demotes victims to re-prefill replay.  With
+        # host_budget_bytes=None the arena is unbounded (the PR 5
+        # behavior), but the accounting and refill pipeline run either way.
+        self.spill = SpillPolicy.of(spill)
+        self.host_budget_bytes = host_budget_bytes
+        self.faults = faults
+        if paged:
+            self.arena = paged_mod.HostArena(host_budget_bytes)
+            self._xfer = TransferEngine(
+                bandwidth_bytes_s=transfer_bandwidth_bytes_s,
+                clock=self.clock,
+                ledger=(self.ledger if self.ledger is not None
+                        else ledger_mod.GLOBAL_LEDGER),
+                faults=faults,
+            )
+            if hsa_scheduler is not None and hasattr(
+                    hsa_scheduler, "register_refill_source"):
+                # refills ride the scheduler's prefetch pass too: a parked
+                # request nearing resume is a lookahead-window role one
+                # memory tier down (non-blocking — the engine also pumps
+                # itself every step, and pumping is idempotent)
+                hsa_scheduler.register_refill_source(
+                    self._pump_refills_external
+                )
+        else:
+            if host_budget_bytes is not None:
+                raise ValueError("host_budget_bytes requires paged=True")
+            self.arena = None
+            self._xfer = None
         # submit() may run on feeder threads while step() is mid-flight:
         # the queue, uid counter, and truncation classification share a lock
         self._lock = threading.RLock()
@@ -726,6 +777,14 @@ class ServeEngine:
                 self._cache["segments"], self._table[slot, :keep]
             )
             snap_bytes = paged_mod.snapshot_bytes(snapshot)
+            # the snapshot spills D2H into the budgeted host arena; if the
+            # store cannot be funded (budget, or a faulted transfer) the
+            # park gracefully degrades to re-prefill replay — the request
+            # keeps only its committed prefix and recomputes the rest
+            if not self._spill_snapshot(req.uid, snapshot, snap_bytes, pos):
+                mode = RESUME_REPREFILL
+                snap_bytes = 0
+            snapshot = None                 # the arena is authoritative
         self._release_slot(slot, req)
         req.parked = True
         req.preemptions += 1
@@ -768,20 +827,38 @@ class ServeEngine:
         self._parked.remove(entry)
         recompute = 0
         if entry.mode == RESUME_SNAPSHOT:
-            n = paged_mod.pages_for(entry.pos, self.page_size)
-            pages = self.allocator.allocate(req.uid, n)
-            self._table[slot] = paged_mod.TRASH_PAGE
-            self._table[slot, :n] = pages
-            self._mapped[slot] = n
-            self._cache["segments"] = paged_mod.restore_pages(
-                self._cache["segments"], entry.snapshot, np.asarray(pages)
-            )
-            self._pos[slot] = entry.pos
-            self._projected[slot] = self._projected_pages(req)
-            self._slot_key[slot] = np.asarray(
-                jax.random.fold_in(self._base_key, req.uid)
-            )
-        else:
+            # wait on the ahead-of-need refill (only its exposed residue
+            # stalls the resume); a cold resume issues the DMA on demand —
+            # fully exposed, which is what the lookahead pump exists to
+            # avoid.  A faulted refill retires through the transfer
+            # engine's abort/backoff and demotes this entry to replay.
+            x = entry.refill
+            if x is None:
+                x = self._xfer.issue(
+                    "h2d", f"kv[uid={req.uid}]", self.arena.bytes_of(req.uid)
+                )
+            if x.error is not None:
+                self.transfer_faults += 1
+                self._demote_entry(entry)       # falls through to replay
+            else:
+                self._xfer.wait(x)
+                entry.refill = None
+                snapshot = self.arena.take(req.uid)
+                self.refills += 1
+                n = paged_mod.pages_for(entry.pos, self.page_size)
+                pages = self.allocator.allocate(req.uid, n)
+                self._table[slot] = paged_mod.TRASH_PAGE
+                self._table[slot, :n] = pages
+                self._mapped[slot] = n
+                self._cache["segments"] = paged_mod.restore_pages(
+                    self._cache["segments"], snapshot, np.asarray(pages)
+                )
+                self._pos[slot] = entry.pos
+                self._projected[slot] = self._projected_pages(req)
+                self._slot_key[slot] = np.asarray(
+                    jax.random.fold_in(self._base_key, req.uid)
+                )
+        if entry.mode == RESUME_REPREFILL:
             # re-prefill + replay: recompute the prompt cache (bitwise equal
             # to the original prefill — same fn, same inputs), rewind the
             # request, and let the normal decode path regenerate the
@@ -835,6 +912,132 @@ class ServeEngine:
                     mttr_s=mttr, recompute_tokens=recompute
                 )
         return True
+
+    # -- tiered pool: spill / refill / demotion -------------------------------
+
+    def _spill_snapshot(self, uid: int, snapshot: Any, nbytes: int,
+                        pos: int) -> bool:
+        """Spill a fresh park's snapshot D2H into the host arena.
+
+        Returns False when the park must degrade to re-prefill replay
+        instead: the snapshot can never fit the budget, the D2H transfer
+        faulted, or every demotable victim was already demoted and the
+        store still does not fit.  With ``SpillPolicy.allow_replay=False``
+        those cases raise (:class:`~repro.serve.paged.HostArenaExhausted`
+        or the transfer's :class:`FaultError`) — the only configuration in
+        which tiering rejects work.
+        """
+        arena = self.arena
+        arena.configure(self.page_size * self._token_bytes)
+        if not arena.can_ever_fit(nbytes):
+            if not self.spill.allow_replay:
+                raise paged_mod.HostArenaExhausted(
+                    f"snapshot of {nbytes} B cannot ever fit host budget "
+                    f"{arena.budget_bytes} B and replay is disabled"
+                )
+            self._count_demotion(bytes_freed=0, replay_tokens=pos)
+            return False
+        x = self._xfer.issue("d2h", f"kv[uid={uid}]", nbytes)
+        if x.error is not None:
+            self.transfer_faults += 1
+            if not self.spill.allow_replay:
+                raise x.error
+            self._count_demotion(bytes_freed=0, replay_tokens=pos)
+            return False
+        while not arena.fits(nbytes):
+            if not self.spill.allow_replay:
+                raise paged_mod.HostArenaExhausted(
+                    f"store of {nbytes} B over host budget "
+                    f"{arena.budget_bytes} B ({arena.used_bytes} B used) "
+                    "and replay is disabled"
+                )
+            cands = [
+                SpillCandidate(
+                    uid=e.req.uid,
+                    arena_bytes=arena.bytes_of(e.req.uid),
+                    tokens_done=e.pos,
+                )
+                for e in self._parked
+                if e.mode == RESUME_SNAPSHOT and arena.holds(e.req.uid)
+            ]
+            if not cands:
+                # nothing left to demote: the incoming snapshot itself
+                # degrades to replay (its d2h timeline slot is sunk cost)
+                self._count_demotion(bytes_freed=0, replay_tokens=pos)
+                return False
+            short = arena.blocks_for(nbytes) - arena.free_blocks
+            need_bytes = short * arena.block_bytes
+            for v_uid in self.spill.victims(cands, need_bytes):
+                self._demote_entry(
+                    next(e for e in self._parked if e.req.uid == v_uid)
+                )
+        arena.store(uid, snapshot, nbytes)
+        self.spills += 1
+        return True
+
+    def _demote_entry(self, entry: _Parked) -> None:
+        """Demote one parked snapshot to re-prefill replay: its arena bytes
+        go back to the budget, its in-flight refill (if any) is cancelled,
+        and the eventual resume recomputes ``entry.pos`` rows instead of
+        restoring them."""
+        uid = entry.req.uid
+        freed = self.arena.discard(uid) if self.arena.holds(uid) else 0
+        if entry.refill is not None:
+            self._xfer.cancel(entry.refill)
+            entry.refill = None
+        entry.mode = RESUME_REPREFILL
+        entry.snapshot = None
+        self._count_demotion(bytes_freed=freed, replay_tokens=entry.pos)
+
+    def _count_demotion(self, *, bytes_freed: int,
+                        replay_tokens: int) -> None:
+        self.demotions += 1
+        self.replay_fallback_tokens += replay_tokens
+        if self.ledger is not None:
+            self.ledger.record_demotion(
+                bytes_freed=bytes_freed, replay_tokens=replay_tokens
+            )
+
+    def _pump_refills(self) -> None:
+        """Issue H2D refills for the parked snapshots nearest resume.
+
+        The ahead-of-need half of the tier: the first
+        ``SpillPolicy.refill_lookahead`` parked entries (seniority order —
+        exactly the order ``_step_locked`` resumes them) get their arena
+        bytes queued on the transfer engine now, so by the time the resume
+        runs, most of the DMA has hidden behind decode steps.  A refill
+        that faults here demotes its entry to replay immediately (the
+        abort/backoff already happened inside the transfer engine).
+        Idempotent: entries with an in-flight refill are skipped.
+        """
+        if not self.paged or self._xfer is None:
+            return
+        for entry in list(self._parked[: self.spill.refill_lookahead]):
+            if entry.mode != RESUME_SNAPSHOT or entry.refill is not None:
+                continue
+            uid = entry.req.uid
+            if not self.arena.holds(uid):
+                continue
+            x = self._xfer.issue(
+                "h2d", f"kv[uid={uid}]", self.arena.bytes_of(uid)
+            )
+            if x.error is not None:
+                self.transfer_faults += 1
+                self._demote_entry(entry)
+                continue
+            entry.refill = x
+
+    def _pump_refills_external(self) -> None:
+        """Scheduler-driven pump (registered via
+        ``Scheduler.register_refill_source``).  Never blocks: if the engine
+        lock is held (a step is mid-flight on another thread), skip — the
+        engine pumps itself at the end of every step anyway."""
+        if not self._lock.acquire(blocking=False):
+            return
+        try:
+            self._pump_refills()
+        finally:
+            self._lock.release()
 
     # -- fault recovery -------------------------------------------------------
 
@@ -960,6 +1163,11 @@ class ServeEngine:
         else:
             reserved = len(self._active) * self.max_len * self._token_bytes
         self.ledger.record_memory(reserved_bytes=reserved, used_bytes=used)
+        if self.arena is not None:
+            self.ledger.record_host_memory(
+                used_bytes=self.arena.used_bytes,
+                budget_bytes=self.arena.budget_bytes,
+            )
 
     def concurrency_stats(self) -> dict[str, float]:
         """Sustained (mean over steps with live work) and peak concurrency."""
@@ -1433,6 +1641,11 @@ class ServeEngine:
                 self._queue.insert(idx, entry.req)
 
         finished = self._decode_locked() if self._active else []
+
+        # -- tiered pool: issue H2D refills for parked snapshots nearing
+        # resume *before* the clock advances — the step's modeled time then
+        # hides the DMA, which is the whole ahead-of-need point ------------
+        self._pump_refills()
 
         # -- engine clock: advance virtual time by the step's modeled cost,
         # then stamp this step's latency events at the new now --------------

@@ -27,6 +27,7 @@ somewhere harmless instead of corrupting a live page.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -242,6 +243,207 @@ def restore_pages(pool_segments, saved, pages: np.ndarray):
 def snapshot_bytes(saved) -> int:
     """Host bytes a :func:`gather_pages` snapshot holds while parked."""
     return sum(leaf.nbytes for leaf in jax.tree.leaves(saved))
+
+
+# ---------------------------------------------------------------------------
+# host arena: the budgeted second tier of the page pool
+# ---------------------------------------------------------------------------
+
+
+class HostArenaExhausted(RuntimeError):
+    """A snapshot store found the host arena past its byte budget.
+
+    Only reachable when degradation is disabled (``SpillPolicy.allow_replay
+    = False``): with replay allowed the engine demotes parked snapshots to
+    re-prefill replay until the store fits, so the budget is a ceiling the
+    arena never crosses rather than an error the caller sees.
+    """
+
+
+class HostArena:
+    """Budgeted host-side tier for cold KV pages.
+
+    The device pool (tier 0) holds hot pages; parked-request snapshots —
+    and, by design, any future cold-page class (shared-prefix tails,
+    beyond-window history) — spill D2H into this arena (tier 1).  Like the
+    device :class:`PageAllocator` it is an explicit free-list over
+    fixed-size blocks with tracked owners, so conservation is an assertable
+    invariant rather than an accounting convention.  One block holds the
+    bytes of one device page (``configure`` is called lazily once the
+    engine knows its per-page byte size), which keeps the two tiers'
+    accounting commensurable: N device pages spill into N host blocks.
+
+    ``budget_bytes=None`` means unbounded (the pre-tiering behavior):
+    blocks are minted on demand and the free-list stays exact, so the
+    conservation invariants hold either way.  With a budget, a store that
+    does not fit raises :class:`HostArenaExhausted`; callers degrade by
+    demoting victims (see ``SpillPolicy``) before retrying.
+
+    Entries are keyed by owner uid.  ``eviction_order()`` is store order,
+    oldest first — the default victim scan for policies that do not rank
+    by resume cost.
+    """
+
+    def __init__(self, budget_bytes: int | None = None) -> None:
+        if budget_bytes is not None and budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0, got {budget_bytes}")
+        self.budget_bytes = budget_bytes
+        self.block_bytes: int | None = None      # set lazily by configure()
+        self._total_blocks = 0
+        self._free: list[int] = []
+        self._owner: dict[int, int] = {}         # block -> owner uid
+        self._blocks: dict[int, list[int]] = {}  # uid -> its blocks
+        self._data: dict[int, Any] = {}          # uid -> snapshot tree
+        self._nbytes: dict[int, int] = {}        # uid -> actual bytes stored
+        self._order: list[int] = []              # uids in store order
+        self.peak_bytes = 0
+        self.stores = 0
+        self.discards = 0
+
+    # -- sizing ------------------------------------------------------------
+
+    def configure(self, block_bytes: int) -> None:
+        """Fix the block size (bytes of one device page).  Idempotent; a
+        conflicting re-configure is a hard error — resizing live blocks
+        would silently break the free-list ↔ budget correspondence."""
+        if self.block_bytes is not None:
+            if block_bytes != self.block_bytes:
+                raise ValueError(
+                    f"arena already configured with block_bytes="
+                    f"{self.block_bytes}, got {block_bytes}"
+                )
+            return
+        if block_bytes < 1:
+            raise ValueError(f"block_bytes must be >= 1, got {block_bytes}")
+        self.block_bytes = block_bytes
+        if self.budget_bytes is not None:
+            self._total_blocks = self.budget_bytes // block_bytes
+            self._free = list(range(self._total_blocks - 1, -1, -1))
+
+    def blocks_for(self, nbytes: int) -> int:
+        """Blocks needed to hold ``nbytes`` (at least one)."""
+        if self.block_bytes is None:
+            raise RuntimeError("arena not configured (block_bytes unset)")
+        return max(1, -(-nbytes // self.block_bytes))
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def total_blocks(self) -> int:
+        return self._total_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._owner)
+
+    @property
+    def used_bytes(self) -> int:
+        """Actual snapshot bytes resident (<= used_blocks · block_bytes)."""
+        return sum(self._nbytes.values())
+
+    def fits(self, nbytes: int) -> bool:
+        """Would a store of ``nbytes`` succeed right now?"""
+        if self.budget_bytes is None:
+            return True
+        return self.blocks_for(nbytes) <= len(self._free)
+
+    def can_ever_fit(self, nbytes: int) -> bool:
+        """Would ``nbytes`` fit into an *empty* arena?  False means no
+        amount of demotion helps — the entry must go straight to replay."""
+        if self.budget_bytes is None:
+            return True
+        return self.blocks_for(nbytes) <= self._total_blocks
+
+    # -- store / load / discard --------------------------------------------
+
+    def holds(self, uid: int) -> bool:
+        return uid in self._data
+
+    def bytes_of(self, uid: int) -> int:
+        return self._nbytes[uid]
+
+    def entries(self) -> list[int]:
+        """Resident uids in eviction order (oldest store first)."""
+        return list(self._order)
+
+    def store(self, uid: int, data: Any, nbytes: int) -> None:
+        """Park ``data`` (a :func:`gather_pages` tree) under ``uid``."""
+        if uid in self._data:
+            raise ValueError(f"uid {uid} already holds an arena entry")
+        need = self.blocks_for(nbytes)
+        if self.budget_bytes is None:
+            while len(self._free) < need:       # unbounded: mint blocks
+                self._free.append(self._total_blocks)
+                self._total_blocks += 1
+        elif need > len(self._free):
+            raise HostArenaExhausted(
+                f"store of {nbytes} B ({need} blocks) over budget: "
+                f"{len(self._free)}/{self._total_blocks} blocks free, "
+                f"budget {self.budget_bytes} B"
+            )
+        blocks = [self._free.pop() for _ in range(need)]
+        for b in blocks:
+            self._owner[b] = uid
+        self._blocks[uid] = blocks
+        self._data[uid] = data
+        self._nbytes[uid] = nbytes
+        self._order.append(uid)
+        self.stores += 1
+        self.peak_bytes = max(self.peak_bytes, self.used_bytes)
+
+    def load(self, uid: int) -> Any:
+        """Peek the stored snapshot without freeing its blocks."""
+        return self._data[uid]
+
+    def discard(self, uid: int) -> int:
+        """Drop ``uid``'s entry, return its blocks to the free-list.
+
+        Returns the bytes freed — what a demotion gives back to the
+        budget, and what the ledger prices the demotion at.
+        """
+        if uid not in self._data:
+            raise ValueError(f"uid {uid} holds no arena entry")
+        for b in self._blocks.pop(uid):
+            del self._owner[b]
+            self._free.append(b)
+        del self._data[uid]
+        self._order.remove(uid)
+        self.discards += 1
+        return self._nbytes.pop(uid)
+
+    def take(self, uid: int) -> Any:
+        """Load + discard in one step (the refill-complete path)."""
+        data = self._data[uid]
+        self.discard(uid)
+        return data
+
+    # -- invariants --------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        """free + owned must tile [0, total_blocks) exactly; per-entry
+        block counts must match the byte accounting; budget never crossed."""
+        owned = set(self._owner)
+        free = set(self._free)
+        assert not (owned & free), f"aliased blocks {owned & free}"
+        union = owned | free
+        expect = set(range(self._total_blocks))
+        assert union == expect, (
+            f"leaked blocks {expect - union} / phantom {union - expect}"
+        )
+        assert set(self._data) == set(self._blocks) == set(self._nbytes)
+        assert set(self._order) == set(self._data)
+        assert len(self._order) == len(self._data)
+        for uid, blocks in self._blocks.items():
+            assert len(blocks) == self.blocks_for(self._nbytes[uid])
+            assert all(self._owner[b] == uid for b in blocks)
+        if self.budget_bytes is not None:
+            assert self.used_blocks * (self.block_bytes or 0) \
+                <= self.budget_bytes
+            assert self.used_bytes <= self.budget_bytes
 
 
 #: cache leaves with a position axis (the ones a page actually stores rows

@@ -678,3 +678,81 @@ def test_fault_soak_10k_steps(engine_model):
     avail = led.availability_split()
     assert avail["faults"] > 0, "seed injected no faults: soak is vacuous"
     assert avail["failed_requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# transfer faults: the tiered pool's DMA failure mode
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_transfer_validation_and_force():
+    from repro.core.hsa.faults import InjectedTransferFault
+
+    with pytest.raises(ValueError, match="transfer_rate"):
+        FaultPlan(transfer_rate=-0.1)
+    plan = FaultPlan()
+    with pytest.raises(ValueError, match="d2h|h2d"):
+        plan.draw_transfer("sideways", "kv[uid=1]")
+    plan.force("d2h", "uid=7")
+    assert plan.draw_transfer("h2d", "kv[uid=7]") is None   # wrong direction
+    err = plan.draw_transfer("d2h", "kv[uid=7]")
+    assert isinstance(err, InjectedTransferFault)
+    assert plan.draw_transfer("d2h", "kv[uid=7]") is None   # forced: consumed
+    assert plan.trace[-1].kind == "d2h" and plan.trace[-1].forced
+
+
+def test_fault_plan_transfer_rate_deterministic():
+    a = FaultPlan(seed=5, transfer_rate=0.5)
+    b = FaultPlan(seed=5, transfer_rate=0.5)
+    seq_a = [a.draw_transfer("h2d", "x") is not None for _ in range(32)]
+    seq_b = [b.draw_transfer("h2d", "x") is not None for _ in range(32)]
+    assert seq_a == seq_b and any(seq_a) and not all(seq_a)
+    always = FaultPlan(transfer_rate=1.0)
+    assert all(always.draw_transfer("d2h", "x") is not None
+               for _ in range(4))
+
+
+def _park_resume_run(model, params, plan):
+    """Deterministic snapshot park: 3 decode steps, preempt uid 0, drain."""
+    from repro.core.policy import PreemptionPolicy
+
+    eng = ServeEngine(
+        model, params, batch_slots=2, max_len=32, paged=True, page_size=8,
+        pool_pages=8,
+        preemption=PreemptionPolicy(snapshot_threshold_tokens=1),
+        ledger=OverheadLedger(), faults=plan,
+    )
+    victim = eng.submit([1, 2, 3], max_new_tokens=8)
+    eng.submit([4, 5], max_new_tokens=8)
+    done = []
+    for _ in range(3):
+        done += eng.step()
+    eng.preempt(victim)                   # past threshold: snapshot-mode park
+    done += eng.run_to_completion(max_steps=10_000)
+    streams = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+    return streams, eng
+
+
+@pytest.mark.parametrize("kind,expect_spills", [("d2h", 0), ("h2d", 1)])
+def test_transfer_fault_falls_back_to_replay(engine_model, kind,
+                                             expect_spills):
+    """A faulted D2H spill parks its victim by re-prefill replay instead of
+    snapshot; a faulted H2D refill demotes the parked snapshot to replay —
+    either way the stream is bitwise-identical and the arena stays clean."""
+    _, model, params = engine_model
+    base, eng0 = _park_resume_run(model, params, None)
+    assert eng0.spills == 1 and eng0.demotions == 0
+
+    plan = FaultPlan()
+    plan.force(kind)
+    streams, eng = _park_resume_run(model, params, plan)
+    assert streams == base
+    assert eng.transfer_faults == 1
+    assert eng.demotions == 1             # fault degraded resume to replay
+    assert eng.spills == expect_spills
+    assert len(plan.trace) == 1 and plan.trace[0].kind == kind
+    assert eng.allocator.free_pages == eng.allocator.total_pages
+    assert not eng.arena.entries()
+    split = eng.ledger.spill_split()
+    assert split["transfer_faults"] == 1
+    assert split["replay_fallback_tokens"] > 0

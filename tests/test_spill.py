@@ -1,0 +1,439 @@
+"""Tiered KV page pool: budgeted host arena, spill/refill, degradation.
+
+The tiering claim: bounding the host tier changes *cost*, never output.
+Parked snapshots spill D2H into a budgeted :class:`HostArena`; refills
+stream back H2D ahead of need; when the budget is oversubscribed a
+:class:`SpillPolicy` demotes victims from snapshot-resume to re-prefill
+replay.  Under any budget — including zero — completed token streams must
+stay bitwise-identical to an unconstrained dense run, the arena free-list
+must conserve blocks, and ``used_bytes`` must never exceed the budget (both
+asserted after *every* step of a randomized churn schedule).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.core.hsa.clock import VirtualClock
+from repro.core.ledger import OverheadLedger
+from repro.core.policy import SpillCandidate, SpillPolicy
+from repro.core.reconfig import Transfer, TransferEngine
+from repro.models import build_model
+from repro.models.params import init_params
+from repro.serve.engine import ServeEngine
+from repro.serve.paged import HostArena, HostArenaExhausted
+
+
+@pytest.fixture(scope="module")
+def engine_model():
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(11))
+    return cfg, model, params
+
+
+def _requests(rng, n):
+    """(prompt, max_new) pairs; lengths sized for max_len=32, page_size=8."""
+    out = []
+    for _ in range(n):
+        p = [int(t) for t in rng.integers(1, 100, size=int(rng.integers(1, 8)))]
+        out.append((p, int(rng.integers(2, 12))))
+    return out
+
+
+def _dense_reference(model, params, reqs, *, temperature=0.0, seed=0):
+    eng = ServeEngine(model, params, batch_slots=len(reqs), max_len=32,
+                      temperature=temperature, seed=seed)
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done = sorted(eng.run_to_completion(max_steps=100_000),
+                  key=lambda r: r.uid)
+    return [r.generated for r in done]
+
+
+def _check_invariants(eng):
+    eng.allocator.check_invariants()
+    eng.arena.check_invariants()
+    if eng.host_budget_bytes is not None:
+        assert eng.arena.used_bytes <= eng.host_budget_bytes, \
+            "host budget exceeded"
+
+
+def _churn(model, params, *, steps, n_requests, seed, temperature=0.0,
+           fusion=1, snapshot_threshold=8, preempt_p=0.25, resume_p=0.2,
+           submit_p=0.6, pool_pages=8, host_budget_bytes=None,
+           spill=None, faults=None, use_clock=False):
+    """Seeded admit/decode/preempt/spill/refill/fault schedule with the
+    arena free-list and host budget asserted after every step."""
+    from repro.core.policy import AdmissionPolicy, PreemptionPolicy
+
+    rng = np.random.default_rng(seed)
+    reqs = _requests(rng, n_requests)
+    kw = {}
+    if use_clock:
+        kw["clock"] = VirtualClock()
+        kw["step_time_model"] = lambda prefill, decode: 1e-3
+        kw["transfer_bandwidth_bytes_s"] = 64e6
+    eng = ServeEngine(
+        model, params, batch_slots=4, max_len=32, paged=True, page_size=8,
+        pool_pages=pool_pages, decode_fusion=fusion, temperature=temperature,
+        seed=0, admission=AdmissionPolicy(growth_reserve=0.5),
+        preemption=PreemptionPolicy(snapshot_threshold_tokens=snapshot_threshold),
+        ledger=OverheadLedger(), host_budget_bytes=host_budget_bytes,
+        spill=spill, faults=faults, **kw,
+    )
+    done, i = [], 0
+    for _ in range(steps):
+        if i < len(reqs) and rng.random() < submit_p:
+            p, m = reqs[i]
+            eng.submit(p, max_new_tokens=m)
+            i += 1
+        if eng._active and rng.random() < preempt_p:
+            uid = int(rng.choice([r.uid for r in eng._active.values()]))
+            eng.preempt(uid)
+        if eng.parked_requests and rng.random() < resume_p:
+            uid = int(rng.choice([r.uid for r in eng.parked_requests]))
+            eng.resume(uid)               # may be unfundable: stays parked
+        done += eng.step()
+        _check_invariants(eng)
+    while i < len(reqs):
+        p, m = reqs[i]
+        eng.submit(p, max_new_tokens=m)
+        i += 1
+    done += eng.run_to_completion(max_steps=100_000)
+    _check_invariants(eng)
+    assert eng.allocator.free_pages == eng.allocator.total_pages
+    assert not eng.arena.entries(), "arena holds snapshots after drain"
+    streams = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+    assert len(streams) == len(reqs)      # zero drops
+    return streams, reqs, eng
+
+
+# ---------------------------------------------------------------------------
+# HostArena
+# ---------------------------------------------------------------------------
+
+
+def test_arena_store_load_take_discard():
+    a = HostArena(budget_bytes=4096)
+    a.configure(1024)
+    assert a.total_blocks == 4 and a.free_blocks == 4
+    a.store(1, "snap1", 1500)             # 2 blocks
+    assert a.holds(1) and a.bytes_of(1) == 1500
+    assert a.used_blocks == 2 and a.free_blocks == 2
+    assert a.load(1) == "snap1"
+    assert a.holds(1)                     # load does not evict
+    assert a.take(1) == "snap1"
+    assert not a.holds(1) and a.free_blocks == 4
+    a.store(2, "snap2", 100)
+    assert a.discard(2) == 100
+    assert a.used_bytes == 0
+    a.check_invariants()
+
+
+def test_arena_budget_enforced_and_fits():
+    a = HostArena(budget_bytes=2048)
+    a.configure(1024)
+    assert a.fits(2048) and not a.fits(2049)
+    assert a.can_ever_fit(2048) and not a.can_ever_fit(2049)
+    a.store(1, "x", 1024)
+    assert not a.fits(2000)               # only 1 block free
+    with pytest.raises(HostArenaExhausted):
+        a.store(2, "y", 2000)
+    assert a.peak_bytes == 1024
+    a.check_invariants()
+
+
+def test_arena_unbounded_mints_blocks():
+    a = HostArena()                       # budget None: pre-tiering behavior
+    a.configure(512)
+    for uid in range(10):
+        a.store(uid, f"s{uid}", 1000)
+    assert a.used_blocks == 20 and a.free_blocks == 0
+    assert a.fits(10**9) and a.can_ever_fit(10**12)
+    a.check_invariants()
+    for uid in range(10):
+        a.discard(uid)
+    a.check_invariants()
+
+
+def test_arena_store_duplicate_and_configure_conflict():
+    a = HostArena(budget_bytes=4096)
+    a.configure(1024)
+    a.configure(1024)                     # idempotent
+    with pytest.raises(ValueError):
+        a.configure(2048)                 # conflicting block size
+    a.store(1, "x", 10)
+    with pytest.raises(ValueError):
+        a.store(1, "y", 10)               # uid already resident
+    b = HostArena(budget_bytes=4096)
+    with pytest.raises(RuntimeError):
+        b.blocks_for(10)                  # unconfigured
+
+
+def test_arena_eviction_order_is_store_order():
+    a = HostArena()
+    a.configure(64)
+    for uid in (3, 1, 2):
+        a.store(uid, None, 64)
+    assert a.entries() == [3, 1, 2]
+    a.take(1)
+    assert a.entries() == [3, 2]
+
+
+# ---------------------------------------------------------------------------
+# SpillPolicy
+# ---------------------------------------------------------------------------
+
+
+def _spill_cands():
+    return [
+        SpillCandidate(uid=1, arena_bytes=4096, tokens_done=30),
+        SpillCandidate(uid=2, arena_bytes=1024, tokens_done=5),
+        SpillCandidate(uid=3, arena_bytes=2048, tokens_done=12),
+    ]
+
+
+def test_spill_victims_cheapest_replay_first():
+    v = SpillPolicy().victims(_spill_cands(), 1000)
+    assert v == [2]                       # fewest tokens to replay
+    v = SpillPolicy().victims(_spill_cands(), 2000)
+    assert v == [2, 3]
+
+
+def test_spill_victims_other_orders():
+    assert SpillPolicy(order="largest").victims(_spill_cands(), 1000) == [1]
+    assert SpillPolicy(order="oldest").victims(_spill_cands(), 1000) == [1]
+    assert SpillPolicy(order="largest").victims(_spill_cands(), 5000) == [1, 3]
+
+
+def test_spill_victims_insufficient_returns_all():
+    v = SpillPolicy().victims(_spill_cands(), 10**9)
+    assert sorted(v) == [1, 2, 3]
+    assert SpillPolicy().victims([], 1) == []
+
+
+def test_spill_policy_validation_and_of():
+    with pytest.raises(ValueError):
+        SpillPolicy(order="random")
+    with pytest.raises(ValueError):
+        SpillPolicy(refill_lookahead=-1)
+    assert SpillPolicy.of(None) == SpillPolicy()
+    p = SpillPolicy(order="largest")
+    assert SpillPolicy.of(p) is p
+
+
+# ---------------------------------------------------------------------------
+# TransferEngine (virtual clock: exact timestamps)
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_exposed_vs_hidden():
+    clock = VirtualClock()
+    led = OverheadLedger()
+    xfer = TransferEngine(bandwidth_bytes_s=1000.0, clock=clock, ledger=led)
+    t = xfer.issue("h2d", "kv[uid=1]", 500)      # 0.5 s transfer
+    assert (t.start_t, t.ready_t) == (0.0, 0.5)
+    clock.advance(0.2)                            # 0.3 s still in flight
+    exposed = xfer.wait(t)
+    assert exposed == pytest.approx(0.3)
+    assert clock.now() == pytest.approx(0.5)      # wait advanced to ready
+    split = led.spill_split()
+    assert split["refill_exposed_s"] == pytest.approx(0.3)
+    assert split["refill_hidden_s"] == pytest.approx(0.2)
+    assert split["refill_hidden_frac"] == pytest.approx(0.4)
+    # fully hidden: decode time covered the whole DMA
+    t2 = xfer.issue("h2d", "kv[uid=2]", 500)
+    clock.advance(1.0)
+    assert xfer.wait(t2) == 0.0
+    with pytest.raises(ValueError):
+        xfer.wait(t2)                             # double wait
+
+
+def test_transfer_engine_serializes_dmas():
+    clock = VirtualClock()
+    xfer = TransferEngine(bandwidth_bytes_s=1000.0, clock=clock)
+    a = xfer.issue("d2h", "kv[uid=1]", 1000)      # occupies [0, 1]
+    b = xfer.issue("h2d", "kv[uid=2]", 1000)      # queues behind: [1, 2]
+    assert (a.start_t, a.ready_t) == (0.0, 1.0)
+    assert (b.start_t, b.ready_t) == (1.0, 2.0)
+    assert xfer.bytes_moved == 2000
+
+
+def test_transfer_fault_backoff_and_ledger():
+    from repro.core.hsa.faults import FaultPlan, InjectedTransferFault
+
+    clock = VirtualClock()
+    led = OverheadLedger()
+    plan = FaultPlan()
+    plan.force("h2d")
+    xfer = TransferEngine(bandwidth_bytes_s=1000.0, clock=clock, ledger=led,
+                          faults=plan, fault_backoff_s=0.25)
+    t = xfer.issue("h2d", "kv[uid=1]", 100)
+    assert isinstance(t.error, InjectedTransferFault)
+    assert xfer.faulted == 1
+    with pytest.raises(InjectedTransferFault):
+        xfer.wait(t)
+    assert led.spill_split()["transfer_faults"] == 1
+    # the backoff occupies the engine timeline: next DMA starts at 0.25
+    t2 = xfer.issue("d2h", "kv[uid=2]", 100)
+    assert t2.start_t == pytest.approx(0.25)
+    xfer.cancel(t2)
+    assert xfer.cancelled == 1
+
+
+def test_transfer_validation():
+    xfer = TransferEngine(clock=VirtualClock())
+    with pytest.raises(ValueError):
+        xfer.issue("sideways", "x", 10)
+    with pytest.raises(ValueError):
+        xfer.issue("h2d", "x", -1)
+    with pytest.raises(ValueError):
+        TransferEngine(bandwidth_bytes_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# ledger accounting
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_host_memory_rows_and_budget_guard():
+    led = OverheadLedger()
+    led.record_host_memory(used_bytes=1000, budget_bytes=4096)
+    mem = led.memory_split()
+    assert mem["host_used_bytes"] == 1000
+    assert mem["host_peak_bytes"] == 1000
+    assert mem["host_budget_bytes"] == 4096
+    led.record_host_memory(used_bytes=500, budget_bytes=4096)
+    assert led.memory_split()["host_peak_bytes"] == 1000
+    with pytest.raises(ValueError):
+        led.record_host_memory(used_bytes=5000, budget_bytes=4096)
+
+
+def test_ledger_demotion_undoes_snapshot_double_count():
+    led = OverheadLedger()
+    led.record_preemption(pages_reclaimed=4, snapshot_bytes=4096)
+    assert led.overcommit_split()["snapshot_bytes"] == 4096
+    led.record_demotion(bytes_freed=4096, replay_tokens=20)
+    out = led.overcommit_split()
+    assert out["snapshot_bytes"] == 0     # demoted bytes no longer counted
+    spill = led.spill_split()
+    assert spill["demotions"] == 1
+    assert spill["demoted_bytes"] == 4096
+    assert spill["replay_fallback_tokens"] == 20
+
+
+def test_ledger_spill_split_rates():
+    led = OverheadLedger()
+    led.record_spill(nbytes=2048)
+    led.record_refill(nbytes=2048)
+    out = led.spill_split()
+    assert out["spills"] == 1 and out["spill_bytes"] == 2048
+    assert out["refills"] == 1 and out["refill_bytes"] == 2048
+    assert out["refill_hidden_frac"] == 0.0   # no timed waits recorded
+
+
+# ---------------------------------------------------------------------------
+# engine integration: budget squeeze, degradation, bitwise identity
+# ---------------------------------------------------------------------------
+
+
+def test_churn_unbounded_arena_matches_dense(engine_model):
+    """Default (no budget): the arena is pure plumbing — same streams, and
+    every snapshot park round-trips through it."""
+    _, model, params = engine_model
+    streams, reqs, eng = _churn(model, params, steps=40, n_requests=8, seed=5)
+    assert eng.preemptions > 0
+    assert eng.spills > 0 and eng.refills == eng.spills
+    assert eng.demotions == 0
+    assert streams == _dense_reference(model, params, reqs)
+
+
+def test_churn_tiny_budget_demotes_but_streams_identical(engine_model):
+    """A one-block budget forces SpillPolicy demotions under churn; output
+    must not change — only resume cost does."""
+    _, model, params = engine_model
+    probe, _, eng0 = _churn(model, params, steps=40, n_requests=8, seed=5)
+    budget = eng0.arena.block_bytes       # exactly one snapshot block
+    streams, reqs, eng = _churn(model, params, steps=40, n_requests=8,
+                                seed=5, host_budget_bytes=budget)
+    assert eng.spills > 0
+    assert eng.demotions > 0, "budget never squeezed: test is vacuous"
+    assert eng.arena.peak_bytes <= budget
+    assert streams == _dense_reference(model, params, reqs)
+    split = eng.ledger.spill_split()
+    assert split["demotions"] == eng.demotions
+    assert split["replay_fallback_tokens"] == eng.replay_fallback_tokens > 0
+
+
+def test_churn_zero_budget_all_replay_identical(engine_model):
+    """budget=0: no snapshot ever fits, every park degrades to re-prefill
+    replay — the graceful-degradation floor, still bitwise-identical."""
+    _, model, params = engine_model
+    streams, reqs, eng = _churn(model, params, steps=40, n_requests=8,
+                                seed=5, host_budget_bytes=0)
+    assert eng.preemptions > 0
+    assert eng.spills == 0 and eng.refills == 0
+    assert eng.demotions > 0
+    assert eng.arena.peak_bytes == 0
+    assert streams == _dense_reference(model, params, reqs)
+
+
+def test_churn_refill_hidden_behind_decode(engine_model):
+    """On the virtual clock with a step-time model, ahead-of-need refills
+    are overlapped with decode: the hidden share must dominate.  Parks are
+    growth-driven (pool pressure), so the pump sees every parked snapshot
+    a step before the engine tries to resume it."""
+    _, model, params = engine_model
+    streams, reqs, eng = _churn(
+        model, params, steps=60, n_requests=8, seed=7, use_clock=True,
+        preempt_p=0.0, resume_p=0.0, pool_pages=4, submit_p=0.9,
+        snapshot_threshold=0, spill=SpillPolicy(refill_lookahead=4),
+    )
+    assert eng.refills > 0
+    split = eng.ledger.spill_split()
+    assert split["refill_hidden_frac"] > 0.5
+    assert streams == _dense_reference(model, params, reqs)
+
+
+def test_churn_transfer_faults_absorbed(engine_model):
+    """Forced D2H and H2D faults: the victim falls back to re-prefill
+    replay and streams stay identical — the fault never reaches the user."""
+    from repro.core.hsa.faults import FaultPlan
+
+    _, model, params = engine_model
+    plan = FaultPlan()
+    plan.force("d2h")
+    plan.force("h2d")
+    streams, reqs, eng = _churn(model, params, steps=40, n_requests=8,
+                                seed=5, faults=plan)
+    assert eng.transfer_faults == 2
+    assert len(plan.trace) == 2
+    assert eng.demotions >= 1             # faulted transfers degrade to replay
+    assert streams == _dense_reference(model, params, reqs)
+
+
+def test_host_budget_requires_paged(engine_model):
+    _, model, params = engine_model
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, batch_slots=2, host_budget_bytes=4096)
+
+
+@pytest.mark.slow
+def test_churn_spill_soak_10k_steps(engine_model):
+    """10k-step-bounded soak under a squeezed budget: sustained spill/
+    refill/demote cycling over hundreds of requests, arena and budget
+    invariants checked every step, every stream bitwise-checked."""
+    _, model, params = engine_model
+    _, _, eng0 = _churn(model, params, steps=40, n_requests=8, seed=5)
+    budget = eng0.arena.block_bytes       # one block: constant squeeze
+    streams, reqs, eng = _churn(
+        model, params, steps=10_000, n_requests=250, seed=13, fusion=2,
+        preempt_p=0.15, resume_p=0.15, submit_p=0.3,
+        host_budget_bytes=budget,
+    )
+    assert eng.spills > 0 and eng.demotions > 0
+    assert eng.arena.peak_bytes <= budget
+    assert streams == _dense_reference(model, params, reqs)
