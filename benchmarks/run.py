@@ -78,6 +78,7 @@ def main(argv: list[str] | None = None) -> None:
         table9_traffic,
         table10_faults,
         table11_spill,
+        table12_integrity,
     )
 
     suites = (
@@ -92,6 +93,7 @@ def main(argv: list[str] | None = None) -> None:
         (table9_traffic.run, {"n": min(n, 64)}),
         (table10_faults.run, {"n": min(n, 48)}),
         (table11_spill.run, {"n": min(n, 64)}),
+        (table12_integrity.run, {"n": min(n, 48)}),
     )
     print("name,us_per_call,derived", flush=True)
     rows: list[str] = []

@@ -1,0 +1,281 @@
+"""Table XII (extension): end-to-end data integrity under silent corruption.
+
+PR 7 made the runtime survive *fail-stop* faults — launches that error or
+wedge.  This table measures the quieter failure mode: state that is
+silently wrong.  Seeded bit flips land on sealed KV pages and parked
+host-arena blocks, DMA payloads are corrupted in flight, and region loads
+deliver stale images; the integrity layer (content digests at every write
+boundary, a budgeted background scrubber, payload verification on both DMA
+directions, image verification on every reconfiguration) must catch every
+corruption *before* it influences a sampled token.
+
+Two measurements:
+
+  1. **Serving sweep** — the real paged+tiered ``ServeEngine`` on a virtual
+     clock under the long-tail request mix with periodic preemption (so all
+     three KV tiers carry live state), swept over corruption rate
+     (0.1% / 1% / 5% per step-opportunity) x scrub budget (off / 4 targets
+     per step).  Every cell must complete every request with **zero
+     escaped corruptions** and completed streams bitwise-identical to a
+     corruption-free dense run.  Scrub overhead (targets re-hashed x a
+     nominal per-page hash cost, over virtual step time) must stay under
+     5%; a same-run measured fraction is reported as a cross-check.
+  2. **Region arm** — the HSA scheduler under a 5% stale-image rate on
+     region loads: every stale image is detected at load time and retired
+     through the existing abort/retry lane; every packet completes with
+     the right output and nothing escapes.
+
+Acceptance (CI-asserted): ``integrity_wins`` = every sweep cell identical
++ zero escapes + corruption actually injected and detected in the page,
+block/transfer, and region tiers + scrub overhead < 5%.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.table7_paged import request_mix
+
+RATES = (0.001, 0.01, 0.05)
+SCRUBS = (0, 4)
+STEP_S = 1e-3
+# nominal wall cost of re-hashing one sealed page, used for the *tracked*
+# overhead fraction so the trajectory guard diffs a deterministic number;
+# the same-run measured cost is reported alongside in `derived` (it lands
+# in the low-microsecond range on every machine this runs on — the nominal
+# constant is deliberately conservative)
+HASH_NOMINAL_S = 5e-6
+
+
+def _model():
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.models import build_model
+    from repro.models.params import init_params
+
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(0))
+    return model, params
+
+
+def _requests(n: int) -> list[tuple[list[int], int]]:
+    """The table7 long-tail mix, clamped to this arm's max_len=64."""
+    out = []
+    for i, (p, t) in enumerate(request_mix(n)):
+        p = max(4, min(p, 20))
+        t = max(4, min(t, 40))
+        out.append(([2 + (i + j) % 96 for j in range(p)], t))
+    return out
+
+
+def _dense(model, params, reqs):
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(model, params, batch_slots=len(reqs), max_len=64,
+                      decode_fusion=2)
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done = sorted(eng.run_to_completion(max_steps=100_000),
+                  key=lambda r: r.uid)
+    return [r.generated for r in done]
+
+
+def _serving_run(model, params, reqs, *, corrupt_rate, scrub):
+    """One sweep cell: paged + spill tiers live, periodic preemption, and
+    seeded corruption at ``corrupt_rate`` with a ``scrub``-target budget.
+    Invariants are asserted every step; returns the engine, the completed
+    streams, wall seconds, and step count."""
+    from repro.core.hsa import FaultPlan, VirtualClock
+    from repro.core.ledger import OverheadLedger
+    from repro.core.policy import (
+        AdmissionPolicy,
+        IntegrityPolicy,
+        PreemptionPolicy,
+        RetryPolicy,
+    )
+    from repro.serve.engine import ServeEngine
+
+    eng = ServeEngine(
+        model, params, batch_slots=8, max_len=64, decode_fusion=2,
+        paged=True, page_size=8, pool_pages=48,
+        admission=AdmissionPolicy(growth_reserve=0.5),
+        preemption=PreemptionPolicy(snapshot_threshold_tokens=8),
+        ledger=OverheadLedger(), clock=VirtualClock(),
+        step_time_model=lambda prefill, decode: STEP_S,
+        host_budget_bytes=1 << 22, transfer_bandwidth_bytes_s=64e6,
+        retry=RetryPolicy(max_request_recoveries=64),
+        faults=FaultPlan(seed=7, corrupt_rate=corrupt_rate),
+        integrity=IntegrityPolicy(scrub_pages_per_step=scrub),
+    )
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done, steps = [], 0
+    t0 = time.perf_counter()
+    while len(done) < len(reqs):
+        steps += 1
+        assert steps <= 200_000, "integrity arm failed to converge"
+        if steps % 7 == 0 and eng._active:
+            eng.preempt()                     # keep the spill tier live
+        done.extend(eng.step())
+        eng.allocator.check_invariants()
+        eng.arena.check_invariants()
+    wall_s = time.perf_counter() - t0
+    eng.allocator.check_invariants()
+    done = sorted(done, key=lambda r: r.uid)
+    return eng, [r.generated for r in done], wall_s, steps
+
+
+def _hash_cost_s(eng) -> float:
+    """Measured wall cost of re-hashing one sealed page, the unit the
+    scrubber spends its budget on."""
+    from repro.serve.paged import page_digest
+
+    segs = eng._cache["segments"]
+    for _ in range(3):                        # warm
+        page_digest(segs, 1)
+    k = 200
+    t0 = time.perf_counter()
+    for _ in range(k):
+        page_digest(segs, 1)
+    return (time.perf_counter() - t0) / k
+
+
+def _region_arm() -> dict[str, float]:
+    """Scheduler under a 5% stale-image rate on region loads."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.kernels  # noqa: F401
+    from repro.core.hsa import FaultPlan, Queue, Scheduler, VirtualClock
+    from repro.core.ledger import OverheadLedger
+    from repro.core.policy import RetryPolicy
+    from repro.core.reconfig import RegionManager
+    from repro.core.registry import GLOBAL_REGISTRY
+    from repro.core.roles import Role, RoleLibrary
+
+    led = OverheadLedger()
+    lib = RoleLibrary(ledger=led)
+    rm = RegionManager(2, ledger=led)
+    plan = FaultPlan(seed=11, corrupt_rate=0.05)
+    sched = Scheduler(
+        rm, lib, ledger=led, clock=VirtualClock(),
+        cost_model=lambda k, w, m: {"reconfig": 10.0, "exec": 1.0}[k],
+        retry=RetryPolicy(backoff_s=0.5, backoff_factor=2.0,
+                          max_backoff_s=8.0),
+        faults=plan,
+    )
+    impl = GLOBAL_REGISTRY.resolve("matmul", "any", ("xla",))
+    roles = []
+    for n in (8, 16, 32):                     # 3 roles, 2 regions: evictions
+        a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        roles.append(lib.add(Role(impl, (a, a), name=f"mm{n}")))
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    pkts = []
+    for i in range(60):
+        r = roles[i % len(roles)]
+        n = (8, 16, 32)[i % len(roles)]
+        pkts.append((q.dispatch(r.key, jnp.ones((n, n)), jnp.ones((n, n))),
+                     float(n)))
+    sched.run_until_idle()
+    ok = all(
+        p.out.error is None
+        and np.asarray(p.out.value)[0, 0] == expect
+        for p, expect in pkts
+    )
+    sp = led.integrity_split()
+    return {
+        "ok": float(ok),
+        "stale": sp["stale_regions"],
+        "detected": sp["detected_region"],
+        "escaped": sp["escaped"],
+        "retries": led.availability_split()["retries"],
+    }
+
+
+def run(n: int = 48) -> list[str]:
+    rows = []
+    model, params = _model()
+    reqs = _requests(max(16, min(n, 48)))
+    ref = _dense(model, params, reqs)
+
+    all_identical = True
+    escaped = 0.0
+    injected = detected = 0.0
+    tier_pages = tier_blocks_or_xfer = 0.0
+    overhead_frac = measured_frac = 0.0
+    for rate in RATES:
+        for scrub in SCRUBS:
+            eng, streams, wall_s, steps = _serving_run(
+                model, params, reqs, corrupt_rate=rate, scrub=scrub)
+            sp = eng.ledger.integrity_split()
+            identical = int(streams == ref)
+            all_identical &= bool(identical)
+            escaped += sp["escaped"]
+            injected += sp["corruptions"]
+            detected += sp["detected"]
+            tier_pages += sp["detected_read"] + sp["detected_scrub"]
+            tier_blocks_or_xfer += sp["detected_transfer"]
+            if scrub > 0:
+                # tracked fraction: nominal per-hash cost x targets actually
+                # re-hashed, over the run's virtual-clock step time — fully
+                # deterministic, so the trajectory diff never sees wall noise
+                nominal = (eng.scrubbed_targets * HASH_NOMINAL_S
+                           / (steps * STEP_S))
+                overhead_frac = max(overhead_frac, nominal)
+                # same-run measured cross-check (hash cost and wall time on
+                # the same machine): reported, not trajectory-diffed
+                est = eng.scrubbed_targets * _hash_cost_s(eng)
+                measured_frac = max(measured_frac,
+                                    est / wall_s if wall_s > 0 else 0.0)
+            rows.append(
+                f"table12,integrity_rate{rate * 1000:g}m_scrub{scrub},"
+                f"{identical},"
+                f"corruptions={sp['corruptions']:.0f};"
+                f"detected={sp['detected']:.0f};"
+                f"escaped={sp['escaped']:.0f};"
+                f"read={sp['detected_read']:.0f};"
+                f"scrubbed={sp['detected_scrub']:.0f};"
+                f"transfer={sp['detected_transfer']:.0f};"
+                f"quarantined={sp['quarantined_pages']:.0f};"
+                f"recoveries={sp['integrity_recoveries']:.0f};"
+                f"coverage={sp['scrub_coverage']:.2f};steps={steps}"
+            )
+    rows.append(
+        f"table12,integrity_scrub_overhead_frac,{overhead_frac:.4f},"
+        f"nominal_hash_s={HASH_NOMINAL_S};measured_frac={measured_frac:.4f};"
+        f"budget={max(SCRUBS)}"
+    )
+
+    region = _region_arm()
+    rows.append(
+        f"table12,integrity_regions,{region['ok']:.0f},"
+        f"stale={region['stale']:.0f};detected={region['detected']:.0f};"
+        f"escaped={region['escaped']:.0f};retries={region['retries']:.0f}"
+    )
+
+    wins = int(
+        all_identical
+        and escaped == 0
+        and injected > 0
+        and tier_pages > 0                   # page tier really exercised
+        and tier_blocks_or_xfer > 0          # arena/DMA tier really exercised
+        and region["ok"] == 1 and region["stale"] > 0
+        and region["detected"] == region["stale"] and region["escaped"] == 0
+        and overhead_frac < 0.05
+    )
+    rows.append(
+        f"table12,integrity_wins,{wins},"
+        f"identical={int(all_identical)};injected={injected:.0f};"
+        f"detected={detected:.0f};escaped={escaped:.0f};"
+        f"stale_regions={region['stale']:.0f};"
+        f"scrub_overhead={overhead_frac:.4f}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -45,6 +45,8 @@ ASSERTED = (
     ("table11", "spill_wins"),
     ("table11", "serve_spill_identical"),
     ("table11", "serve_spill_faulted"),
+    ("table12", "integrity_wins"),
+    ("table12", "integrity_regions"),
 )
 
 #: deterministic metrics: current >= baseline * (1 - TOLERANCE)
@@ -57,11 +59,13 @@ TRACKED = (
     ("table8", "serve_overcommit_concurrency"),  # real-jax overcommit ratio
     ("table9", "ttft_p99_us_bursty_chunked"),    # virtual-clock p99 TTFT
     ("table11", "spill_refill_hidden_frac"),     # refill overlap with decode
+    ("table12", "integrity_scrub_overhead_frac"),  # audit cost vs wall time
 )
 
 #: tracked metrics where *lower* is better (regression = grew > tolerance)
 LOWER_IS_BETTER: set[tuple[str, str]] = {
     ("table9", "ttft_p99_us_bursty_chunked"),
+    ("table12", "integrity_scrub_overhead_frac"),
 }
 
 

@@ -68,12 +68,47 @@ class WedgedLaunch(FaultError):
     window, not the expected exec time."""
 
 
+class SilentCorruption(FaultError):
+    """Verification caught wrong bytes in trusted state.
+
+    Raised when a content digest mismatches on a sealed device KV page or a
+    host-arena block — the state the serving path would otherwise feed to
+    attention unchecked.  Recovery is the PR 7 park path: the owning slot's
+    device KV is untrusted and it resumes by re-prefill replay."""
+
+
+class CorruptPayload(InjectedTransferFault):
+    """A DMA completed but delivered wrong bytes (digest mismatch).
+
+    Unlike :class:`InjectedTransferFault` the DMA *succeeded* — the
+    corruption is only visible because the payload carries its source
+    digest.  Handled like a transfer fault: the refill/spill is discarded
+    and the request demotes to re-prefill replay."""
+
+
+class StaleRegionImage(InjectedLoadFault):
+    """A region load completed with the wrong (stale) bitstream image.
+
+    The dynamic-reconfiguration failure mode the fail-stop load fault
+    misses: ``role.load()`` returns cleanly but the region holds a previous
+    role's image.  Subclasses :class:`InjectedLoadFault` so the scheduler's
+    existing load retry (``abort_prefetch`` + reload) absorbs it before any
+    packet executes against the stale image."""
+
+
+#: silent-corruption kinds (drawn from the independent corruption stream)
+CORRUPTION_KINDS = ("flip_page", "flip_block", "corrupt_transfer",
+                    "stale_region")
+
+_FAILSTOP_KINDS = ("exec", "load", "wedge", "d2h", "h2d")
+
+
 @dataclasses.dataclass
 class FaultEvent:
     """One injected fault, stamped on the plan's clock."""
 
     t: float
-    kind: str                  # "exec" | "load" | "wedge" | "d2h" | "h2d"
+    kind: str                  # _FAILSTOP_KINDS | CORRUPTION_KINDS
     what: str                  # packet .what / role name / transfer tag
     queue: str | None = None
     permanent: bool = False
@@ -82,15 +117,34 @@ class FaultEvent:
 
 @dataclasses.dataclass
 class FaultPlan:
-    """Seeded fault schedule over launch/load attempts.
+    """Seeded fault schedule over launch/load/DMA attempts.
 
-    Rates are per-attempt probabilities drawn from one ``random.Random``:
-    a single draw per exec attempt is compared against cumulative
-    ``wedge_rate`` / ``permanent_rate`` / ``exec_rate`` thresholds (first
-    band wins), and one draw per load attempt against ``load_rate`` — so a
-    given seed produces the same fault trace regardless of which faults a
-    test cares about.  ``trace`` accumulates every injected fault as a
-    clock-stamped :class:`FaultEvent`.
+    **Draw order** (the contract scripted tests rely on):
+
+    - *Forced first.*  Every draw site consumes matching :meth:`force`
+      entries before any random draw, scanning the forced list in
+      :meth:`force` insertion order and taking the first entry whose kind
+      matches the site and whose ``what`` is ``None`` or a substring of the
+      attempt's tag.  An entry with ``count=N`` is consumed once per
+      matching attempt and removed after its N-th hit, so interleaved
+      forced kinds fire independently: ``force("exec", count=2)`` +
+      ``force("h2d")`` injects the next two exec attempts and the next
+      H2D refill, whichever order the runtime reaches them.
+    - *Fail-stop stream.*  One ``random.Random(seed)`` draw per exec
+      attempt, compared against cumulative ``wedge_rate`` /
+      ``permanent_rate`` / ``exec_rate`` bands (first band wins); one draw
+      per load attempt against ``load_rate``; one draw per DMA attempt
+      against ``transfer_rate``.  A given seed therefore produces the same
+      fail-stop trace regardless of which faults a test cares about.
+    - *Corruption stream.*  Silent-corruption draws
+      (:data:`CORRUPTION_KINDS`) come from an **independent** seeded RNG:
+      one draw per opportunity against ``corrupt_rate``, plus one target
+      draw per hit.  Enabling corruption never perturbs the fail-stop
+      schedule (and vice versa), so PR 7/8 benchmark floors survive a
+      corruption sweep with the same seed.
+
+    ``trace`` accumulates every injected fault as a clock-stamped
+    :class:`FaultEvent`.
     """
 
     seed: int = 0
@@ -99,17 +153,22 @@ class FaultPlan:
     wedge_rate: float = 0.0       # completion never fires
     permanent_rate: float = 0.0   # unretryable exec failure
     transfer_rate: float = 0.0    # D2H/H2D DMA abort (spill/refill tier)
+    corrupt_rate: float = 0.0     # silent corruption (per opportunity)
     clock: Any = None             # bound by the scheduler (bind_clock)
 
     def __post_init__(self) -> None:
         for name in ("exec_rate", "load_rate", "wedge_rate", "permanent_rate",
-                     "transfer_rate"):
+                     "transfer_rate", "corrupt_rate"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {v}")
         if self.exec_rate + self.wedge_rate + self.permanent_rate > 1.0:
             raise ValueError("exec_rate + wedge_rate + permanent_rate > 1")
         self._rng = random.Random(self.seed)
+        # str seeding hashes via sha512 (process-independent), and a
+        # distinct stream keeps corruption draws from perturbing the
+        # fail-stop schedule above.
+        self._crng = random.Random(f"corruption-{self.seed}")
         self.trace: list[FaultEvent] = []
         self._forced: list[dict[str, Any]] = []
 
@@ -132,10 +191,12 @@ class FaultPlan:
         """Script ``count`` faults of ``kind`` ("exec" | "load" | "wedge" |
         "d2h" | "h2d") against the next matching attempts (``what`` is a
         substring match on the packet's ``.what`` / role name / transfer
-        tag; None matches any).  Forced faults are consumed before any
-        random draw, so a test can hit one specific launch without touching
-        the seeded schedule."""
-        if kind not in ("exec", "load", "wedge", "d2h", "h2d"):
+        tag; None matches any).  Corruption kinds ("flip_page" |
+        "flip_block" | "corrupt_transfer" | "stale_region") are scripted
+        the same way.  Forced faults are consumed before any random draw,
+        so a test can hit one specific launch without touching the seeded
+        schedule."""
+        if kind not in _FAILSTOP_KINDS + CORRUPTION_KINDS:
             raise ValueError(f"unknown fault kind {kind!r}")
         if count < 1:
             raise ValueError(f"count must be >= 1, got {count}")
@@ -221,6 +282,35 @@ class FaultPlan:
             return InjectedTransferFault(f"{kind} transfer fault: {what}")
         return None
 
+    def draw_corruption(self, kind: str, targets: list[str], *,
+                        queue: str | None = None) -> int | None:
+        """Index of the corrupted target (or None) for one silent-corruption
+        opportunity of ``kind`` over ``targets`` (display tags).
+
+        Forced entries are consumed first (matched against each target tag
+        in order); otherwise one draw from the corruption stream against
+        ``corrupt_rate`` decides whether to corrupt, and a second draw
+        picks the target uniformly.  Returns the index into ``targets``."""
+        if kind not in CORRUPTION_KINDS:
+            raise ValueError(f"corruption kind must be one of "
+                             f"{CORRUPTION_KINDS}, got {kind!r}")
+        if not targets:
+            return None
+        for i, what in enumerate(targets):
+            if self._take_forced((kind,), what) is not None:
+                self._log(kind, what, queue, False, forced=True)
+                return i
+        if self._crng.random() < self.corrupt_rate:
+            i = self._crng.randrange(len(targets))
+            self._log(kind, targets[i], queue, False, forced=False)
+            return i
+        return None
+
+    def stale_region_hook(self, role: str) -> bool:
+        """RegionManager ``corrupt_hook`` adapter: True when this load
+        should deliver a stale (wrong) region image."""
+        return self.draw_corruption("stale_region", [role]) is not None
+
     def load_hook(self, role: str) -> None:
         """RegionManager ``fault_hook`` adapter: raise instead of return,
         matching the real failure mode (``role.load()`` raising)."""
@@ -233,5 +323,6 @@ class FaultPlan:
             f"FaultPlan(seed={self.seed}, exec={self.exec_rate}, "
             f"load={self.load_rate}, wedge={self.wedge_rate}, "
             f"permanent={self.permanent_rate}, "
-            f"transfer={self.transfer_rate}, injected={len(self.trace)})"
+            f"transfer={self.transfer_rate}, corrupt={self.corrupt_rate}, "
+            f"injected={len(self.trace)})"
         )

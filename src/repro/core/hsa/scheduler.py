@@ -186,6 +186,8 @@ class Scheduler:
             faults.bind_clock(self.clock)
             if regions.fault_hook is None:
                 regions.fault_hook = faults.load_hook
+            if regions.corrupt_hook is None:
+                regions.corrupt_hook = faults.stale_region_hook
 
         self.queues: list[Queue] = []
         self.stats: dict[str, QueueStats] = {}

@@ -103,11 +103,18 @@ REFILL = "refill"
 REFILL_EXPOSED = "refill_exposed"
 REFILL_HIDDEN = "refill_hidden"
 
+# Data integrity (silent-corruption detection).  SCRUB is host time the
+# step-driven background audit spends re-hashing cold device pages and
+# parked arena blocks — the audit-overhead numerator integrity_split()
+# grades against total step time.
+SCRUB = "scrub"
+
 CATEGORIES = (SETUP, RECONFIG, RECONFIG_EXPOSED, RECONFIG_HIDDEN, DISPATCH,
               DISPATCH_SUBMIT, DISPATCH_GRANT, DISPATCH_WAIT, EXEC, WAIT,
               PREEMPT_PARK, PREEMPT_RESUME, TTFT, TPOT,
               FAULT, RETRY, RECOVER,
-              SPILL, REFILL, REFILL_EXPOSED, REFILL_HIDDEN)
+              SPILL, REFILL, REFILL_EXPOSED, REFILL_HIDDEN,
+              SCRUB)
 
 OCCURRENCE = {
     SETUP: "once",
@@ -131,6 +138,7 @@ OCCURRENCE = {
     REFILL: "per refill",
     REFILL_EXPOSED: "per refill",
     REFILL_HIDDEN: "per refill",
+    SCRUB: "per scrub pass",
 }
 
 
@@ -191,6 +199,27 @@ class OverheadLedger:
         "host_budget_bytes": math.inf,   # inf = unbounded / no budget set
     }
 
+    _INTEGRITY_ZERO = {
+        "corruptions": 0.0,
+        "corrupt_pages": 0.0, "corrupt_blocks": 0.0,
+        "corrupt_transfers": 0.0, "stale_regions": 0.0,
+        "detected": 0.0,
+        "detected_scrub": 0.0, "detected_read": 0.0,
+        "detected_transfer": 0.0, "detected_region": 0.0,
+        "integrity_recoveries": 0.0,
+        "scrubbed_pages": 0.0, "scrubbed_blocks": 0.0,
+        "scrub_targets": 0.0,
+        "quarantined_pages": 0.0,
+        "verified_transfers": 0.0, "verified_regions": 0.0,
+        "escaped": 0.0,   # corruption that influenced a sampled token
+    }
+
+    _CORRUPTION_KEY = {
+        "flip_page": "corrupt_pages", "flip_block": "corrupt_blocks",
+        "corrupt_transfer": "corrupt_transfers",
+        "stale_region": "stale_regions",
+    }
+
     def __init__(self, keep_entries: bool = False) -> None:
         self._lock = threading.Lock()
         self._stats: dict[str, Stat] = {c: Stat() for c in CATEGORIES}
@@ -203,6 +232,7 @@ class OverheadLedger:
         self._preempt: dict[str, float] = dict(self._PREEMPT_ZERO)
         self._fault: dict[str, float] = dict(self._FAULT_ZERO)
         self._spill: dict[str, float] = dict(self._SPILL_ZERO)
+        self._integrity: dict[str, float] = dict(self._INTEGRITY_ZERO)
 
     def record(self, category: str, seconds: float, **meta: Any) -> None:
         if category not in self._stats:
@@ -294,6 +324,7 @@ class OverheadLedger:
             self._preempt = dict(self._PREEMPT_ZERO)
             self._fault = dict(self._FAULT_ZERO)
             self._spill = dict(self._SPILL_ZERO)
+            self._integrity = dict(self._INTEGRITY_ZERO)
             if self._entries is not None:
                 self._entries = []
 
@@ -543,6 +574,91 @@ class OverheadLedger:
         )
         out["mttr_s"] = (
             out["mttr_total_s"] / out["recoveries"] if out["recoveries"]
+            else 0.0
+        )
+        return out
+
+    # -- integrity accounting (silent-corruption detection) ------------------
+
+    def record_corruption(self, *, kind: str) -> None:
+        """One silent corruption injected (or observed).  ``kind`` is
+        ``"flip_page"`` | ``"flip_block"`` | ``"corrupt_transfer"`` |
+        ``"stale_region"`` — the four state tiers."""
+        key = self._CORRUPTION_KEY.get(kind)
+        if key is None:
+            raise ValueError(f"unknown corruption kind {kind!r}")
+        with self._lock:
+            self._integrity["corruptions"] += 1.0
+            self._integrity[key] += 1.0
+
+    def record_integrity_detection(self, *, via: str,
+                                   recovered: bool = False) -> None:
+        """One corruption caught by verification.  ``via`` names the
+        detection site: ``"scrub"`` (background audit), ``"read"``
+        (pre-commit page verification after a decode launch),
+        ``"transfer"`` (DMA payload digest), ``"region"`` (region-image
+        digest).  ``recovered=True`` additionally counts the park/demote
+        that healed it."""
+        if via not in ("scrub", "read", "transfer", "region"):
+            raise ValueError(f"unknown detection site {via!r}")
+        with self._lock:
+            self._integrity["detected"] += 1.0
+            self._integrity[f"detected_{via}"] += 1.0
+            if recovered:
+                self._integrity["integrity_recoveries"] += 1.0
+
+    def record_scrub(self, *, pages: int = 0, blocks: int = 0,
+                     targets: int = 0) -> None:
+        """One scrub pass: ``pages`` device pages and ``blocks`` arena
+        blocks re-hashed out of ``targets`` total auditable targets (the
+        coverage denominator; audit seconds ride the SCRUB category)."""
+        with self._lock:
+            self._integrity["scrubbed_pages"] += float(pages)
+            self._integrity["scrubbed_blocks"] += float(blocks)
+            self._integrity["scrub_targets"] += float(targets)
+
+    def record_page_quarantine(self) -> None:
+        """One device page retired from circulation after a digest
+        mismatch (the pool shrinks by one page)."""
+        with self._lock:
+            self._integrity["quarantined_pages"] += 1.0
+
+    def record_verified_transfer(self) -> None:
+        """One DMA payload digest-checked (clean or not)."""
+        with self._lock:
+            self._integrity["verified_transfers"] += 1.0
+
+    def record_verified_region(self) -> None:
+        """One region image digest-checked after a load (clean or not)."""
+        with self._lock:
+            self._integrity["verified_regions"] += 1.0
+
+    def record_escape(self) -> None:
+        """One corruption whose bytes influenced a sampled token before
+        any verification caught it — the number every integrity
+        configuration worth shipping holds at zero."""
+        with self._lock:
+            self._integrity["escaped"] += 1.0
+
+    def integrity_split(self) -> dict[str, float]:
+        """Silent-corruption counters + audit timing (the table12 view).
+
+        ``detection_rate`` is detected / injected (0.0 on a corruption-free
+        ledger, not a ZeroDivisionError — latent corruption whose page was
+        freed before any read keeps it below 1.0 without an escape).
+        ``scrub_coverage`` is targets re-hashed per pass averaged over
+        passes, 0.0 when nothing was auditable.  ``audit_s`` is SCRUB time;
+        callers grade it against their own step-time denominator."""
+        with self._lock:
+            out = dict(self._integrity)
+            out["audit_s"] = self._stats[SCRUB].total_s
+            out["scrub_passes"] = float(self._stats[SCRUB].count)
+        scanned = out["scrubbed_pages"] + out["scrubbed_blocks"]
+        out["scrub_coverage"] = (
+            scanned / out["scrub_targets"] if out["scrub_targets"] else 0.0
+        )
+        out["detection_rate"] = (
+            out["detected"] / out["corruptions"] if out["corruptions"]
             else 0.0
         )
         return out

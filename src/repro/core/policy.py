@@ -566,6 +566,65 @@ class RetryPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class IntegrityPolicy:
+    """When and how the serving path verifies the bytes it trusts.
+
+    The fault layer (PR 7) covers *fail-stop* faults — a launch that errors
+    or wedges.  This policy covers the quieter failure mode: state that is
+    silently wrong.  Four tiers are verifiable — device KV pages (digest
+    stamped at every write boundary), host-arena blocks (digest stamped at
+    ``store()``), DMA payloads (digest carried on the transfer), and loaded
+    region images.  Each knob gates one verification site:
+
+    - ``verify_reads``: after every decode launch, re-hash the sealed pages
+      the attention kernel just read and park any slot whose pages mismatch
+      *before* its tokens commit.  This is the structural zero-escape
+      guarantee — corruption is caught before it influences a sampled token.
+    - ``verify_transfers``: check the payload digest on every H2D refill at
+      ``wait()`` and every D2H spill at ``issue()`` (spills complete at
+      issue; they are never waited).
+    - ``verify_regions``: check the region-image digest after every
+      reconfiguration load and again at ``complete_prefetch``, so a stale
+      image is caught before any packet executes against it.
+    - ``scrub_pages_per_step``: budgeted background audit — re-hash up to
+      this many cold targets (sealed device pages + parked arena blocks,
+      round-robin cursor) per engine step.  Scrubbing does not change what
+      escapes (the read/transfer/region checks already bound that at zero);
+      it bounds *detection latency*, so a corrupted parked snapshot is
+      demoted before the engine wastes a refill on it.  0 disables.
+
+    Passing ``integrity=None`` to the engine skips the whole layer — no
+    digests, no hashing, bit-for-bit the pre-integrity hot path.
+    """
+
+    scrub_pages_per_step: int = 0
+    verify_transfers: bool = True
+    verify_regions: bool = True
+    verify_reads: bool = True
+
+    def __post_init__(self):
+        if self.scrub_pages_per_step < 0:
+            raise ValueError(
+                f"scrub_pages_per_step must be >= 0, got {self.scrub_pages_per_step}")
+
+    @classmethod
+    def of(cls, value: "IntegrityPolicy | bool | None") -> "IntegrityPolicy | None":
+        """Normalize an engine-constructor argument.
+
+        ``None``/``False`` → disabled (``None``); ``True`` → all
+        verification on with scrubbing off; an ``IntegrityPolicy`` passes
+        through.
+        """
+        if value is None or value is False:
+            return None
+        if value is True:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        raise TypeError(f"expected IntegrityPolicy, bool, or None, got {value!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class Invocation:
     """One op call site in a model step: (op type, site id e.g. layer index)."""
 

@@ -28,8 +28,9 @@ pressure; pinned roles are never evicted.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import OrderedDict
-from typing import AbstractSet, Callable, Iterator, Mapping
+from typing import AbstractSet, Any, Callable, Iterator, Mapping
 
 from repro.core import ledger as ledger_mod
 from repro.core.ledger import GLOBAL_LEDGER, OverheadLedger
@@ -76,6 +77,22 @@ class ResidencyResult:
     reconfig_s: float = 0.0
 
 
+def region_image_digest(role: Role) -> bytes:
+    """Digest identifying the bitstream image that *should* occupy a region
+    after loading ``role`` — the reconfiguration analogue of a page digest.
+    Derived from the role's identity (name, key, source): the simulation's
+    stand-in for hashing the partial bitstream itself."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((role.name, role.key, role.source)).encode())
+    return h.digest()
+
+
+def _stale_image_digest(expected: bytes) -> bytes:
+    """What a stale/corrupted load leaves in the region: definitely not
+    ``expected``."""
+    return hashlib.blake2b(b"stale:" + expected, digest_size=16).digest()
+
+
 class RegionManager:
     """LRU-managed residency over ``num_regions`` slots.
 
@@ -88,6 +105,8 @@ class RegionManager:
         num_regions: int,
         *,
         ledger: OverheadLedger = GLOBAL_LEDGER,
+        corrupt_hook: Callable[[str], bool] | None = None,
+        verify_images: bool = True,
     ) -> None:
         if num_regions < 1:
             raise ValueError("need at least one region")
@@ -98,6 +117,17 @@ class RegionManager:
         # attempt; raising (FaultError) models the load aborting mid-flight
         # (see repro.core.hsa.faults.FaultPlan.load_hook)
         self.fault_hook: Callable[[str], None] | None = None
+        # silent-corruption injection: called with the role name after a
+        # load completes; True means the region received a stale image
+        # (see FaultPlan.stale_region_hook)
+        self.corrupt_hook = corrupt_hook
+        # verify the region-image digest after every load (and again at
+        # complete_prefetch) so a stale reconfiguration is caught before
+        # any packet executes against it; IntegrityPolicy.verify_regions
+        # turns this off for escape-accounting experiments
+        self.verify_images = verify_images
+        self._image_digests: dict[RoleKey, bytes] = {}
+        self._escape_reported: set[RoleKey] = set()
         self._resident: "OrderedDict[RoleKey, Role]" = OrderedDict()  # LRU: oldest first
         self._pinned: set[RoleKey] = set()
         self._prefetching: dict[RoleKey, Role] = {}   # speculative loads in flight
@@ -128,6 +158,7 @@ class RegionManager:
                 self._resident.move_to_end(key)
                 self.stats.hits += 1
                 self._note_use(key)
+                self._note_image_use(role)
                 return ResidencyResult(role=role, hit=True)
 
             self.stats.misses += 1
@@ -145,6 +176,9 @@ class RegionManager:
             dt = self._load(role, queue=queue, evicted=evicted, prefetch=False)
             self._resident[key] = role
             self._note_use(key)
+            # the demanding packet executes against this image next — with
+            # verification off, a stale load escapes right here
+            self._note_image_use(role)
             return ResidencyResult(role=role, hit=False, evicted=evicted, reconfig_s=dt)
 
     def touch(self, key: RoleKey) -> bool:
@@ -213,6 +247,18 @@ class RegionManager:
             role = self._prefetching.pop(key, None)
             if role is None:
                 return False
+            if self.verify_images:
+                # re-check the image that sat in the region while the
+                # prefetch was in flight — a stale image is dropped like an
+                # aborted prefetch (demand reloads, and re-verifies)
+                expected = region_image_digest(role)
+                if self._image_digests.get(key, expected) != expected:
+                    role.unload()
+                    self._release(key)
+                    self._image_digests.pop(key, None)
+                    self.stats.prefetch_wasted += 1
+                    self.ledger.record_integrity_detection(via="region")
+                    return False
             self._resident[key] = role
             self._resident.move_to_end(key)
             if fresh:
@@ -226,6 +272,7 @@ class RegionManager:
             if role is not None:
                 role.unload()
                 self._release(key)
+                self._image_digests.pop(key, None)
                 self.stats.prefetch_wasted += 1
 
     def note_prefetch_join(self, key: RoleKey) -> None:
@@ -262,6 +309,28 @@ class RegionManager:
             ledger_mod.RECONFIG, dt, role=role.name, evicted=str(evicted),
             source=role.source, queue=queue, prefetch=prefetch,
         )
+        # the load returned cleanly — but did the region receive the right
+        # image?  The corrupt hook models a stale/corrupted partial
+        # bitstream surviving the DMA; verification catches it here, before
+        # the role is ever published as resident/prefetched.
+        expected = region_image_digest(role)
+        loaded = expected
+        if self.corrupt_hook is not None and self.corrupt_hook(role.name):
+            loaded = _stale_image_digest(expected)
+            self.ledger.record_corruption(kind="stale_region")
+        if self.verify_images:
+            self.ledger.record_verified_region()
+            if loaded != expected:
+                # deferred import: repro.core.hsa pulls the scheduler, which
+                # imports this module back — resolvable only at call time
+                from repro.core.hsa.faults import StaleRegionImage
+                role.unload()
+                self.ledger.record_integrity_detection(via="region")
+                raise StaleRegionImage(
+                    f"stale region image after load: {role.name}"
+                )
+        self._image_digests[role.key] = loaded
+        self._escape_reported.discard(role.key)
         return dt
 
     def _note_use(self, key: RoleKey) -> None:
@@ -269,6 +338,19 @@ class RegionManager:
             self._fresh.discard(key)
             self.stats.prefetch_hits += 1
         self._release(key)
+
+    def _note_image_use(self, role: Role) -> None:
+        """With verification off, a demand hit on a stale image is the
+        moment corruption escapes (a packet is about to execute against
+        the wrong bitstream); count it once per stale load."""
+        if self.verify_images:
+            return
+        key = role.key
+        stored = self._image_digests.get(key)
+        if (stored is not None and key not in self._escape_reported
+                and stored != region_image_digest(role)):
+            self._escape_reported.add(key)
+            self.ledger.record_escape()
 
     def _release(self, key: RoleKey) -> None:
         n = self._reserved.get(key, 0)
@@ -328,6 +410,8 @@ class RegionManager:
             return None
         victim = self._resident.pop(victim_key)
         victim.unload()
+        self._image_digests.pop(victim_key, None)
+        self._escape_reported.discard(victim_key)
         self.stats.evictions += 1
         if self._reserved.pop(victim_key, 0) or victim_key in self._fresh:
             self._fresh.discard(victim_key)
@@ -357,6 +441,8 @@ class RegionManager:
             self._pinned.clear()
             self._reserved.clear()
             self._fresh.clear()
+            self._image_digests.clear()
+            self._escape_reported.clear()
 
     @property
     def pinned_count(self) -> int:
@@ -402,6 +488,14 @@ class Transfer:
     duration_s: float = 0.0
     error: Exception | None = None
     waited: bool = False
+    # integrity: the payload tree riding the DMA and its source digest.
+    # A corrupt_transfer draw replaces ``payload`` with a byte-flipped
+    # *copy* (the source tier keeps its clean bytes) and sets
+    # ``corrupted`` — the engine's ground truth for escape accounting
+    # when verification is off.
+    payload: Any = None
+    digest: bytes | None = None
+    corrupted: bool = False
 
 
 class TransferEngine:
@@ -432,7 +526,8 @@ class TransferEngine:
 
     def __init__(self, *, bandwidth_bytes_s: float = 8e9,
                  clock=None, ledger: OverheadLedger = GLOBAL_LEDGER,
-                 faults=None, fault_backoff_s: float = 1e-3) -> None:
+                 faults=None, fault_backoff_s: float = 1e-3,
+                 integrity=None) -> None:
         if bandwidth_bytes_s <= 0:
             raise ValueError(
                 f"bandwidth_bytes_s must be > 0, got {bandwidth_bytes_s}"
@@ -449,6 +544,7 @@ class TransferEngine:
         self.ledger = ledger
         self.faults = faults
         self.fault_backoff_s = fault_backoff_s
+        self.integrity = integrity   # IntegrityPolicy | None
         if faults is not None:
             faults.bind_clock(clock)
         self._free_t = clock.now()
@@ -458,12 +554,19 @@ class TransferEngine:
         self.cancelled = 0
         self.bytes_moved = 0
 
-    def issue(self, kind: str, what: str, nbytes: int) -> Transfer:
+    def issue(self, kind: str, what: str, nbytes: int, *,
+              payload: Any = None, digest: bytes | None = None) -> Transfer:
         """Queue one transfer on the engine timeline; returns immediately.
 
         The transfer's ``ready_t`` accounts for the engine being busy with
         earlier transfers.  On an injected fault the engine backs off and
-        the returned transfer carries ``error`` instead of a timeline."""
+        the returned transfer carries ``error`` instead of a timeline.
+
+        ``payload``/``digest`` ride the transfer for the integrity layer: a
+        ``corrupt_transfer`` draw byte-flips a *copy* of the payload (the
+        source tier stays clean), and — when ``integrity.verify_transfers``
+        — a d2h payload is digest-checked here at issue (spills complete at
+        issue and are never waited), an h2d payload at :meth:`wait`."""
         if kind not in ("d2h", "h2d"):
             raise ValueError(f"transfer kind must be d2h|h2d, got {kind!r}")
         if nbytes < 0:
@@ -486,11 +589,39 @@ class TransferEngine:
         self._free_t = ready
         self.issued += 1
         self.bytes_moved += nbytes
+        xfer = Transfer(kind, what, nbytes, start, ready, dur,
+                        payload=payload, digest=digest)
+        if (self.faults is not None and payload is not None
+                and self.faults.draw_corruption(
+                    "corrupt_transfer", [what]) is not None):
+            from repro.serve.paged import flip_tree
+            xfer.payload = flip_tree(payload)
+            xfer.corrupted = True
+            self.ledger.record_corruption(kind="corrupt_transfer")
         if kind == "d2h":
             self.completed += 1          # never waited: done at ready_t
             self.ledger.record(ledger_mod.SPILL, dur, what=what)
             self.ledger.record_spill(nbytes=nbytes)
-        return Transfer(kind, what, nbytes, start, ready, dur)
+            err = self._verify_payload(xfer)
+            if err is not None:
+                xfer.error = err
+        return xfer
+
+    def _verify_payload(self, xfer: Transfer) -> Exception | None:
+        """Digest-check a transfer's delivered payload; returns the
+        :class:`CorruptPayload` to surface (None = clean or unverifiable)."""
+        if (self.integrity is None or not self.integrity.verify_transfers
+                or xfer.payload is None or xfer.digest is None):
+            return None
+        self.ledger.record_verified_transfer()
+        from repro.serve.paged import tree_digest
+        if tree_digest(xfer.payload) == xfer.digest:
+            return None
+        from repro.core.hsa.faults import CorruptPayload
+        self.ledger.record_integrity_detection(via="transfer")
+        return CorruptPayload(
+            f"{xfer.kind} payload digest mismatch: {xfer.what}"
+        )
 
     def wait(self, xfer: Transfer) -> float:
         """Block on a refill until its DMA completes; returns the *exposed*
@@ -498,7 +629,11 @@ class TransferEngine:
 
         Records the refill's duration plus its exposed/hidden attribution;
         waiting twice on the same transfer is a hard error (the bytes were
-        already consumed)."""
+        already consumed).  When the engine carries an
+        ``IntegrityPolicy(verify_transfers=True)``, the delivered payload
+        is digest-checked after the DMA completes — a mismatch raises
+        :class:`CorruptPayload` (the time was spent; the bytes are not
+        trusted)."""
         if xfer.error is not None:
             raise xfer.error
         if xfer.waited:
@@ -518,6 +653,10 @@ class TransferEngine:
             self.ledger.record(ledger_mod.REFILL_HIDDEN, hidden,
                                what=xfer.what)
             self.ledger.record_refill(nbytes=xfer.nbytes)
+            err = self._verify_payload(xfer)
+            if err is not None:
+                xfer.error = err
+                raise err
         return exposed
 
     def cancel(self, xfer: Transfer) -> None:

@@ -33,13 +33,14 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core import ledger as ledger_mod
 from repro.core.hsa.clock import WallClock
-from repro.core.hsa.faults import FaultError
+from repro.core.hsa.faults import CorruptPayload, FaultError, SilentCorruption
 from repro.core.policy import (
     RESUME_REPREFILL,
     RESUME_SNAPSHOT,
     AdmissionPolicy,
     ChunkPolicy,
     FusionPolicy,
+    IntegrityPolicy,
     PreemptionCandidate,
     PreemptionPolicy,
     RetryPolicy,
@@ -303,7 +304,8 @@ class ServeEngine:
                  host_budget_bytes: int | None = None,
                  spill: "SpillPolicy | None" = None,
                  faults=None,
-                 transfer_bandwidth_bytes_s: float = 8e9):
+                 transfer_bandwidth_bytes_s: float = 8e9,
+                 integrity: "IntegrityPolicy | bool | None" = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -440,6 +442,27 @@ class ServeEngine:
         self.spill = SpillPolicy.of(spill)
         self.host_budget_bytes = host_budget_bytes
         self.faults = faults
+        # -- integrity layer (silent-corruption detection) ------------------
+        # digests stamped at write boundaries, verified at read/transfer/
+        # region boundaries, budget-scrubbed in the background.  None keeps
+        # the hot path bit-for-bit free of hashing.
+        self.integrity = IntegrityPolicy.of(integrity)
+        if self.integrity is not None and not paged:
+            raise ValueError("integrity requires paged=True "
+                             "(digests are page-granular)")
+        self._page_digests: dict[int, bytes] = {}   # sealed page -> digest
+        self._scrub_cursor = 0
+        # injected-but-undetected corruption, the escape-accounting ground
+        # truth: device pages (page -> owner uid), tainted arena entries,
+        # and slots restored from tainted/corrupted payloads
+        self._live_corrupt_pages: dict[int, int] = {}
+        self._tainted_uids: set[int] = set()
+        self._tainted_slots: set[int] = set()
+        self.corruptions_injected = 0
+        self.corruptions_detected = 0
+        self.pages_quarantined = 0
+        self.escaped_corruptions = 0
+        self.scrubbed_targets = 0
         if paged:
             self.arena = paged_mod.HostArena(host_budget_bytes)
             self._xfer = TransferEngine(
@@ -448,6 +471,7 @@ class ServeEngine:
                 ledger=(self.ledger if self.ledger is not None
                         else ledger_mod.GLOBAL_LEDGER),
                 faults=faults,
+                integrity=self.integrity,
             )
             if hsa_scheduler is not None and hasattr(
                     hsa_scheduler, "register_refill_source"):
@@ -682,9 +706,227 @@ class ServeEngine:
         pages = [int(p) for p in self._table[slot, : int(self._mapped[slot])]]
         if pages:
             self.allocator.free(req.uid, pages)
+            for p in pages:
+                # a freed page's digest dies with its contents (the next
+                # owner re-stamps); an undetected corruption on it never
+                # influenced a token — latent, not escaped
+                self._page_digests.pop(p, None)
+                self._live_corrupt_pages.pop(p, None)
+        self._tainted_slots.discard(slot)
         self._table[slot] = paged_mod.TRASH_PAGE
         self._mapped[slot] = 0
         self._projected.pop(slot, None)
+
+    # -- integrity: digests, scrubbing, corruption injection ------------------
+
+    def _sealed_pages(self, slot: int, rows: int) -> list[int]:
+        """Pages of ``slot`` whose every row is final at ``rows`` written
+        rows.  The trailing partial page is still being appended to by
+        decode, so it is never digested (its hash would be stale one step
+        later) and never an injection target (corrupting rows that a later
+        write overwrites anyway proves nothing)."""
+        full = rows // self.page_size
+        return [int(p) for p in self._table[slot, :full]]
+
+    def _seal_slot_pages(self, slot: int, rows: int) -> None:
+        """Stamp content digests on every sealed page of ``slot``.
+
+        Called at each write boundary — prefill scatter, chunk scatter,
+        decode commit, snapshot restore — so `_page_digests` always reflects
+        the bytes a correct execution would hold."""
+        if self.integrity is None:
+            return
+        segments = self._cache["segments"]
+        for p in self._sealed_pages(slot, rows):
+            # a sealed page's rows are final until the page is freed (and
+            # the digest dies with it in _release_slot), so an existing
+            # stamp is already correct — re-hashing would only launder an
+            # injected flip into a "clean" digest
+            if p not in self._page_digests:
+                self._page_digests[p] = paged_mod.page_digest(segments, p)
+
+    def _inject_corruption(self) -> None:
+        """Seeded in-place bit flips on cold state, drawn once per step.
+
+        Device-page flips target sealed pages of live slots; arena-block
+        flips target parked snapshots.  Both record the page/uid so the
+        engine itself can account an *escape* if undetected bytes ever
+        reach a sampled token — the zero-escape assertion is honest, not
+        tautological.  Injection runs regardless of ``integrity`` (that is
+        how a verification-off run proves escapes actually happen)."""
+        if self.faults is None or not self.paged or self._cache is None:
+            return
+        # device pages: sealed pages across active + fully-scattered chunk
+        # rows.  Pages already corrupt are excluded — a second XOR flip would
+        # restore the original bytes, silently un-corrupting the target and
+        # leaving the escape accounting pointing at clean state.
+        targets: list[tuple[int, int]] = []  # (slot, page)
+        for slot in self._active:
+            for p in self._sealed_pages(slot, int(self._pos[slot])):
+                if p not in self._live_corrupt_pages:
+                    targets.append((slot, p))
+        for slot, entry in self._prefilling.items():
+            for p in self._sealed_pages(slot, min(entry.filled, entry.n)):
+                if p not in self._live_corrupt_pages:
+                    targets.append((slot, p))
+        if targets:
+            i = self.faults.draw_corruption(
+                "flip_page", [f"page[{p}]" for _, p in targets]
+            )
+            if i is not None:
+                _, page = targets[i]
+                self._cache["segments"] = paged_mod.flip_page(
+                    self._cache["segments"], page
+                )
+                uid = self.allocator.owner_of(page)
+                self._live_corrupt_pages[page] = uid if uid is not None else -1
+                self.corruptions_injected += 1
+                if self.ledger is not None:
+                    self.ledger.record_corruption(kind="flip_page")
+        # arena blocks: parked snapshots spilled to host
+        uids = [u for u in self.arena.entries()
+                if self.arena.load(u) is not None
+                and u not in self._tainted_uids]
+        if uids:
+            i = self.faults.draw_corruption(
+                "flip_block", [f"block[uid={u}]" for u in uids]
+            )
+            if i is not None:
+                uid = uids[i]
+                self.arena.corrupt(uid)
+                self._tainted_uids.add(uid)
+                self.corruptions_injected += 1
+                if self.ledger is not None:
+                    self.ledger.record_corruption(kind="flip_block")
+
+    def _scrub_step(self) -> None:
+        """Budgeted background audit: re-hash up to ``scrub_pages_per_step``
+        cold targets (sealed device pages round-robin, then parked arena
+        blocks) against their stamped digests.  A mismatch quarantines the
+        page and forces the owner through RESUME_REPREFILL — the same
+        recovery lane as a PR 7 engine fault, so completed streams stay
+        bitwise-identical to corruption-free runs."""
+        if self.integrity is None or self.integrity.scrub_pages_per_step <= 0:
+            return
+        budget = self.integrity.scrub_pages_per_step
+        t0 = self.clock.now()
+        segments = self._cache["segments"] if self._cache is not None else None
+        pages = sorted(self._page_digests)
+        scanned_pages = 0
+        bad: list[int] = []
+        if pages and segments is not None:
+            k = min(budget, len(pages))
+            start = self._scrub_cursor % len(pages)
+            scan = [pages[(start + j) % len(pages)] for j in range(k)]
+            self._scrub_cursor = (start + k) % len(pages)
+            for p in scan:
+                scanned_pages += 1
+                if paged_mod.page_digest(segments, p) != self._page_digests[p]:
+                    bad.append(p)
+            budget -= k
+        scanned_blocks = 0
+        bad_uids: list[int] = []
+        if budget > 0:
+            for uid in self.arena.entries():
+                if budget <= 0:
+                    break
+                if self.arena.digest_of(uid) is None:
+                    continue
+                scanned_blocks += 1
+                budget -= 1
+                if not self.arena.verify(uid):
+                    bad_uids.append(uid)
+        self.scrubbed_targets += scanned_pages + scanned_blocks
+        if self.ledger is not None:
+            self.ledger.record_scrub(
+                pages=scanned_pages, blocks=scanned_blocks,
+                targets=len(pages) + len(self.arena.entries()),
+            )
+            self.ledger.record("scrub", max(0.0, self.clock.now() - t0))
+        for p in bad:
+            slot = next(
+                (s for s in list(self._active) + list(self._prefilling)
+                 if p in {int(q) for q in
+                          self._table[s, : int(self._mapped[s])]}),
+                None,
+            )
+            self._handle_corrupt_pages(slot, [p], via="scrub")
+        for uid in bad_uids:
+            self.corruptions_detected += 1
+            self._tainted_uids.discard(uid)
+            if self.ledger is not None:
+                self.ledger.record_integrity_detection(
+                    via="scrub", recovered=True
+                )
+            entry = next(
+                (e for e in self._parked if e.req.uid == uid), None
+            )
+            if entry is not None:
+                self._demote_entry(entry)
+            elif self.arena.holds(uid):
+                self.arena.discard(uid)
+
+    def _handle_corrupt_pages(self, slot: int | None, pages: list[int],
+                              *, via: str) -> None:
+        """Quarantine ``pages`` and re-prefill their owner from the prompt.
+
+        Order matters: park/release first (pages go back to the free list),
+        *then* quarantine pulls them out of circulation — the allocator only
+        quarantines free pages, keeping the tiling invariant checkable.
+        The owner's device KV is untrusted wholesale (one bad page taints
+        the slot), so recovery forces ``RESUME_REPREFILL`` exactly like a
+        PR 7 engine fault; position-indexed sampling then replays the
+        committed tokens bitwise-identically."""
+        err = SilentCorruption(
+            f"digest mismatch on page(s) {pages} (via {via})"
+        )
+        for p in pages:
+            self._live_corrupt_pages.pop(p, None)
+            self._page_digests.pop(p, None)
+        if slot is not None and slot in self._active:
+            req = self._active[slot]
+            req.fault_recoveries += 1
+            if (self.retry is not None
+                    and req.fault_recoveries
+                    > self.retry.max_request_recoveries):
+                self._active.pop(slot)
+                self._release_slot(slot, req)
+                self._fail_request(req, err)
+            else:
+                self._park_slot(slot, mode=RESUME_REPREFILL,
+                                fault_t=self.clock.now())
+        elif slot is not None and slot in self._prefilling:
+            if self.retry is not None:
+                self._abort_prefill_to_queue(slot, err)
+            else:
+                entry = self._prefilling.pop(slot)
+                self._release_slot(slot, entry.req)
+                entry.req.fault_recoveries += 1
+                idx = next(
+                    (i for i, r in enumerate(self._queue)
+                     if r.uid > entry.req.uid),
+                    len(self._queue),
+                )
+                self._queue.insert(idx, entry.req)
+        for p in pages:
+            self.corruptions_detected += 1
+            if self.ledger is not None:
+                self.ledger.record_integrity_detection(
+                    via=via, recovered=True
+                )
+            try:
+                self.allocator.quarantine(p)
+            except ValueError:
+                continue  # freed page already re-allocated this step
+            self.pages_quarantined += 1
+            if self.ledger is not None:
+                self.ledger.record_page_quarantine()
+
+    def _record_escape(self, n: int = 1) -> None:
+        self.escaped_corruptions += n
+        if self.ledger is not None:
+            for _ in range(n):
+                self.ledger.record_escape()
 
     # -- preemption: park / resume lifecycle ----------------------------------
 
@@ -834,30 +1076,50 @@ class ServeEngine:
             # engine's abort/backoff and demotes this entry to replay.
             x = entry.refill
             if x is None:
-                x = self._xfer.issue(
-                    "h2d", f"kv[uid={req.uid}]", self.arena.bytes_of(req.uid)
-                )
+                x = self._issue_refill(req.uid)
             if x.error is not None:
                 self.transfer_faults += 1
                 self._demote_entry(entry)       # falls through to replay
             else:
-                self._xfer.wait(x)
-                entry.refill = None
-                snapshot = self.arena.take(req.uid)
-                self.refills += 1
-                n = paged_mod.pages_for(entry.pos, self.page_size)
-                pages = self.allocator.allocate(req.uid, n)
-                self._table[slot] = paged_mod.TRASH_PAGE
-                self._table[slot, :n] = pages
-                self._mapped[slot] = n
-                self._cache["segments"] = paged_mod.restore_pages(
-                    self._cache["segments"], snapshot, np.asarray(pages)
-                )
-                self._pos[slot] = entry.pos
-                self._projected[slot] = self._projected_pages(req)
-                self._slot_key[slot] = np.asarray(
-                    jax.random.fold_in(self._base_key, req.uid)
-                )
+                try:
+                    self._xfer.wait(x)
+                except CorruptPayload:
+                    # the refill delivered wrong bytes (arena rot or DMA
+                    # corruption caught by the payload digest): the host
+                    # copy is untrusted — demote to replay, stream unharmed
+                    self.transfer_faults += 1
+                    self.corruptions_detected += 1
+                    self._tainted_uids.discard(req.uid)
+                    self._demote_entry(entry)
+                else:
+                    entry.refill = None
+                    if x.payload is not None:
+                        # the DMA's delivered bytes (corrupted or not, when
+                        # verification is off) are what lands on device
+                        snapshot = x.payload
+                        self.arena.discard(req.uid)
+                    else:
+                        snapshot = self.arena.take(req.uid)
+                    self.refills += 1
+                    n = paged_mod.pages_for(entry.pos, self.page_size)
+                    pages = self.allocator.allocate(req.uid, n)
+                    self._table[slot] = paged_mod.TRASH_PAGE
+                    self._table[slot, :n] = pages
+                    self._mapped[slot] = n
+                    self._cache["segments"] = paged_mod.restore_pages(
+                        self._cache["segments"], snapshot, np.asarray(pages)
+                    )
+                    self._pos[slot] = entry.pos
+                    self._projected[slot] = self._projected_pages(req)
+                    self._slot_key[slot] = np.asarray(
+                        jax.random.fold_in(self._base_key, req.uid)
+                    )
+                    self._seal_slot_pages(slot, entry.pos)
+                    if x.corrupted or req.uid in self._tainted_uids:
+                        # verification off: garbage was restored — remember
+                        # it so the commit path can count the escape
+                        self._tainted_uids.discard(req.uid)
+                        self._tainted_slots.add(slot)
         if entry.mode == RESUME_REPREFILL:
             # re-prefill + replay: recompute the prompt cache (bitwise equal
             # to the original prefill — same fn, same inputs), rewind the
@@ -937,9 +1199,22 @@ class ServeEngine:
                 )
             self._count_demotion(bytes_freed=0, replay_tokens=pos)
             return False
-        x = self._xfer.issue("d2h", f"kv[uid={uid}]", nbytes)
+        digest = None
+        payload = None
+        if self.integrity is not None:
+            # stamp the content digest at the write boundary (before the
+            # DMA), so corruption in the transfer *or* in the arena is
+            # caught by any later check against this digest
+            digest = paged_mod.tree_digest(snapshot)
+            payload = snapshot
+        x = self._xfer.issue("d2h", f"kv[uid={uid}]", nbytes,
+                             payload=payload, digest=digest)
         if x.error is not None:
             self.transfer_faults += 1
+            if isinstance(x.error, CorruptPayload):
+                # the spill's payload digest failed at issue: the host copy
+                # is wrong — degrading to replay keeps only trusted state
+                self.corruptions_detected += 1
             if not self.spill.allow_replay:
                 raise x.error
             self._count_demotion(bytes_freed=0, replay_tokens=pos)
@@ -971,9 +1246,28 @@ class ServeEngine:
                 self._demote_entry(
                     next(e for e in self._parked if e.req.uid == v_uid)
                 )
-        arena.store(uid, snapshot, nbytes)
+        # store what the DMA *delivered* (a corrupt_transfer draw with
+        # verification off hands back flipped bytes) under the pre-transfer
+        # digest — exactly the mismatch a scrub or refill check catches
+        stored = x.payload if x.payload is not None else snapshot
+        arena.store(uid, stored, nbytes, digest=digest)
+        if x.corrupted:
+            self._tainted_uids.add(uid)
         self.spills += 1
         return True
+
+    def _issue_refill(self, uid: int):
+        """Issue the H2D refill for ``uid``'s arena entry, threading the
+        stored payload + its store-time digest through the transfer so the
+        DMA completion can verify what it delivered."""
+        payload = digest = None
+        if self.integrity is not None:
+            payload = self.arena.load(uid)
+            digest = self.arena.digest_of(uid)
+        return self._xfer.issue(
+            "h2d", f"kv[uid={uid}]", self.arena.bytes_of(uid),
+            payload=payload, digest=digest,
+        )
 
     def _demote_entry(self, entry: _Parked) -> None:
         """Demote one parked snapshot to re-prefill replay: its arena bytes
@@ -982,6 +1276,9 @@ class ServeEngine:
         restoring them."""
         uid = entry.req.uid
         freed = self.arena.discard(uid) if self.arena.holds(uid) else 0
+        # a tainted (corrupted-in-arena) entry demoted to replay never
+        # restores its bytes: the corruption is gone with the blocks
+        self._tainted_uids.discard(uid)
         if entry.refill is not None:
             self._xfer.cancel(entry.refill)
             entry.refill = None
@@ -1018,9 +1315,7 @@ class ServeEngine:
             uid = entry.req.uid
             if not self.arena.holds(uid):
                 continue
-            x = self._xfer.issue(
-                "h2d", f"kv[uid={uid}]", self.arena.bytes_of(uid)
-            )
+            x = self._issue_refill(uid)
             if x.error is not None:
                 self.transfer_faults += 1
                 self._demote_entry(entry)
@@ -1228,6 +1523,7 @@ class ServeEngine:
                 jnp.asarray(pages, jnp.int32), self.page_size,
             )
             self._pos[slot] = len(req.prompt)
+            self._seal_slot_pages(slot, len(req.prompt))
             return
         if self._cache is None:
             # allocate the batched cache (batch axis 1 under the layer stack)
@@ -1342,6 +1638,7 @@ class ServeEngine:
                 jnp.asarray(self._table[slot], jnp.int32), start, count,
                 self.page_size,
             )
+            self._seal_slot_pages(slot, min(start + size, entry.n))
         entry.filled += size
         if entry.filled >= b:
             self._finish_chunked(slot, entry, logits)
@@ -1555,6 +1852,11 @@ class ServeEngine:
 
     def _step_locked(self) -> list[Request]:
         self._first_this_step = []
+        # integrity: draw this step's corruption injections on the pre-step
+        # state, then spend the scrub budget — detections park their owners
+        # before any launch can read the bad bytes
+        self._inject_corruption()
+        self._scrub_step()
         chunked = self.chunk_policy is not None
         prefill_tokens = 0
         for slot in range(self.slots):
@@ -1716,6 +2018,15 @@ class ServeEngine:
                 # on-demand growth, launch-granular: map through the last
                 # position this launch can write for the slot (funded above)
                 self._grow_to(slot, self._launch_pages(slot, req, k))
+        # integrity: the sealed pages this launch will read, captured at
+        # pre-launch positions — decode writes only the unsealed tail, so
+        # any post-launch digest mismatch on these is silent corruption
+        sealed_before: dict[int, list[int]] = {}
+        if self.paged:
+            sealed_before = {
+                slot: self._sealed_pages(slot, int(self._pos[slot]))
+                for slot in self._active
+            }
         tbl = self._table if self.paged else None
         if self.paged and self._prefilling:
             # a mid-prefill slot already has real pages mapped, but it is not
@@ -1739,6 +2050,34 @@ class ServeEngine:
         except FaultError as e:
             self._recover_decode_fault(e)
             return []
+        # -- pre-commit read verification: re-hash the sealed pages this
+        # launch read against their stamped digests in the *new* segments.
+        # A mismatch parks the owner at its pre-launch state before the
+        # wholesale position/token commit below — corrupt bytes never
+        # influence a committed token, which is what makes the zero-escape
+        # assertion structural rather than probabilistic ---------------------
+        if self.paged:
+            verify = (self.integrity is not None
+                      and self.integrity.verify_reads)
+            corrupt_slots: dict[int, list[int]] = {}
+            for slot in list(self._active):
+                bad: list[int] = []
+                for p in sealed_before.get(slot, ()):
+                    if verify and p in self._page_digests:
+                        if (paged_mod.page_digest(segments, p)
+                                != self._page_digests[p]):
+                            bad.append(p)
+                    elif p in self._live_corrupt_pages:
+                        # verification off: this launch consumed known-bad
+                        # bytes — the token about to commit is divergent
+                        self._live_corrupt_pages.pop(p)
+                        self._record_escape()
+                if bad:
+                    corrupt_slots[slot] = bad
+            for slot in sorted(corrupt_slots):
+                self._handle_corrupt_pages(
+                    slot, corrupt_slots[slot], via="read"
+                )
         self._cache = {"segments": segments}
         self._pos = np.asarray(pos, np.int64)
         self._slot_tok = np.asarray(tok, np.int32).copy()
@@ -1747,6 +2086,11 @@ class ServeEngine:
 
         finished = []
         for slot, req in list(self._active.items()):
+            if slot in self._tainted_slots:
+                # restored from a corrupted payload with verification off:
+                # the stream is divergent from the first post-restore commit
+                self._tainted_slots.discard(slot)
+                self._record_escape()
             req.generated.extend(int(t) for t in toks[valid[:, slot], slot])
             if req.replay is not None:
                 # re-prefill resume in flight: the regenerated stream must
@@ -1767,6 +2111,11 @@ class ServeEngine:
                 if self.paged:
                     self._release_slot(slot, req)
                 del self._active[slot]
+        # stamp digests on pages this launch filled (write boundary: decode
+        # page-crossing commit) — survivors only; finished slots released
+        if self.paged and self.integrity is not None:
+            for slot in self._active:
+                self._seal_slot_pages(slot, int(self._pos[slot]))
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:

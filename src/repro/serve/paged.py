@@ -27,6 +27,7 @@ somewhere harmless instead of corrupting a live page.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any
 
 import jax
@@ -54,6 +55,7 @@ class PageStats:
     high_water: int                  # max simultaneously allocated
     allocs: int
     frees: int
+    quarantined: int = 0             # retired after a digest mismatch
 
 
 class PageAllocator:
@@ -72,13 +74,15 @@ class PageAllocator:
         self.num_pages = num_pages
         self._free: list[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
         self._owner: dict[int, int] = {}        # page -> owner uid
+        self._quarantined: set[int] = set()     # retired (digest mismatch)
         self._high_water = 0
         self._allocs = 0
         self._frees = 0
 
     @property
     def total_pages(self) -> int:
-        return self.num_pages - 1               # scratch page is not usable
+        # scratch page is not usable; quarantined pages left circulation
+        return self.num_pages - 1 - len(self._quarantined)
 
     @property
     def free_pages(self) -> int:
@@ -123,6 +127,38 @@ class PageAllocator:
     def pages_of(self, owner: int) -> list[int]:
         return [p for p, o in self._owner.items() if o == owner]
 
+    def owner_of(self, page: int) -> int | None:
+        """Owner uid of ``page``, or None if free/quarantined."""
+        return self._owner.get(page)
+
+    def quarantine(self, page: int) -> None:
+        """Retire ``page`` from circulation after a digest mismatch.
+
+        The page must currently be free (detection paths park/release the
+        owning slot first); it never returns to the free list, so the pool
+        permanently shrinks by one page — the hardware-honest model of a
+        block whose storage can no longer be trusted.
+        """
+        if page == TRASH_PAGE:
+            raise ValueError("cannot quarantine the scratch page")
+        owner = self._owner.get(page)
+        if owner is not None:
+            raise ValueError(
+                f"page {page} still belongs to request {owner}; "
+                "release the owner before quarantining"
+            )
+        try:
+            self._free.remove(page)
+        except ValueError:
+            raise ValueError(
+                f"page {page} is not in the pool (already quarantined?)"
+            ) from None
+        self._quarantined.add(page)
+
+    @property
+    def quarantined_pages(self) -> int:
+        return len(self._quarantined)
+
     def stats(self) -> PageStats:
         return PageStats(
             total_pages=self.total_pages,
@@ -131,15 +167,21 @@ class PageAllocator:
             high_water=self._high_water,
             allocs=self._allocs,
             frees=self._frees,
+            quarantined=len(self._quarantined),
         )
 
     def check_invariants(self) -> None:
-        """free + allocated must tile the usable pool exactly, no aliasing."""
+        """free + allocated + quarantined must tile the pool, no aliasing."""
         allocated = set(self._owner)
         free = set(self._free)
         assert not (allocated & free), f"aliased pages {allocated & free}"
+        assert not (self._quarantined & allocated), \
+            f"quarantined pages owned {self._quarantined & allocated}"
+        assert not (self._quarantined & free), \
+            f"quarantined pages free {self._quarantined & free}"
         assert TRASH_PAGE not in allocated and TRASH_PAGE not in free
-        union = allocated | free
+        assert TRASH_PAGE not in self._quarantined
+        union = allocated | free | self._quarantined
         expect = set(range(1, self.num_pages))
         assert union == expect, f"leaked pages {expect - union}"
 
@@ -246,6 +288,66 @@ def snapshot_bytes(saved) -> int:
 
 
 # ---------------------------------------------------------------------------
+# content digests: the integrity layer's ground truth
+# ---------------------------------------------------------------------------
+#
+# A digest is stamped at a write boundary (prefill scatter, chunk scatter,
+# decode page seal, arena store) and re-checked wherever the bytes are
+# trusted again (decode reads, DMA completion, scrub).  blake2b-128 — fast
+# in pure python-stdlib, collision-safe far beyond any pool size here.
+
+
+def tree_digest(tree) -> bytes:
+    """Content digest of a whole KV tree (a :func:`gather_pages` snapshot
+    or any array pytree), leaf-order dependent like the tree itself."""
+    h = hashlib.blake2b(digest_size=16)
+    for leaf in jax.tree.leaves(tree):
+        h.update(np.asarray(leaf).tobytes())
+    return h.digest()
+
+
+def page_digest(pool_segments, page: int) -> bytes:
+    """Content digest of one physical ``page`` across every pool leaf."""
+    h = hashlib.blake2b(digest_size=16)
+    for leaf in jax.tree.leaves(pool_segments):
+        h.update(np.asarray(leaf[:, page]).tobytes())
+    return h.digest()
+
+
+def flip_page(pool_segments, page: int):
+    """Pool tree with one byte of ``page`` flipped in the first leaf —
+    the fault injector's model of a silent device-memory bit flip."""
+    flipped = False
+
+    def leaf(x):
+        nonlocal flipped
+        if flipped:
+            return x
+        flipped = True
+        host = np.asarray(x[:, page]).copy()
+        host.view(np.uint8).reshape(-1)[0] ^= 0xFF
+        return x.at[:, page].set(jnp.asarray(host, x.dtype))
+
+    return jax.tree.map(leaf, pool_segments)
+
+
+def flip_tree(tree):
+    """Copy of ``tree`` with one byte flipped in the first leaf — the
+    injector's model of a DMA that completes but delivers wrong bytes."""
+    flipped = False
+
+    def leaf(x):
+        nonlocal flipped
+        host = np.asarray(x).copy()
+        if not flipped:
+            flipped = True
+            host.view(np.uint8).reshape(-1)[0] ^= 0xFF
+        return host
+
+    return jax.tree.map(leaf, tree)
+
+
+# ---------------------------------------------------------------------------
 # host arena: the budgeted second tier of the page pool
 # ---------------------------------------------------------------------------
 
@@ -295,6 +397,7 @@ class HostArena:
         self._blocks: dict[int, list[int]] = {}  # uid -> its blocks
         self._data: dict[int, Any] = {}          # uid -> snapshot tree
         self._nbytes: dict[int, int] = {}        # uid -> actual bytes stored
+        self._digest: dict[int, bytes] = {}      # uid -> store-time digest
         self._order: list[int] = []              # uids in store order
         self.peak_bytes = 0
         self.stores = 0
@@ -370,8 +473,16 @@ class HostArena:
         """Resident uids in eviction order (oldest store first)."""
         return list(self._order)
 
-    def store(self, uid: int, data: Any, nbytes: int) -> None:
-        """Park ``data`` (a :func:`gather_pages` tree) under ``uid``."""
+    def store(self, uid: int, data: Any, nbytes: int,
+              digest: bytes | None = None) -> None:
+        """Park ``data`` (a :func:`gather_pages` tree) under ``uid``.
+
+        ``digest`` stamps the block's content at its write boundary — the
+        engine passes the *pre-transfer* digest, so corruption anywhere
+        downstream (the D2H DMA, the arena's own storage) is caught by
+        :meth:`verify` or by the refill-wait payload check.  ``None`` skips
+        stamping (the integrity layer is off); ``verify`` then always
+        passes."""
         if uid in self._data:
             raise ValueError(f"uid {uid} already holds an arena entry")
         need = self.blocks_for(nbytes)
@@ -391,6 +502,8 @@ class HostArena:
         self._blocks[uid] = blocks
         self._data[uid] = data
         self._nbytes[uid] = nbytes
+        if digest is not None:
+            self._digest[uid] = digest
         self._order.append(uid)
         self.stores += 1
         self.peak_bytes = max(self.peak_bytes, self.used_bytes)
@@ -398,6 +511,36 @@ class HostArena:
     def load(self, uid: int) -> Any:
         """Peek the stored snapshot without freeing its blocks."""
         return self._data[uid]
+
+    def digest_of(self, uid: int) -> bytes | None:
+        """Store-time content digest of ``uid``'s block (None if the
+        integrity layer never stamped one)."""
+        return self._digest.get(uid)
+
+    def verify(self, uid: int) -> bool:
+        """Re-hash ``uid``'s stored tree against its store-time digest —
+        the scrubber's arena probe.  True when unstamped or dataless."""
+        expect = self._digest.get(uid)
+        data = self._data.get(uid)
+        if expect is None or data is None:
+            return True
+        return tree_digest(data) == expect
+
+    def corrupt(self, uid: int) -> None:
+        """Flip one byte of ``uid``'s stored snapshot (fault injection:
+        host memory rotting under a parked block).  The store-time digest
+        is untouched, so :meth:`verify` and the refill payload check both
+        see the mismatch.  Device-backed leaves are immutable, so the
+        flipped leaf is rebuilt as a host copy — byte-identical except for
+        the one flipped bit."""
+        data = self._data[uid]
+        if data is None:
+            raise ValueError(f"uid {uid} holds no payload to corrupt")
+        leaves, treedef = jax.tree.flatten(data)
+        host = np.array(leaves[0])
+        host.view(np.uint8).reshape(-1)[0] ^= 0xFF
+        leaves[0] = host
+        self._data[uid] = jax.tree.unflatten(treedef, leaves)
 
     def discard(self, uid: int) -> int:
         """Drop ``uid``'s entry, return its blocks to the free-list.
@@ -411,6 +554,7 @@ class HostArena:
             del self._owner[b]
             self._free.append(b)
         del self._data[uid]
+        self._digest.pop(uid, None)
         self._order.remove(uid)
         self.discards += 1
         return self._nbytes.pop(uid)
@@ -435,6 +579,7 @@ class HostArena:
             f"leaked blocks {expect - union} / phantom {union - expect}"
         )
         assert set(self._data) == set(self._blocks) == set(self._nbytes)
+        assert set(self._digest) <= set(self._data), "orphaned digests"
         assert set(self._order) == set(self._data)
         assert len(self._order) == len(self._data)
         for uid, blocks in self._blocks.items():

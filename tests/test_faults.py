@@ -120,6 +120,63 @@ def test_forced_faults_consumed_in_order():
     assert all(e.forced for e in plan.trace)
 
 
+def test_forced_count_fires_once_per_matching_attempt():
+    plan = FaultPlan()
+    plan.force("h2d", count=3)
+    for _ in range(3):
+        assert plan.draw_transfer("h2d", "kv[0]") is not None
+    assert plan.draw_transfer("h2d", "kv[0]") is None         # count spent
+    assert plan.draw_transfer("h2d", "kv[0]") is None         # stays spent
+    assert len(plan.trace) == 3
+
+
+def test_forced_kinds_interleave_independently():
+    """force() entries of different kinds are consumed by their own draw
+    sites in whatever order the runtime reaches them — an exec entry never
+    absorbs a transfer or corruption draw and vice versa."""
+    plan = FaultPlan()
+    plan.force("exec", count=2)
+    plan.force("h2d")
+    plan.force("flip_page", count=2)
+    plan.force("corrupt_transfer")
+
+    # corruption draws consume only corruption entries, fail-stop untouched
+    assert plan.draw_corruption("flip_page", ["page[3]", "page[7]"]) == 0
+    assert plan.draw_corruption("flip_block", ["block[uid=1]"]) is None
+    assert isinstance(plan.draw_exec("mm8"), InjectedFault)   # exec #1 intact
+    assert plan.draw_corruption("corrupt_transfer", ["h2d kv[2]"]) == 0
+    assert plan.draw_transfer("h2d", "kv[2]") is not None     # h2d intact
+    assert isinstance(plan.draw_exec("mm8"), InjectedFault)   # exec #2
+    assert plan.draw_corruption("flip_page", ["page[9]"]) == 0
+    # every forced entry spent; all sites now draw clean
+    assert plan.draw_exec("mm8") is None
+    assert plan.draw_transfer("h2d", "kv[2]") is None
+    assert plan.draw_corruption("flip_page", ["page[9]"]) is None
+    kinds = [e.kind for e in plan.trace]
+    assert kinds == ["flip_page", "exec", "corrupt_transfer", "h2d",
+                     "exec", "flip_page"]
+    assert all(e.forced for e in plan.trace)
+
+
+def test_forced_corruption_respects_what_substring():
+    plan = FaultPlan()
+    plan.force("flip_page", "page[7]")
+    # a target list without the match draws nothing and keeps the entry
+    assert plan.draw_corruption("flip_page", ["page[3]", "page[5]"]) is None
+    assert plan.draw_corruption("flip_page", ["page[3]", "page[7]"]) == 1
+    assert plan.draw_corruption("flip_page", ["page[7]"]) is None  # consumed
+
+
+def test_force_rejects_unknown_kind_and_bad_count():
+    plan = FaultPlan()
+    with pytest.raises(ValueError):
+        plan.force("meteor")
+    with pytest.raises(ValueError):
+        plan.force("exec", count=0)
+    with pytest.raises(ValueError):
+        plan.draw_corruption("exec", ["page[1]"])   # not a corruption kind
+
+
 # ---------------------------------------------------------------------------
 # scheduler: retry / backoff / watchdog (exact virtual timestamps)
 # ---------------------------------------------------------------------------

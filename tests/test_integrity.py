@@ -1,0 +1,548 @@
+"""End-to-end data integrity: silent corruption detection and recovery.
+
+The integrity claim, tested across all four state tiers:
+
+  - **device pages** — content digests stamped at every write boundary
+    (prefill scatter, chunk scatter, decode page-crossing commit, snapshot
+    restore); a flipped page is caught by the pre-commit read verification
+    or the budgeted scrubber, quarantined, and its owner re-prefilled.
+  - **host arena blocks** — parked snapshots carry their pre-transfer
+    digest; a rotted block is caught by the scrubber or the refill-wait
+    payload check and demoted to replay.
+  - **DMA payloads** — every D2H spill and H2D refill is digest-verified
+    (spills at issue, refills at wait); a corrupted transfer never
+    delivers its bytes.
+  - **reconfig regions** — a region load's image digest is verified before
+    any packet executes against it; a stale image retires through the
+    existing abort/retry lane.
+
+Every injected corruption must be detected before its bytes influence a
+sampled token (``integrity_split()["escaped"] == 0``), and completed
+streams must stay bitwise-identical to corruption-free runs.  With
+verification off, the same injections *must* escape — proving the
+accounting is honest, not tautological.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (populates GLOBAL_REGISTRY)
+from repro.configs import ARCHS, reduced
+from repro.core.hsa import FaultPlan, Queue, Scheduler, VirtualClock
+from repro.core.hsa.faults import (
+    CORRUPTION_KINDS,
+    CorruptPayload,
+    SilentCorruption,
+    StaleRegionImage,
+)
+from repro.core.ledger import OverheadLedger
+from repro.core.policy import (
+    AdmissionPolicy,
+    IntegrityPolicy,
+    PreemptionPolicy,
+    RetryPolicy,
+)
+from repro.core.reconfig import (
+    RegionManager,
+    TransferEngine,
+    region_image_digest,
+)
+from repro.core.registry import GLOBAL_REGISTRY
+from repro.core.roles import Role, RoleLibrary
+from repro.models import build_model
+from repro.models.params import init_params
+from repro.serve.engine import ServeEngine
+from repro.serve.paged import (
+    HostArena,
+    PageAllocator,
+    flip_page,
+    flip_tree,
+    page_digest,
+    tree_digest,
+)
+
+
+@pytest.fixture(scope="module")
+def engine_model():
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(11))
+    return cfg, model, params
+
+
+def _requests(rng, n):
+    out = []
+    for _ in range(n):
+        p = [int(t) for t in rng.integers(1, 100, size=int(rng.integers(1, 8)))]
+        out.append((p, int(rng.integers(2, 12))))
+    return out
+
+
+def _dense_reference(model, params, reqs, *, temperature=0.0, seed=0):
+    eng = ServeEngine(model, params, batch_slots=len(reqs), max_len=32,
+                      temperature=temperature, seed=seed)
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done = sorted(eng.run_to_completion(max_steps=100_000),
+                  key=lambda r: r.uid)
+    return [r.generated for r in done]
+
+
+def _integrity_engine(model, params, *, faults=None, integrity=None,
+                      temperature=0.0, fusion=1, chunk=None, spill=False,
+                      pool_pages=48, recoveries=64):
+    kw = {}
+    if chunk is not None:
+        kw["prefill_chunk"] = chunk
+    return ServeEngine(
+        model, params, batch_slots=4, max_len=32, paged=True, page_size=4,
+        pool_pages=pool_pages, decode_fusion=fusion, temperature=temperature,
+        seed=0, ledger=OverheadLedger(),
+        retry=RetryPolicy(max_request_recoveries=recoveries),
+        clock=VirtualClock(), step_time_model=lambda p, d: 1e-3,
+        transfer_bandwidth_bytes_s=64e6,
+        admission=AdmissionPolicy(growth_reserve=0.5),
+        preemption=PreemptionPolicy(
+            snapshot_threshold_tokens=2 if spill else 10**9
+        ),
+        host_budget_bytes=(1 << 20) if spill else None,
+        faults=faults, integrity=integrity, **kw,
+    )
+
+
+def _churn(model, params, *, steps, n_requests, seed, preempt_p=0.2,
+           resume_p=0.2, submit_p=0.6, **ekw):
+    """Seeded admit/decode/preempt/spill schedule under corruption; the
+    allocator and arena invariants are asserted after every step."""
+    rng = np.random.default_rng(seed)
+    reqs = _requests(rng, n_requests)
+    eng = _integrity_engine(model, params, **ekw)
+    done, i = [], 0
+    for _ in range(steps):
+        if i < len(reqs) and rng.random() < submit_p:
+            p, m = reqs[i]
+            eng.submit(p, max_new_tokens=m)
+            i += 1
+        if eng._active and rng.random() < preempt_p:
+            uid = int(rng.choice([r.uid for r in eng._active.values()]))
+            eng.preempt(uid)
+        if eng.parked_requests and rng.random() < resume_p:
+            uid = int(rng.choice([r.uid for r in eng.parked_requests]))
+            eng.resume(uid)
+        done += eng.step()
+        eng.allocator.check_invariants()
+        eng.arena.check_invariants()
+    while i < len(reqs):
+        p, m = reqs[i]
+        eng.submit(p, max_new_tokens=m)
+        i += 1
+    done += eng.run_to_completion(max_steps=100_000)
+    eng.allocator.check_invariants()
+    eng.arena.check_invariants()
+    streams = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+    assert len(streams) == len(reqs)
+    return streams, reqs, eng
+
+
+# ---------------------------------------------------------------------------
+# IntegrityPolicy
+# ---------------------------------------------------------------------------
+
+
+def test_integrity_policy_validation_and_of():
+    assert IntegrityPolicy.of(None) is None
+    assert IntegrityPolicy.of(False) is None
+    pol = IntegrityPolicy.of(True)
+    assert pol == IntegrityPolicy()
+    assert IntegrityPolicy.of(pol) is pol
+    with pytest.raises(ValueError, match="scrub_pages_per_step"):
+        IntegrityPolicy(scrub_pages_per_step=-1)
+    with pytest.raises(TypeError):
+        IntegrityPolicy.of(3)
+
+
+def test_integrity_requires_paged(engine_model):
+    cfg, model, params = engine_model
+    with pytest.raises(ValueError, match="requires paged"):
+        ServeEngine(model, params, batch_slots=2, max_len=32,
+                    integrity=IntegrityPolicy())
+
+
+# ---------------------------------------------------------------------------
+# digest primitives (paged.py)
+# ---------------------------------------------------------------------------
+
+
+def test_page_digest_localized_to_page():
+    segs = [{"k": jnp.arange(2 * 4 * 3 * 8, dtype=jnp.float32)
+             .reshape(2, 4, 3, 8)}]
+    d2 = page_digest(segs, 2)
+    assert d2 == page_digest(segs, 2)            # deterministic
+    assert d2 != page_digest(segs, 1)            # page-local content
+    flipped = flip_page(segs, 1)
+    assert page_digest(flipped, 1) != page_digest(segs, 1)
+    assert page_digest(flipped, 2) == d2         # other pages untouched
+    assert tree_digest(flipped) != tree_digest(segs)
+
+
+def test_flip_tree_copies_and_diverges():
+    tree = {"a": jnp.ones((2, 3)), "b": jnp.zeros(4)}
+    flipped = flip_tree(tree)
+    assert tree_digest(flipped) != tree_digest(tree)
+    assert float(jnp.sum(tree["a"])) == 6.0      # source untouched
+
+
+def test_arena_digest_stamp_verify_corrupt():
+    a = HostArena(budget_bytes=1 << 16)
+    a.configure(1 << 12)
+    data = {"k": np.arange(16, dtype=np.float32)}
+    d = tree_digest(data)
+    a.store(7, data, 64, digest=d)
+    assert a.digest_of(7) == d
+    assert a.verify(7)
+    a.corrupt(7)
+    assert not a.verify(7)                       # digest kept, bytes rotted
+    assert a.digest_of(7) == d
+    a.check_invariants()
+    a.discard(7)
+    assert a.digest_of(7) is None
+    a.store(8, data, 64)                         # unstamped: verify passes
+    assert a.verify(8)
+    with pytest.raises((KeyError, ValueError)):
+        a.corrupt(99)                            # nothing stored under 99
+
+
+def test_allocator_quarantine_semantics():
+    alloc = PageAllocator(8)
+    pages = alloc.allocate(1, 3)
+    with pytest.raises(ValueError):
+        alloc.quarantine(pages[0])               # owned: park owner first
+    with pytest.raises(ValueError):
+        alloc.quarantine(0)                      # the scratch page
+    alloc.free(1, pages)
+    total = alloc.total_pages
+    alloc.quarantine(pages[0])
+    assert alloc.total_pages == total - 1        # pool shrank
+    assert alloc.quarantined_pages == 1
+    assert alloc.stats().quarantined == 1
+    with pytest.raises(ValueError):
+        alloc.quarantine(pages[0])               # already quarantined
+    alloc.check_invariants()                     # tiling holds post-retire
+    got = alloc.allocate(2, alloc.free_pages)
+    assert pages[0] not in got                   # never re-issued
+    alloc.free(2, got)
+    alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# engine: one forced corruption per tier, detected, streams bitwise-identical
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(eng, reqs):
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done = sorted(eng.run_to_completion(max_steps=50_000),
+                  key=lambda r: r.uid)
+    return [r.generated for r in done]
+
+
+REQS = [([1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12], 8), ([5, 6, 7], 6),
+        ([9] * 10, 10)]
+
+
+def test_flip_page_detected_by_read_verification(engine_model):
+    cfg, model, params = engine_model
+    ref = _dense_reference(model, params, REQS)
+    plan = FaultPlan(seed=3)
+    plan.force("flip_page")
+    eng = _integrity_engine(model, params, faults=plan,
+                            integrity=IntegrityPolicy(scrub_pages_per_step=0))
+    out = _run_engine(eng, REQS)
+    assert out == ref
+    sp = eng.ledger.integrity_split()
+    assert sp["corrupt_pages"] == 1
+    assert sp["detected_read"] == 1 and sp["escaped"] == 0
+    assert sp["quarantined_pages"] == 1
+    assert eng.corruptions_detected == eng.corruptions_injected == 1
+
+
+def test_flip_page_detected_by_scrubber(engine_model):
+    cfg, model, params = engine_model
+    ref = _dense_reference(model, params, REQS)
+    plan = FaultPlan(seed=3)
+    plan.force("flip_page", count=2)
+    # budget >= every sealed page: the scrub pass right after each injection
+    # catches the flip in the same step, before any decode read
+    eng = _integrity_engine(model, params, faults=plan,
+                            integrity=IntegrityPolicy(scrub_pages_per_step=32))
+    out = _run_engine(eng, REQS)
+    assert out == ref
+    sp = eng.ledger.integrity_split()
+    assert sp["corrupt_pages"] == 2 and sp["escaped"] == 0
+    assert sp["detected"] == 2
+    assert sp["detected_scrub"] == 2             # budget catches it cold
+    assert sp["scrub_passes"] > 0 and sp["scrubbed_pages"] > 0
+    assert 0.0 < sp["scrub_coverage"] <= 1.0
+    assert eng.allocator.quarantined_pages       # retired from circulation
+    eng.allocator.check_invariants()
+
+
+def test_flip_block_detected_before_restore(engine_model):
+    """A parked snapshot rots in the arena; the refill payload check (or
+    the scrubber) catches it and the entry demotes to replay."""
+    cfg, model, params = engine_model
+    ref = _dense_reference(model, params, REQS)
+    plan = FaultPlan(seed=4)
+    plan.force("flip_block")
+    eng = _integrity_engine(model, params, faults=plan, spill=True,
+                            integrity=IntegrityPolicy(scrub_pages_per_step=1))
+    for p, m in REQS:
+        eng.submit(p, max_new_tokens=m)
+    done, step = [], 0
+    while True:
+        step += 1
+        if step in (3, 4, 5, 6, 7, 8) and eng._active:
+            eng.preempt(sorted(r.uid for r in eng._active.values())[0])
+        done += eng.step()
+        with eng._lock:
+            if not (eng._active or eng._prefilling or eng._queue
+                    or eng._parked):
+                break
+        assert step < 5000
+    out = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+    assert out == ref
+    sp = eng.ledger.integrity_split()
+    assert sp["corrupt_blocks"] == 1 and sp["escaped"] == 0
+    assert sp["detected"] >= 1
+
+
+def test_corrupt_transfer_detected_at_dma_boundary(engine_model):
+    cfg, model, params = engine_model
+    ref = _dense_reference(model, params, REQS)
+    plan = FaultPlan(seed=5)
+    plan.force("corrupt_transfer", count=2)
+    eng = _integrity_engine(model, params, faults=plan, spill=True,
+                            integrity=IntegrityPolicy(scrub_pages_per_step=0))
+    for p, m in REQS:
+        eng.submit(p, max_new_tokens=m)
+    done, step = [], 0
+    while True:
+        step += 1
+        if step in (3, 4, 5, 6) and eng._active:
+            eng.preempt(sorted(r.uid for r in eng._active.values())[0])
+        done += eng.step()
+        with eng._lock:
+            if not (eng._active or eng._prefilling or eng._queue
+                    or eng._parked):
+                break
+        assert step < 5000
+    out = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+    assert out == ref
+    sp = eng.ledger.integrity_split()
+    assert sp["corrupt_transfers"] >= 1
+    assert sp["detected_transfer"] >= 1 and sp["escaped"] == 0
+    assert sp["verified_transfers"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# engine: verification off -> the same injections escape (honest accounting)
+# ---------------------------------------------------------------------------
+
+_VERIFY_OFF = IntegrityPolicy(scrub_pages_per_step=0, verify_reads=False,
+                              verify_transfers=False, verify_regions=False)
+
+
+def test_flip_page_escapes_with_verification_off(engine_model):
+    cfg, model, params = engine_model
+    ref = _dense_reference(model, params, REQS)
+    plan = FaultPlan(seed=3)
+    plan.force("flip_page")
+    eng = _integrity_engine(model, params, faults=plan,
+                            integrity=_VERIFY_OFF)
+    out = _run_engine(eng, REQS)
+    sp = eng.ledger.integrity_split()
+    assert sp["escaped"] >= 1                    # consumed, uncaught
+    assert sp["detected"] == 0
+    assert out != ref                            # the stream really diverged
+
+
+def test_flip_block_escapes_with_verification_off(engine_model):
+    cfg, model, params = engine_model
+    plan = FaultPlan(seed=4)
+    plan.force("flip_block")
+    eng = _integrity_engine(model, params, faults=plan, spill=True,
+                            integrity=_VERIFY_OFF)
+    for p, m in REQS:
+        eng.submit(p, max_new_tokens=m)
+    done, step = [], 0
+    while True:
+        step += 1
+        if step in (3, 4, 5, 6, 7, 8) and eng._active:
+            eng.preempt(sorted(r.uid for r in eng._active.values())[0])
+        done += eng.step()
+        with eng._lock:
+            if not (eng._active or eng._prefilling or eng._queue
+                    or eng._parked):
+                break
+        assert step < 5000
+    assert eng.ledger.integrity_split()["escaped"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# reconfig regions: stale image caught before any packet executes
+# ---------------------------------------------------------------------------
+
+_COST = {"reconfig": 10.0, "exec": 1.0}
+
+
+def _mk_region_sched(*, faults=None, retry=None, verify_images=True):
+    led = OverheadLedger()
+    lib = RoleLibrary(ledger=led)
+    rm = RegionManager(2, ledger=led, verify_images=verify_images)
+    sched = Scheduler(rm, lib, ledger=led, clock=VirtualClock(),
+                      cost_model=lambda k, w, m: _COST[k],
+                      retry=retry, faults=faults)
+    impl = GLOBAL_REGISTRY.resolve("matmul", "any", ("xla",))
+    a = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    role = lib.add(Role(impl, (a, a), name="mm8"))
+    return sched, role, led
+
+
+def test_stale_region_detected_and_retried():
+    plan = FaultPlan()
+    plan.force("stale_region")
+    sched, role, led = _mk_region_sched(
+        faults=plan,
+        retry=RetryPolicy(backoff_s=0.5, backoff_factor=2.0,
+                          max_backoff_s=8.0),
+    )
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    pkt = q.dispatch(role.key, jnp.ones((8, 8)), jnp.ones((8, 8)))
+    sched.run_until_idle()
+    assert pkt.out.error is None                 # retry absorbed the fault
+    np.testing.assert_allclose(np.asarray(pkt.out.value)[0, 0], 8.0)
+    briefs = [e.brief() for e in sched.event_log()]
+    assert briefs.count(("reconfig_start", "A", "mm8")) == 2
+    sp = led.integrity_split()
+    assert sp["stale_regions"] == 1 and sp["detected_region"] == 1
+    assert sp["escaped"] == 0 and sp["verified_regions"] == 2
+    assert led.availability_split()["load_faults"] == 1
+
+
+def test_stale_region_escapes_with_verification_off():
+    plan = FaultPlan()
+    plan.force("stale_region")
+    sched, role, led = _mk_region_sched(faults=plan, verify_images=False)
+    q = sched.add_queue(Queue(None, 64, name="A"))
+    q.dispatch(role.key, jnp.ones((8, 8)), jnp.ones((8, 8)))
+    sched.run_until_idle()
+    sp = led.integrity_split()
+    assert sp["stale_regions"] == 1 and sp["escaped"] == 1
+    assert sp["detected"] == 0
+    # escape counted once per stale load, not once per packet
+    q.dispatch(role.key, jnp.ones((8, 8)), jnp.ones((8, 8)))
+    sched.run_until_idle()
+    assert led.integrity_split()["escaped"] == 1
+
+
+def test_region_image_digest_identity():
+    _, role, _ = _mk_region_sched()
+    d = region_image_digest(role)
+    assert d == region_image_digest(role) and len(d) == 16
+
+
+# ---------------------------------------------------------------------------
+# seeded corruption churn across decode_fusion x prefill_chunk x spill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fusion,chunk,spill,temperature", [
+    (1, None, False, 0.0),       # greedy, plain prefill, device-only
+    (4, None, True, 0.0),        # fused decode, spill tier live
+    (1, 4, True, 0.0),           # chunked prefill + spill
+    (4, 4, True, 0.7),           # everything on, seeded temperature
+])
+def test_churn_seeded_corruption_streams_identical(engine_model, fusion,
+                                                   chunk, spill, temperature):
+    cfg, model, params = engine_model
+    plan = FaultPlan(seed=29, corrupt_rate=0.05)
+    streams, reqs, eng = _churn(
+        model, params, steps=60, n_requests=10, seed=21, faults=plan,
+        integrity=IntegrityPolicy(scrub_pages_per_step=2),
+        fusion=fusion, chunk=chunk, spill=spill, temperature=temperature,
+    )
+    ref = _dense_reference(model, params, reqs, temperature=temperature)
+    assert streams == ref                        # bitwise, per request
+    sp = eng.ledger.integrity_split()
+    assert sp["escaped"] == 0
+    # anything injected but never detected must be latent (its pages or
+    # blocks were freed before any read consumed them) — never escaped
+    assert sp["detected"] <= sp["corruptions"]
+    if sp["corruptions"]:
+        assert sp["detection_rate"] == sp["detected"] / sp["corruptions"]
+
+
+def test_corruption_draws_do_not_perturb_failstop_stream():
+    """The corruption stream is a separate seeded rng: interleaving
+    corruption draws between fail-stop draws must not shift which exec or
+    transfer attempts fault (the PR 7/8 schedules stay frozen when a test
+    turns corruption on)."""
+    def failstop_seq(interleave):
+        plan = FaultPlan(seed=13, exec_rate=0.3, transfer_rate=0.3,
+                         corrupt_rate=0.5)
+        out = []
+        for i in range(40):
+            if interleave:
+                plan.draw_corruption("flip_page", ["page[1]", "page[2]"])
+                plan.draw_corruption("flip_block", ["block[uid=0]"])
+            out.append(type(plan.draw_exec(f"pkt{i}", queue="A")).__name__)
+            out.append(type(plan.draw_transfer("h2d", f"kv[{i}]")).__name__)
+        return out
+
+    assert failstop_seq(False) == failstop_seq(True)
+
+
+# ---------------------------------------------------------------------------
+# ledger oracles (zero-division guards on empty ledgers)
+# ---------------------------------------------------------------------------
+
+
+def test_integrity_split_empty_ledger_all_zero():
+    sp = OverheadLedger().integrity_split()
+    assert sp["escaped"] == 0 and sp["corruptions"] == 0
+    assert sp["scrub_coverage"] == 0.0           # no scrubs: no division
+    assert sp["detection_rate"] == 0.0           # no corruptions: no division
+    assert all(v == 0.0 for v in sp.values())
+
+
+def test_availability_split_empty_ledger_all_zero():
+    av = OverheadLedger().availability_split()
+    assert av["mttr_s"] == 0.0                   # no recoveries: no division
+    assert av["fault_rate"] == 0.0               # no attempts: no division
+    assert all(v == 0.0 for v in av.values())
+
+
+# ---------------------------------------------------------------------------
+# soak (slow): 10k churn steps under seeded corruption
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_churn_corruption_soak_10k_steps(engine_model):
+    cfg, model, params = engine_model
+    plan = FaultPlan(seed=97, corrupt_rate=0.02)
+    streams, reqs, eng = _churn(
+        model, params, steps=10_000, n_requests=120, seed=55, faults=plan,
+        integrity=IntegrityPolicy(scrub_pages_per_step=2),
+        fusion=4, chunk=4, spill=True, submit_p=0.25,
+        pool_pages=96, recoveries=256,
+    )
+    ref = _dense_reference(model, params, reqs)
+    assert streams == ref
+    sp = eng.ledger.integrity_split()
+    assert sp["escaped"] == 0
+    assert sp["corruptions"] > 0                 # the soak actually injected
+    assert sp["detected"] >= 1

@@ -60,6 +60,8 @@ def _dense_reference(model, params, reqs, *, temperature=0.0, seed=0):
 def _check_invariants(eng):
     """No leak, no alias, free-list conserved, pages owned only by actives."""
     eng.allocator.check_invariants()
+    if eng.arena is not None:
+        eng.arena.check_invariants()
     assert (eng.allocator.free_pages + eng.allocator.allocated_pages
             == eng.allocator.total_pages)
     mapped = 0

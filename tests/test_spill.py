@@ -294,6 +294,76 @@ def test_transfer_validation():
         TransferEngine(bandwidth_bytes_s=0.0)
 
 
+def test_cancel_inflight_refill_on_demote_race(engine_model):
+    """Spill -> demote race: request A's snapshot is in the arena with its
+    ahead-of-need H2D refill already in flight when request B's spill
+    demands the arena space.  Demoting A must cancel the refill cleanly:
+    no REFILL seconds ever reach the ledger (H2D accounts at ``wait``, and
+    a cancelled transfer is never waited), the DMA timeline slot stays
+    spent (bandwidth was really consumed), and both streams still complete
+    bitwise-identical to the dense reference."""
+    from repro.core.policy import (
+        AdmissionPolicy, IntegrityPolicy, PreemptionPolicy,
+    )
+
+    cfg, model, params = engine_model
+    reqs = [([3, 1, 4, 1, 5, 9, 2, 6], 8), ([2, 7, 1, 8, 2, 8, 1, 8], 8)]
+    ref = _dense_reference(model, params, reqs)
+
+    def _mk(budget):
+        eng = ServeEngine(
+            model, params, batch_slots=2, max_len=32, paged=True,
+            page_size=8, pool_pages=16, seed=0, ledger=OverheadLedger(),
+            clock=VirtualClock(), step_time_model=lambda p, d: 1e-3,
+            transfer_bandwidth_bytes_s=64e6,
+            admission=AdmissionPolicy(growth_reserve=0.5),
+            preemption=PreemptionPolicy(snapshot_threshold_tokens=2),
+            host_budget_bytes=budget, integrity=IntegrityPolicy(),
+        )
+        for p, m in reqs:
+            eng.submit(p, max_new_tokens=m)
+        for _ in range(3):
+            eng.step()
+        return eng
+
+    # probe: how many arena bytes does one snapshot at this point occupy?
+    probe = _mk(1 << 24)
+    probe.preempt(1)                              # uids are 1-based
+    one_snapshot = probe.arena.used_bytes
+    assert one_snapshot > 0
+
+    # budget = exactly one snapshot: B's store can only fit by demoting A
+    eng = _mk(one_snapshot)
+    eng.preempt(1)
+    entry_a = eng._parked[0]
+    with eng._lock:
+        eng._pump_refills()
+    refill = entry_a.refill
+    assert refill is not None and refill.error is None    # in flight
+
+    eng.preempt(2)          # B spills; A is the only demotable victim
+    assert entry_a.refill is None
+    assert eng._xfer.cancelled == 1
+    assert eng.demotions == 1
+    assert eng.arena.holds(2) and not eng.arena.holds(1)  # A discarded
+    eng.arena.check_invariants()
+    # cancelled H2D never reached wait(): zero refill time on the ledger
+    sp = eng.ledger.spill_split()
+    assert sp["refill_s"] == 0.0
+    assert sp["refill_exposed_s"] == 0.0 and sp["refill_hidden_s"] == 0.0
+    # the timeline slot stays spent: bandwidth spent on the cancelled DMA
+    # (and B's D2H queued behind it) is sunk, not reclaimed
+    x_probe = eng._xfer.issue("h2d", "probe", 1)
+    assert x_probe.start_t >= refill.ready_t
+    eng._xfer.cancel(x_probe)
+    assert eng._xfer.cancelled == 2
+
+    done = eng.run_to_completion(max_steps=100_000)
+    streams = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+    assert streams == ref   # A replayed, B restored — bitwise intact
+    assert eng.ledger.integrity_split()["escaped"] == 0
+
+
 # ---------------------------------------------------------------------------
 # ledger accounting
 # ---------------------------------------------------------------------------
