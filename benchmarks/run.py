@@ -79,6 +79,7 @@ def main(argv: list[str] | None = None) -> None:
         table10_faults,
         table11_spill,
         table12_integrity,
+        table13_prefix,
     )
 
     suites = (
@@ -94,6 +95,7 @@ def main(argv: list[str] | None = None) -> None:
         (table10_faults.run, {"n": min(n, 48)}),
         (table11_spill.run, {"n": min(n, 64)}),
         (table12_integrity.run, {"n": min(n, 48)}),
+        (table13_prefix.run, {"n": min(n, 64)}),
     )
     print("name,us_per_call,derived", flush=True)
     rows: list[str] = []

@@ -47,6 +47,8 @@ ASSERTED = (
     ("table11", "serve_spill_faulted"),
     ("table12", "integrity_wins"),
     ("table12", "integrity_regions"),
+    ("table13", "prefix_wins"),
+    ("table13", "serve_prefix_identical"),
 )
 
 #: deterministic metrics: current >= baseline * (1 - TOLERANCE)
@@ -60,6 +62,7 @@ TRACKED = (
     ("table9", "ttft_p99_us_bursty_chunked"),    # virtual-clock p99 TTFT
     ("table11", "spill_refill_hidden_frac"),     # refill overlap with decode
     ("table12", "integrity_scrub_overhead_frac"),  # audit cost vs wall time
+    ("table13", "prefix_pages_saved_frac"),      # prefill pages avoided
 )
 
 #: tracked metrics where *lower* is better (regression = grew > tolerance)

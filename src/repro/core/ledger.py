@@ -220,6 +220,14 @@ class OverheadLedger:
         "stale_region": "stale_regions",
     }
 
+    _PREFIX_ZERO = {
+        "prefix_lookups": 0.0, "prefix_hits": 0.0,
+        "shared_pages": 0.0,        # gauge: pages with refcount > 1 now
+        "peak_shared_pages": 0.0,
+        "pages_saved": 0.0,         # private prompt-page allocations avoided
+        "cow_copies": 0.0,          # re-prefills forced by the CoW paths
+    }
+
     def __init__(self, keep_entries: bool = False) -> None:
         self._lock = threading.Lock()
         self._stats: dict[str, Stat] = {c: Stat() for c in CATEGORIES}
@@ -233,6 +241,7 @@ class OverheadLedger:
         self._fault: dict[str, float] = dict(self._FAULT_ZERO)
         self._spill: dict[str, float] = dict(self._SPILL_ZERO)
         self._integrity: dict[str, float] = dict(self._INTEGRITY_ZERO)
+        self._prefix: dict[str, float] = dict(self._PREFIX_ZERO)
 
     def record(self, category: str, seconds: float, **meta: Any) -> None:
         if category not in self._stats:
@@ -325,6 +334,7 @@ class OverheadLedger:
             self._fault = dict(self._FAULT_ZERO)
             self._spill = dict(self._SPILL_ZERO)
             self._integrity = dict(self._INTEGRITY_ZERO)
+            self._prefix = dict(self._PREFIX_ZERO)
             if self._entries is not None:
                 self._entries = []
 
@@ -660,6 +670,46 @@ class OverheadLedger:
         out["detection_rate"] = (
             out["detected"] / out["corruptions"] if out["corruptions"]
             else 0.0
+        )
+        return out
+
+    # -- prefix-sharing accounting (the KV hit-rate view) --------------------
+
+    def record_prefix_lookup(self, *, hit: bool, pages_saved: int = 0) -> None:
+        """One admission-time prefix probe.  ``hit=True`` means the request
+        attached to at least ``PrefixPolicy.min_prefix_pages`` resident
+        pages; ``pages_saved`` is the private prompt-page allocations (and
+        their prefill rows) the attach avoided."""
+        with self._lock:
+            self._prefix["prefix_lookups"] += 1.0
+            if hit:
+                self._prefix["prefix_hits"] += 1.0
+                self._prefix["pages_saved"] += float(pages_saved)
+
+    def record_prefix_sharing(self, *, shared_pages: int) -> None:
+        """Gauge update: pages currently held by more than one reader."""
+        with self._lock:
+            self._prefix["shared_pages"] = float(shared_pages)
+            self._prefix["peak_shared_pages"] = max(
+                self._prefix["peak_shared_pages"], float(shared_pages)
+            )
+
+    def record_prefix_cow(self, n: int = 1) -> None:
+        """``n`` copy-on-write re-prefills: readers that lost their shared
+        pages (quarantine of the page, or a parked snapshot whose prefix
+        evaporated before resume) and rebuilt them privately."""
+        with self._lock:
+            self._prefix["cow_copies"] += float(n)
+
+    def prefix_split(self) -> dict[str, float]:
+        """Prefix-sharing counters (the table13 view).  ``hit_rate`` is
+        hits / lookups — the KV analogue of Table II's
+        ``if_not_configured`` fraction — 0.0 on an empty ledger."""
+        with self._lock:
+            out = dict(self._prefix)
+        out["hit_rate"] = (
+            out["prefix_hits"] / out["prefix_lookups"]
+            if out["prefix_lookups"] else 0.0
         )
         return out
 

@@ -625,6 +625,48 @@ class IntegrityPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class PrefixPolicy:
+    """When a new request may attach to already-resident prompt pages.
+
+    Prefix sharing is the Table II ``if_not_configured`` hit applied to KV
+    state: a request whose prompt prefix is already paged in attaches to
+    those pages at +1 refcount instead of re-prefilling them, and admission
+    charges only the unshared remainder.  Two knobs bound the mechanism:
+
+    - ``min_prefix_pages``: shortest shared prefix (in full pages) worth
+      attaching.  Below this the bookkeeping (refcounts, CoW on the
+      park/quarantine paths) outweighs the prefill saved.
+    - ``max_refs``: cap on readers per physical page.  Bounds the blast
+      radius of one quarantined page (every reader parks through the
+      ``RESUME_REPREFILL`` lane) and keeps a single viral prefix from
+      serializing the whole pool's fault recovery.
+    """
+
+    min_prefix_pages: int = 1
+    max_refs: int = 64
+
+    def __post_init__(self):
+        if self.min_prefix_pages < 1:
+            raise ValueError(
+                f"min_prefix_pages must be >= 1, got {self.min_prefix_pages}")
+        if self.max_refs < 2:
+            raise ValueError(f"max_refs must be >= 2, got {self.max_refs}")
+
+    @classmethod
+    def of(cls, value: "PrefixPolicy | bool | None") -> "PrefixPolicy | None":
+        """Normalize an engine-constructor argument: ``None``/``False`` →
+        sharing off, ``True`` → defaults, a ``PrefixPolicy`` passes
+        through."""
+        if value is None or value is False:
+            return None
+        if value is True:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        raise TypeError(f"expected PrefixPolicy, bool, or None, got {value!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class Invocation:
     """One op call site in a model step: (op type, site id e.g. layer index)."""
 

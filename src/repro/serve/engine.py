@@ -19,6 +19,7 @@ splicing takes exactly each request's remaining budget.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import threading
 import time
@@ -43,6 +44,7 @@ from repro.core.policy import (
     IntegrityPolicy,
     PreemptionCandidate,
     PreemptionPolicy,
+    PrefixPolicy,
     RetryPolicy,
     SpillCandidate,
     SpillPolicy,
@@ -203,6 +205,11 @@ class _Parked:
     # in-flight H2D refill handle (a reconfig.Transfer) issued by the
     # ahead-of-need pump; the resume waits on it instead of a cold DMA
     refill: Any | None = None
+    # shared-prefix pages the slot held at park time: the snapshot excludes
+    # them (their bytes stay resident under other readers' refcounts) and
+    # the resume re-attaches them via the prefix index — or demotes to
+    # replay if the prefix evaporated while parked (a CoW copy)
+    shared_pages: int = 0
 
 
 @dataclasses.dataclass
@@ -305,7 +312,8 @@ class ServeEngine:
                  spill: "SpillPolicy | None" = None,
                  faults=None,
                  transfer_bandwidth_bytes_s: float = 8e9,
-                 integrity: "IntegrityPolicy | bool | None" = None):
+                 integrity: "IntegrityPolicy | bool | None" = None,
+                 prefix: "PrefixPolicy | bool | None" = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -403,6 +411,29 @@ class ServeEngine:
             self._projected: dict[int, int] = {}             # slot -> pages
         else:
             self.allocator = None
+        # -- prefix sharing (refcounted pages + CoW block tables) ----------
+        # the paper's Table II `if_not_configured` hit applied to KV state:
+        # a request whose prompt prefix is already paged in attaches to the
+        # resident pages at +1 refcount and prefills only its suffix
+        self.prefix = PrefixPolicy.of(prefix)
+        if self.prefix is not None:
+            if not paged:
+                raise ValueError("prefix sharing requires paged=True "
+                                 "(shared pages live in the page pool)")
+            if not self._chunk_safe():
+                raise ValueError(
+                    "prefix sharing requires chunk-exact models (plain "
+                    "dense-attention GQA layers): the unshared suffix is "
+                    "prefilled as one chunk over the resident prefix rows"
+                )
+        self._prefix_index = (
+            paged_mod.PrefixIndex() if self.prefix is not None else None
+        )
+        self._slot_shared = np.zeros(batch_slots, np.int64)  # shared pages/slot
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_pages_saved = 0
+        self.cow_copies = 0
         self._token_bytes = 0                                # set at cache build
         # concurrency trace: sustained (mean over decode steps with work
         # pending) and peak live requests — benchmarks/table7 reads these
@@ -451,7 +482,12 @@ class ServeEngine:
             raise ValueError("integrity requires paged=True "
                              "(digests are page-granular)")
         self._page_digests: dict[int, bytes] = {}   # sealed page -> digest
-        self._scrub_cursor = 0
+        # unified scrub rotation cursor: the last-scanned target, keyed as
+        # (tier, id) with tier 0 = device page, tier 1 = arena uid.  Keyed
+        # on *identity*, not list position: membership churn between steps
+        # (pages stamped/freed, blocks parked/resumed) can delay a
+        # surviving target by at most the inserted ones, never skip it.
+        self._scrub_cursor: tuple[int, int] = (-1, -1)
         # injected-but-undetected corruption, the escape-accounting ground
         # truth: device pages (page -> owner uid), tainted arena entries,
         # and slots restored from tainted/corrupted payloads
@@ -672,10 +708,14 @@ class ServeEngine:
         )
 
     def _admit_paged(self, req: Request) -> bool:
+        # admission charges only the unshared pages: a resident prefix
+        # costs nothing to attach (the Table II `if_not_configured` hit)
+        shared = (len(self._lookup_prefix(req.prompt, req.uid))
+                  if self.prefix is not None else 0)
         return self.admission.admit(
             free_pages=self.allocator.free_pages,
             projected_growth_pages=self._projected_growth(),
-            request_pages=self._projected_pages(req),
+            request_pages=max(0, self._projected_pages(req) - shared),
         )
 
     def _launch_pages(self, slot: int, req: Request, k: int) -> int:
@@ -702,20 +742,116 @@ class ServeEngine:
         self._mapped[slot] = need
 
     def _release_slot(self, slot: int, req: Request) -> None:
-        """Finished/cancelled request: its pages return to the pool *now*."""
+        """Finished/cancelled request: its page *references* drop now.
+
+        A page returns to the pool only when its last reader lets go — the
+        digest stamp, the live-corruption record, and the prefix-index
+        entry keyed on a physical page must all survive exactly as long as
+        some block table still maps it, so they are dropped only for the
+        pages the allocator actually released."""
         pages = [int(p) for p in self._table[slot, : int(self._mapped[slot])]]
+        rehome = False
         if pages:
-            self.allocator.free(req.uid, pages)
-            for p in pages:
+            released = self.allocator.free(req.uid, pages)
+            for p in released:
                 # a freed page's digest dies with its contents (the next
                 # owner re-stamps); an undetected corruption on it never
                 # influenced a token — latent, not escaped
                 self._page_digests.pop(p, None)
                 self._live_corrupt_pages.pop(p, None)
+                if self._prefix_index is not None:
+                    rehome = rehome or p in self._prefix_index.pages()
+                    self._prefix_index.drop_page(p)
         self._tainted_slots.discard(slot)
         self._table[slot] = paged_mod.TRASH_PAGE
         self._mapped[slot] = 0
         self._projected.pop(slot, None)
+        if self.prefix is not None:
+            self._slot_shared[slot] = 0
+            self._record_prefix_gauge()
+            if rehome:
+                # the released pages backed index entries, but other slots
+                # may hold bitwise-identical private copies (first-wins
+                # losers) — re-home the keys onto a surviving copy so a
+                # prefix stays discoverable as long as *any* reader lives
+                for s, r in self._active.items():
+                    if s != slot:
+                        self._publish_prefix(s, r)
+
+    # -- prefix sharing: lookup / attach / publish ----------------------------
+
+    def _lookup_prefix(self, prompt: np.ndarray, uid: int) -> list[int]:
+        """Longest resident, attachable page run covering a prefix of
+        ``prompt`` — the admission-time "is my prefix already configured?"
+        probe.  Capped at ``(len(prompt) - 1) // page_size`` so the suffix
+        prefill always computes at least the last real row (whose logits
+        sample token 0); the walk stops at the first miss, ref-capped page,
+        or page ``uid`` already holds."""
+        if self._prefix_index is None or self._cache is None:
+            return []
+        cap = (len(prompt) - 1) // self.page_size
+        if cap < 1:
+            return []
+        keys = paged_mod.prefix_page_keys(prompt, self.page_size,
+                                          max_pages=cap)
+        pages: list[int] = []
+        for key in keys:
+            p = self._prefix_index.get(key)
+            if p is None:
+                break
+            refs = self.allocator.refcount(p)
+            if refs == 0:                     # stale entry (page released)
+                self._prefix_index.drop_page(p)
+                break
+            if refs >= self.prefix.max_refs:
+                break
+            if uid in self.allocator.owners_of(p):
+                break
+            pages.append(p)
+        if len(pages) < self.prefix.min_prefix_pages:
+            return []
+        return pages
+
+    def _count_prefix_lookup(self, shared: list[int]) -> None:
+        self.prefix_lookups += 1
+        if shared:
+            self.prefix_hits += 1
+            self.prefix_pages_saved += len(shared)
+        if self.ledger is not None:
+            self.ledger.record_prefix_lookup(
+                hit=bool(shared), pages_saved=len(shared)
+            )
+
+    def _attach_prefix(self, slot: int, uid: int, pages: list[int]) -> None:
+        """Map ``pages`` (a resident shared prefix) into ``slot``'s block
+        table at +1 refcount each.  The caller has already reset the row."""
+        for p in pages:
+            self.allocator.share(p, uid)
+        s = len(pages)
+        self._table[slot, :s] = pages
+        self._mapped[slot] = s
+        self._slot_shared[slot] = s
+        self._record_prefix_gauge()
+
+    def _publish_prefix(self, slot: int, req: Request) -> None:
+        """Register ``slot``'s full prompt pages in the prefix index so
+        later requests with the same prefix attach instead of prefilling.
+        First-wins: pages already published under a key stay published."""
+        if self._prefix_index is None:
+            return
+        full = len(req.prompt) // self.page_size
+        if full < 1:
+            return
+        keys = paged_mod.prefix_page_keys(req.prompt, self.page_size,
+                                          max_pages=full)
+        for i, key in enumerate(keys):
+            self._prefix_index.publish(key, int(self._table[slot, i]))
+
+    def _record_prefix_gauge(self) -> None:
+        if self.ledger is not None and self.prefix is not None:
+            self.ledger.record_prefix_sharing(
+                shared_pages=self.allocator.shared_pages
+            )
 
     # -- integrity: digests, scrubbing, corruption injection ------------------
 
@@ -801,56 +937,60 @@ class ServeEngine:
 
     def _scrub_step(self) -> None:
         """Budgeted background audit: re-hash up to ``scrub_pages_per_step``
-        cold targets (sealed device pages round-robin, then parked arena
-        blocks) against their stamped digests.  A mismatch quarantines the
-        page and forces the owner through RESUME_REPREFILL — the same
-        recovery lane as a PR 7 engine fault, so completed streams stay
-        bitwise-identical to corruption-free runs."""
+        cold targets against their stamped digests.  A mismatch quarantines
+        the page and forces every reader through RESUME_REPREFILL — the
+        same recovery lane as a PR 7 engine fault, so completed streams
+        stay bitwise-identical to corruption-free runs.
+
+        Stamped device pages and stamped arena blocks form *one* rotation,
+        resumed at the first target strictly greater than the last-scanned
+        (tier, id) cursor, wrapping — so under a budget smaller than the
+        target count, every stamped target is audited within
+        ``ceil(targets / budget)`` steps regardless of where it sits in the
+        rotation, and membership churn (pages stamped/freed, blocks
+        parked/resumed between steps) can never skip or double-scan a
+        surviving target within a rotation.  Only *stamped* targets count:
+        an unstamped arena entry (integrity off at store time) is neither
+        scanned nor part of the coverage denominator."""
         if self.integrity is None or self.integrity.scrub_pages_per_step <= 0:
             return
         budget = self.integrity.scrub_pages_per_step
         t0 = self.clock.now()
         segments = self._cache["segments"] if self._cache is not None else None
-        pages = sorted(self._page_digests)
-        scanned_pages = 0
+        targets: list[tuple[int, int]] = []
+        if segments is not None:
+            targets += [(0, p) for p in sorted(self._page_digests)]
+        targets += [
+            (1, u) for u in sorted(self.arena.entries())
+            if self.arena.digest_of(u) is not None
+        ]
+        scanned_pages = scanned_blocks = 0
         bad: list[int] = []
-        if pages and segments is not None:
-            k = min(budget, len(pages))
-            start = self._scrub_cursor % len(pages)
-            scan = [pages[(start + j) % len(pages)] for j in range(k)]
-            self._scrub_cursor = (start + k) % len(pages)
-            for p in scan:
-                scanned_pages += 1
-                if paged_mod.page_digest(segments, p) != self._page_digests[p]:
-                    bad.append(p)
-            budget -= k
-        scanned_blocks = 0
         bad_uids: list[int] = []
-        if budget > 0:
-            for uid in self.arena.entries():
-                if budget <= 0:
-                    break
-                if self.arena.digest_of(uid) is None:
-                    continue
-                scanned_blocks += 1
-                budget -= 1
-                if not self.arena.verify(uid):
-                    bad_uids.append(uid)
+        if targets:
+            k = min(budget, len(targets))
+            idx = bisect.bisect_right(targets, self._scrub_cursor)
+            scan = [targets[(idx + j) % len(targets)] for j in range(k)]
+            self._scrub_cursor = scan[-1]
+            for tier, tid in scan:
+                if tier == 0:
+                    scanned_pages += 1
+                    if (paged_mod.page_digest(segments, tid)
+                            != self._page_digests[tid]):
+                        bad.append(tid)
+                else:
+                    scanned_blocks += 1
+                    if not self.arena.verify(tid):
+                        bad_uids.append(tid)
         self.scrubbed_targets += scanned_pages + scanned_blocks
         if self.ledger is not None:
             self.ledger.record_scrub(
                 pages=scanned_pages, blocks=scanned_blocks,
-                targets=len(pages) + len(self.arena.entries()),
+                targets=len(targets),
             )
             self.ledger.record("scrub", max(0.0, self.clock.now() - t0))
-        for p in bad:
-            slot = next(
-                (s for s in list(self._active) + list(self._prefilling)
-                 if p in {int(q) for q in
-                          self._table[s, : int(self._mapped[s])]}),
-                None,
-            )
-            self._handle_corrupt_pages(slot, [p], via="scrub")
+        if bad:
+            self._handle_corrupt_pages(bad, via="scrub")
         for uid in bad_uids:
             self.corruptions_detected += 1
             self._tainted_uids.discard(uid)
@@ -866,24 +1006,43 @@ class ServeEngine:
             elif self.arena.holds(uid):
                 self.arena.discard(uid)
 
-    def _handle_corrupt_pages(self, slot: int | None, pages: list[int],
-                              *, via: str) -> None:
-        """Quarantine ``pages`` and re-prefill their owner from the prompt.
+    def _handle_corrupt_pages(self, pages: list[int], *, via: str) -> None:
+        """Quarantine ``pages`` and re-prefill *every* reader from its
+        prompt.
 
-        Order matters: park/release first (pages go back to the free list),
-        *then* quarantine pulls them out of circulation — the allocator only
-        quarantines free pages, keeping the tiling invariant checkable.
-        The owner's device KV is untrusted wholesale (one bad page taints
-        the slot), so recovery forces ``RESUME_REPREFILL`` exactly like a
-        PR 7 engine fault; position-indexed sampling then replays the
-        committed tokens bitwise-identically."""
+        A shared page can sit in several block tables at once, so recovery
+        discovers the full reader set itself: every active reader parks
+        through ``RESUME_REPREFILL`` (the PR 7 fault lane — position-
+        indexed sampling replays the committed tokens bitwise-identically)
+        and every mid-prefill reader aborts back to the queue.  Order
+        matters: park/release first drops every reference (pages go back to
+        the free list only at refcount zero), *then* quarantine pulls them
+        out of circulation — the allocator only quarantines free pages,
+        keeping the tiling invariant checkable.  Readers beyond the first
+        of a shared page are the copy-on-write cost of sharing and are
+        counted as CoW copies."""
         err = SilentCorruption(
             f"digest mismatch on page(s) {pages} (via {via})"
         )
+        if self.prefix is not None:
+            extra = sum(
+                max(0, self.allocator.refcount(p) - 1) for p in pages
+            )
+            if extra:
+                self.cow_copies += extra
+                if self.ledger is not None:
+                    self.ledger.record_prefix_cow(extra)
         for p in pages:
             self._live_corrupt_pages.pop(p, None)
             self._page_digests.pop(p, None)
-        if slot is not None and slot in self._active:
+        bad = set(pages)
+
+        def reads_bad(slot: int) -> bool:
+            mapped = {int(q) for q in
+                      self._table[slot, : int(self._mapped[slot])]}
+            return bool(bad & mapped)
+
+        for slot in sorted(s for s in self._active if reads_bad(s)):
             req = self._active[slot]
             req.fault_recoveries += 1
             if (self.retry is not None
@@ -895,7 +1054,7 @@ class ServeEngine:
             else:
                 self._park_slot(slot, mode=RESUME_REPREFILL,
                                 fault_t=self.clock.now())
-        elif slot is not None and slot in self._prefilling:
+        for slot in sorted(s for s in self._prefilling if reads_bad(s)):
             if self.retry is not None:
                 self._abort_prefill_to_queue(slot, err)
             else:
@@ -908,6 +1067,12 @@ class ServeEngine:
                     len(self._queue),
                 )
                 self._queue.insert(idx, entry.req)
+        if self.prefix is not None:
+            # after the parks: releasing a reader re-homes index entries
+            # onto surviving copies, which may re-insert a bad page — drop
+            # them last, just before they leave circulation
+            for p in pages:
+                self._prefix_index.drop_page(p)
         for p in pages:
             self.corruptions_detected += 1
             if self.ledger is not None:
@@ -1011,12 +1176,17 @@ class ServeEngine:
         snapshot = None
         snap_bytes = 0
         reclaimed = int(self._mapped[slot])
+        shared = int(self._slot_shared[slot]) if self.prefix is not None else 0
         if mode == RESUME_SNAPSHOT:
             # only the pages holding written rows (0..pos-1) matter; pages
-            # mapped ahead for a launch that never ran hold nothing
+            # mapped ahead for a launch that never ran hold nothing.  The
+            # shared-prefix pages are excluded: their bytes stay resident
+            # under other readers' refcounts and the resume re-attaches
+            # them through the prefix index — this is the copy-on-write
+            # discipline (park copies only the private tail).
             keep = paged_mod.pages_for(pos, self.page_size)
             snapshot = paged_mod.gather_pages(
-                self._cache["segments"], self._table[slot, :keep]
+                self._cache["segments"], self._table[slot, shared:keep]
             )
             snap_bytes = paged_mod.snapshot_bytes(snapshot)
             # the snapshot spills D2H into the budgeted host arena; if the
@@ -1026,12 +1196,16 @@ class ServeEngine:
             if not self._spill_snapshot(req.uid, snapshot, snap_bytes, pos):
                 mode = RESUME_REPREFILL
                 snap_bytes = 0
+                shared = 0
             snapshot = None                 # the arena is authoritative
+        if mode == RESUME_REPREFILL:
+            shared = 0                      # replay re-looks-up from scratch
         self._release_slot(slot, req)
         req.parked = True
         req.preemptions += 1
         self._parked.append(_Parked(req=req, pos=pos, mode=mode,
-                                    snapshot=snapshot, fault_t=fault_t))
+                                    snapshot=snapshot, fault_t=fault_t,
+                                    shared_pages=shared))
         self._parked.sort(key=lambda e: e.req.uid)
         self.preemptions += 1
         self.pages_reclaimed += reclaimed
@@ -1054,11 +1228,29 @@ class ServeEngine:
         reserve-scaled projection.
         """
         req = entry.req
-        need_now = paged_mod.pages_for(
-            entry.pos if entry.mode == RESUME_SNAPSHOT else len(req.prompt),
-            self.page_size,
+        attach: list[int] = []
+        if self.prefix is not None:
+            attach = self._lookup_prefix(req.prompt, req.uid)
+        if entry.mode == RESUME_SNAPSHOT and entry.shared_pages > len(attach):
+            # the shared prefix this snapshot leaned on evaporated (last
+            # reader gone, ref-capped, or quarantined) while parked: the
+            # snapshot lacks those rows, so this is the CoW moment — demote
+            # to replay, which rebuilds the prefix privately (or re-shares
+            # whatever the fresh lookup still finds)
+            self.cow_copies += 1
+            if self.ledger is not None:
+                self.ledger.record_prefix_cow()
+            self._demote_entry(entry)
+        if entry.mode == RESUME_SNAPSHOT:
+            attach = attach[: entry.shared_pages]
+            need_now = (paged_mod.pages_for(entry.pos, self.page_size)
+                        - len(attach))
+        else:
+            need_now = max(0, paged_mod.pages_for(
+                len(req.prompt), self.page_size) - len(attach))
+        request_pages = max(
+            need_now, self._projected_pages(req) - len(attach)
         )
-        request_pages = max(need_now, self._projected_pages(req))
         if not self.admission.admit(
             free_pages=self.allocator.free_pages,
             projected_growth_pages=self._projected_growth(),
@@ -1102,9 +1294,15 @@ class ServeEngine:
                         snapshot = self.arena.take(req.uid)
                     self.refills += 1
                     n = paged_mod.pages_for(entry.pos, self.page_size)
-                    pages = self.allocator.allocate(req.uid, n)
+                    s = len(attach)
                     self._table[slot] = paged_mod.TRASH_PAGE
-                    self._table[slot, :n] = pages
+                    if s:
+                        # the prefix rows never left the device: re-attach
+                        # them at +1 refcount; only the private tail pages
+                        # are allocated and DMA-restored
+                        self._attach_prefix(slot, req.uid, attach)
+                    pages = self.allocator.allocate(req.uid, n - s)
+                    self._table[slot, s:n] = pages
                     self._mapped[slot] = n
                     self._cache["segments"] = paged_mod.restore_pages(
                         self._cache["segments"], snapshot, np.asarray(pages)
@@ -1473,6 +1671,12 @@ class ServeEngine:
         return {"sustained": sustained, "peak": float(self.peak_concurrency)}
 
     def _prefill_slot(self, slot: int, req: Request) -> None:
+        if self.prefix is not None and self.paged:
+            shared = self._lookup_prefix(req.prompt, req.uid)
+            self._count_prefix_lookup(shared)
+            if shared:
+                self._prefill_shared(slot, req, shared)
+                return
         n = len(req.prompt)
         pad = max(0, self._bucket_len(n) - n) if self.bucket_prompts else 0
         tokens = np.pad(req.prompt, (0, pad)) if pad else req.prompt
@@ -1524,6 +1728,8 @@ class ServeEngine:
             )
             self._pos[slot] = len(req.prompt)
             self._seal_slot_pages(slot, len(req.prompt))
+            if self.prefix is not None:
+                self._publish_prefix(slot, req)
             return
         if self._cache is None:
             # allocate the batched cache (batch axis 1 under the layer stack)
@@ -1545,6 +1751,72 @@ class ServeEngine:
         )
         self._pos[slot] = len(req.prompt)
 
+    def _prefill_shared(self, slot: int, req: Request,
+                        shared: list[int]) -> None:
+        """Prefill only the unshared suffix of ``req.prompt``.
+
+        The shared pages hold exactly the KV a private prefill would have
+        computed for those rows (KV row t depends only on tokens <= t, and
+        page keys chain over the full token prefix), so seeding the staging
+        cache from the pool and running one chunk with ``start=srows`` is
+        row-for-row bitwise-identical to prefilling the whole prompt.  The
+        suffix chunk always covers row n-1 (shared pages are capped at
+        ``(n-1)//page_size``), so the first token's logits — chunked or
+        pad-fixed — match the private path exactly.
+        """
+        n = len(req.prompt)
+        s = len(shared)
+        srows = s * self.page_size
+        b = self._bucket_len(n) if self.bucket_prompts else n
+        tokens = np.pad(req.prompt, (0, b - n)) if b > n else req.prompt
+        staging = self._staging.get(slot)
+        if staging is None:
+            specs = self.model.cache_specs(1, self.max_len)["segments"]
+            staging = jax.tree.map(
+                lambda sp: jnp.zeros(sp.shape, sp.dtype), specs
+            )
+        prefix_kv = paged_mod.gather_pages(
+            self._cache["segments"], np.asarray(shared, np.int64)
+        )
+        staging = paged_mod.scatter_rows(staging, prefix_kv, 0, self.page_size)
+        cache = {"pos": jnp.asarray(srows, jnp.int32), "segments": staging}
+        logits, cache = self._launch(
+            self._chunk_fn, self.params,
+            jnp.asarray(tokens[None, srows:b]), cache, start=srows,
+        )
+        if b > n:
+            fix_cache = {
+                "pos": jnp.asarray([n - 1], jnp.int32),
+                "segments": cache["segments"],
+            }
+            logits, _ = self._launch(
+                self._fixup_fn, self.params,
+                jnp.asarray(req.prompt[-1:][None, :]), fix_cache,
+            )
+        req_key = np.asarray(jax.random.fold_in(self._base_key, req.uid))
+        tok = self._sample_token(np.asarray(logits, np.float32)[0], req_key, 0)
+        req.generated.append(int(tok))
+        self._slot_key[slot] = req_key
+        self._slot_tok[slot] = tok
+        # all launches done — now mutate allocator/table state (FaultError
+        # above this line leaves the engine untouched)
+        n_store = paged_mod.pages_for(n, self.page_size)
+        self._table[slot] = paged_mod.TRASH_PAGE
+        self._attach_prefix(slot, req.uid, shared)
+        priv = self.allocator.allocate(req.uid, n_store - s)
+        self._table[slot, s:n_store] = priv
+        self._mapped[slot] = n_store
+        self._projected[slot] = self._projected_pages(req)
+        self._cache["segments"] = paged_mod.scatter_chunk(
+            self._cache["segments"], cache["segments"],
+            jnp.asarray(self._table[slot], jnp.int32), srows, n - srows,
+            self.page_size,
+        )
+        self._staging[slot] = cache["segments"]
+        self._pos[slot] = n
+        self._seal_slot_pages(slot, n)
+        self._publish_prefix(slot, req)
+
     # -- chunked prefill (continuous batching) --------------------------------
 
     def _chunk_for_new(self, req: Request) -> int:
@@ -1560,9 +1832,12 @@ class ServeEngine:
         growth, reserve-scaled like decode growth.  This is what lets a new
         request join while long prompts are still streaming in."""
         chunk = self._chunk_for_new(req)
-        first = paged_mod.pages_for(
-            min(len(req.prompt), chunk), self.page_size
-        )
+        shared = (len(self._lookup_prefix(req.prompt, req.uid))
+                  if self.prefix is not None else 0)
+        first = max(0, paged_mod.pages_for(
+            min(len(req.prompt), shared * self.page_size + chunk),
+            self.page_size,
+        ) - shared)
         return self.admission.admit(
             free_pages=self.allocator.free_pages,
             projected_growth_pages=self._projected_growth(),
@@ -1593,13 +1868,31 @@ class ServeEngine:
             self._token_bytes = paged_mod.pool_token_bytes(
                 self._cache["segments"]
             )
+        shared: list[int] = []
+        if self.prefix is not None and self.paged:
+            shared = self._lookup_prefix(req.prompt, req.uid)
+            self._count_prefix_lookup(shared)
+        srows = len(shared) * self.page_size
+        if shared:
+            # seed the staging rows the shared pages cover; chunking then
+            # starts at srows and never recomputes them — same bytes, fewer
+            # launches (see _prefill_shared for why this is bit-exact)
+            prefix_kv = paged_mod.gather_pages(
+                self._cache["segments"], np.asarray(shared, np.int64)
+            )
+            staging = paged_mod.scatter_rows(
+                staging, prefix_kv, 0, self.page_size
+            )
         self._prefilling[slot] = _Prefilling(
             req=req, tokens=tokens, n=n, chunk=self._chunk_for_new(req),
-            cache={"pos": jnp.asarray(0, jnp.int32), "segments": staging},
+            cache={"pos": jnp.asarray(srows, jnp.int32), "segments": staging},
+            filled=srows,
         )
         if self.paged:
             self._table[slot] = paged_mod.TRASH_PAGE
             self._mapped[slot] = 0
+            if shared:
+                self._attach_prefix(slot, req.uid, shared)
             self._projected[slot] = self._projected_pages(req)
 
     def _chunk_step(self, slot: int, entry: _Prefilling) -> int:
@@ -1690,6 +1983,8 @@ class ServeEngine:
             )
         self._staging[slot] = entry.cache["segments"]
         self._pos[slot] = n
+        if self.paged and self.prefix is not None:
+            self._publish_prefix(slot, req)
         del self._prefilling[slot]
         self._active[slot] = req
         if req.first_token_t is None:
@@ -2074,10 +2369,11 @@ class ServeEngine:
                         self._record_escape()
                 if bad:
                     corrupt_slots[slot] = bad
-            for slot in sorted(corrupt_slots):
-                self._handle_corrupt_pages(
-                    slot, corrupt_slots[slot], via="read"
+            if corrupt_slots:
+                all_bad = sorted(
+                    {p for b in corrupt_slots.values() for p in b}
                 )
+                self._handle_corrupt_pages(all_bad, via="read")
         self._cache = {"segments": segments}
         self._pos = np.asarray(pos, np.int64)
         self._slot_tok = np.asarray(tok, np.int32).copy()

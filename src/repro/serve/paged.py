@@ -56,14 +56,21 @@ class PageStats:
     allocs: int
     frees: int
     quarantined: int = 0             # retired after a digest mismatch
+    shared_pages: int = 0            # pages with refcount > 1 right now
+    shares: int = 0                  # cumulative share() grants
 
 
 class PageAllocator:
-    """Free-list allocator over the global block pool.
+    """Free-list allocator over the global block pool, with refcounts.
 
     Page 0 is never handed out (the scratch page for masked writes).
-    Double-free and foreign-free are hard errors — a page's owner is
-    tracked so serving bugs surface as exceptions, not silent corruption.
+    A page may be held by *several* owners at once (prefix sharing maps one
+    physical page into many block tables): ``allocate`` mints a page with
+    one owner, ``share`` adds an owner to an allocated page, and ``free``
+    drops one owner's reference — the page returns to the free-list only
+    when its last reference goes.  Double-free, foreign-free, and
+    double-share are hard errors so serving bugs surface as exceptions,
+    not silent corruption.
     """
 
     def __init__(self, num_pages: int) -> None:
@@ -73,11 +80,13 @@ class PageAllocator:
             )
         self.num_pages = num_pages
         self._free: list[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
-        self._owner: dict[int, int] = {}        # page -> owner uid
+        self._owners: dict[int, set[int]] = {}  # page -> owner uids
         self._quarantined: set[int] = set()     # retired (digest mismatch)
+        self._refs_outstanding = 0
         self._high_water = 0
         self._allocs = 0
         self._frees = 0
+        self._shares = 0
 
     @property
     def total_pages(self) -> int:
@@ -90,7 +99,12 @@ class PageAllocator:
 
     @property
     def allocated_pages(self) -> int:
-        return len(self._owner)
+        return len(self._owners)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently held by more than one owner."""
+        return sum(1 for owners in self._owners.values() if len(owners) > 1)
 
     def allocate(self, owner: int, n: int = 1) -> list[int]:
         """Take ``n`` pages for ``owner`` (a request uid). All-or-nothing."""
@@ -102,50 +116,92 @@ class PageAllocator:
             )
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
-            self._owner[p] = owner
+            self._owners[p] = {owner}
         self._allocs += n
-        self._high_water = max(self._high_water, len(self._owner))
+        self._refs_outstanding += n
+        self._high_water = max(self._high_water, len(self._owners))
         return pages
 
-    def free(self, owner: int, pages: list[int]) -> None:
-        """Return ``pages`` to the pool; every page must belong to ``owner``."""
+    def share(self, page: int, owner: int) -> None:
+        """Add ``owner`` as a reader of an already-allocated ``page``.
+
+        The page must be live (allocated to at least one other owner) and
+        ``owner`` must not already hold it — sharing a free, quarantined,
+        or already-held page is a hard error.
+        """
+        if page == TRASH_PAGE:
+            raise ValueError("cannot share the scratch page")
+        owners = self._owners.get(page)
+        if owners is None:
+            state = "quarantined" if page in self._quarantined else "free"
+            raise ValueError(f"cannot share {state} page {page}")
+        if owner in owners:
+            raise ValueError(f"request {owner} already holds page {page}")
+        owners.add(owner)
+        self._shares += 1
+        self._refs_outstanding += 1
+
+    def free(self, owner: int, pages: list[int]) -> list[int]:
+        """Drop ``owner``'s reference on each of ``pages``; every page must
+        be held by ``owner``.  Returns the pages whose *last* reference was
+        dropped — i.e. the ones actually returned to the free-list (callers
+        keyed on physical pages, like digest stamps, must only forget those).
+        """
         for p in pages:
             if p == TRASH_PAGE:
                 raise ValueError("cannot free the scratch page")
-            got = self._owner.get(p)
-            if got is None:
+            owners = self._owners.get(p)
+            if owners is None:
                 raise ValueError(f"double free of page {p}")
-            if got != owner:
+            if owner not in owners:
                 raise ValueError(
-                    f"page {p} belongs to request {got}, not {owner}"
+                    f"page {p} belongs to request(s) {sorted(owners)}, "
+                    f"not {owner}"
                 )
+        released = []
         for p in pages:
-            del self._owner[p]
-            self._free.append(p)
+            owners = self._owners[p]
+            owners.discard(owner)
+            self._refs_outstanding -= 1
+            if not owners:
+                del self._owners[p]
+                self._free.append(p)
+                released.append(p)
         self._frees += len(pages)
+        return released
 
     def pages_of(self, owner: int) -> list[int]:
-        return [p for p, o in self._owner.items() if o == owner]
+        return [p for p, o in self._owners.items() if owner in o]
 
     def owner_of(self, page: int) -> int | None:
-        """Owner uid of ``page``, or None if free/quarantined."""
-        return self._owner.get(page)
+        """One holder uid of ``page`` (the smallest, for determinism), or
+        None if free/quarantined.  Use :meth:`owners_of` for all readers."""
+        owners = self._owners.get(page)
+        return min(owners) if owners else None
+
+    def owners_of(self, page: int) -> set[int]:
+        """All holder uids of ``page`` (empty if free/quarantined)."""
+        return set(self._owners.get(page, ()))
+
+    def refcount(self, page: int) -> int:
+        return len(self._owners.get(page, ()))
 
     def quarantine(self, page: int) -> None:
         """Retire ``page`` from circulation after a digest mismatch.
 
-        The page must currently be free (detection paths park/release the
-        owning slot first); it never returns to the free list, so the pool
-        permanently shrinks by one page — the hardware-honest model of a
-        block whose storage can no longer be trusted.
+        The page must currently be free (detection paths park/release
+        *every* reader first — a shared page only reaches refcount zero
+        once all of them let go); it never returns to the free list, so the
+        pool permanently shrinks by one page — the hardware-honest model of
+        a block whose storage can no longer be trusted.
         """
         if page == TRASH_PAGE:
             raise ValueError("cannot quarantine the scratch page")
-        owner = self._owner.get(page)
-        if owner is not None:
+        owners = self._owners.get(page)
+        if owners:
             raise ValueError(
-                f"page {page} still belongs to request {owner}; "
-                "release the owner before quarantining"
+                f"page {page} still belongs to request(s) {sorted(owners)}; "
+                "release every reader before quarantining"
             )
         try:
             self._free.remove(page)
@@ -168,11 +224,16 @@ class PageAllocator:
             allocs=self._allocs,
             frees=self._frees,
             quarantined=len(self._quarantined),
+            shared_pages=self.shared_pages,
+            shares=self._shares,
         )
 
     def check_invariants(self) -> None:
-        """free + allocated + quarantined must tile the pool, no aliasing."""
-        allocated = set(self._owner)
+        """free + allocated + quarantined must tile the pool, no aliasing,
+        and references must conserve: every allocated page has >= 1 owner
+        and the per-page owner sets sum to the outstanding-reference
+        counter (allocate/share increments, free decrements)."""
+        allocated = set(self._owners)
         free = set(self._free)
         assert not (allocated & free), f"aliased pages {allocated & free}"
         assert not (self._quarantined & allocated), \
@@ -184,6 +245,12 @@ class PageAllocator:
         union = allocated | free | self._quarantined
         expect = set(range(1, self.num_pages))
         assert union == expect, f"leaked pages {expect - union}"
+        assert all(self._owners.values()), "allocated page with no owner"
+        refs = sum(len(o) for o in self._owners.values())
+        assert refs == self._refs_outstanding, (
+            f"refcount leak: {refs} held vs {self._refs_outstanding} "
+            "outstanding"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -251,6 +318,105 @@ def scatter_chunk(pool_segments, slot_segments, table_row: jax.Array,
         return pool.at[:, pages, :, offs].set(src.astype(pool.dtype))
 
     return jax.tree.map(leaf, pool_segments, slot_segments)
+
+
+def scatter_rows(slot_segments, saved, start_row: int, page_size: int):
+    """Write a :func:`gather_pages` tree into a dense staging cache.
+
+    Inverse of the page gather for the *staging* layout: ``saved`` leaves
+    are ``[L, n, Hkv, page_size, hd]`` page stacks; they land as rows
+    ``[start_row, start_row + n·page_size)`` of the ``[L, 1, Hkv, T, hd]``
+    staging leaves.  This is how a shared prefix already resident in the
+    pool seeds the suffix-only prefill: the chunked-prefill contract wants
+    previous rows in the staging cache, and pool pages hold exactly the
+    bytes those rows would contain.
+    """
+    def leaf(one, sv):
+        L, n, H, ps, hd = sv.shape
+        rows = jnp.asarray(sv, one.dtype).transpose(0, 2, 1, 3, 4)
+        rows = rows.reshape(L, H, n * ps, hd)
+        return one.at[:, 0, :, start_row:start_row + n * ps].set(rows)
+
+    return jax.tree.map(leaf, slot_segments, saved)
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: page-granular prompt hashing + the shared-page index
+# ---------------------------------------------------------------------------
+#
+# The paper's Table II `if_not_configured` hit is a tenant finding its
+# kernel already resident and paying nothing for reconfiguration.  The KV
+# analogue: a request finding its prompt prefix already paged in and paying
+# nothing to prefill it.  Prefixes are hashed per *full* page of prompt
+# tokens with a rolling digest, so equal keys mean equal token histories —
+# and, because KV rows at position t depend only on tokens [0, t], equal
+# token histories mean bitwise-equal page contents.
+
+
+def prefix_page_keys(tokens, page_size: int,
+                     max_pages: int | None = None) -> list[bytes]:
+    """Rolling digest chain over full pages of ``tokens``.
+
+    ``keys[i]`` commits to tokens ``[0, (i+1)·page_size)`` — key equality
+    between two prompts implies their first ``i+1`` pages of KV are
+    bitwise-identical.  Only *full* pages get keys: a trailing partial page
+    is never shared (decode writes land there).
+    """
+    toks = np.asarray(tokens, np.int64)
+    full = len(toks) // page_size
+    if max_pages is not None:
+        full = min(full, max_pages)
+    keys: list[bytes] = []
+    prev = b""
+    for i in range(full):
+        h = hashlib.blake2b(digest_size=16)
+        h.update(prev)
+        h.update(toks[i * page_size:(i + 1) * page_size].tobytes())
+        prev = h.digest()
+        keys.append(prev)
+    return keys
+
+
+class PrefixIndex:
+    """Prefix-key → resident pool page map (the KV "hit-rate" table).
+
+    Holds *no* references of its own: an entry is only valid while the
+    page is allocated, and the engine drops entries the moment ``free``
+    reports the page released (or it is quarantined).  ``publish`` is
+    first-wins — once a key maps to a live page, later prefills of the
+    same prefix attach to it rather than replacing it.
+    """
+
+    def __init__(self) -> None:
+        self._by_key: dict[bytes, int] = {}
+        self._by_page: dict[int, bytes] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def get(self, key: bytes) -> int | None:
+        return self._by_key.get(key)
+
+    def publish(self, key: bytes, page: int) -> bool:
+        """Map ``key`` to ``page`` unless the key is already published.
+        Returns True when the entry was added."""
+        if key in self._by_key:
+            return False
+        old = self._by_page.get(page)
+        if old is not None:            # page recycled under a new prefix
+            del self._by_key[old]
+        self._by_key[key] = page
+        self._by_page[page] = key
+        return True
+
+    def drop_page(self, page: int) -> None:
+        """Forget the entry backed by ``page`` (page released/quarantined)."""
+        key = self._by_page.pop(page, None)
+        if key is not None:
+            del self._by_key[key]
+
+    def pages(self) -> set[int]:
+        return set(self._by_page)
 
 
 # ---------------------------------------------------------------------------

@@ -516,6 +516,13 @@ def test_integrity_split_empty_ledger_all_zero():
     assert sp["scrub_coverage"] == 0.0           # no scrubs: no division
     assert sp["detection_rate"] == 0.0           # no corruptions: no division
     assert all(v == 0.0 for v in sp.values())
+    # A scrub pass over a tier with zero *stamped* targets must not inflate
+    # coverage: unstamped entries are not auditable and do not count.
+    led = OverheadLedger()
+    led.record_scrub(pages=0, blocks=0, targets=0)
+    sp = led.integrity_split()
+    assert sp["scrub_targets"] == 0.0
+    assert sp["scrub_coverage"] == 0.0
 
 
 def test_availability_split_empty_ledger_all_zero():

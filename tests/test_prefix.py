@@ -1,0 +1,660 @@
+"""PR 10: prefix sharing via refcounted pages + scrubber fairness fixes.
+
+Four concerns, one file:
+
+1.  **Refcounted allocator** — `share` / `free`-to-zero ordering, hard
+    errors on misuse, quarantine-of-a-shared-page preconditions, and a
+    seeded churn leak check with the tiling + refcount-conservation
+    invariants asserted every step.
+2.  **Prefix keys and index** — the rolling page-granular digest chain
+    (key equality <=> token-history equality) and the first-wins,
+    no-references-held `PrefixIndex`.
+3.  **Engine semantics** — shared-prefix streams bitwise-identical to
+    no-sharing runs (greedy + seeded temperature) across decode_fusion x
+    prefill_chunk x preemption x spill x 5% corruption with zero escapes;
+    admission charging only unshared pages; parked snapshots excluding
+    shared pages; quarantine of a shared page parking *every* reader;
+    resume re-attach and the CoW demotion when a prefix evaporates.
+4.  **Scrubber regressions** — the three PR 10 bugfixes: arena-scan
+    starvation, device-cursor drift under stamp/release churn, and
+    stamped-only coverage accounting; plus a seeded fairness property.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (populates GLOBAL_REGISTRY)
+from repro.configs import ARCHS, reduced
+from repro.core.hsa import FaultPlan, VirtualClock
+from repro.core.ledger import OverheadLedger
+from repro.core.policy import (
+    AdmissionPolicy,
+    IntegrityPolicy,
+    PreemptionPolicy,
+    PrefixPolicy,
+    RetryPolicy,
+)
+from repro.models import build_model
+from repro.models.params import init_params
+from repro.serve import paged as paged_mod
+from repro.serve.engine import RESUME_REPREFILL, RESUME_SNAPSHOT, ServeEngine
+from repro.serve.paged import (
+    PageAllocator,
+    PrefixIndex,
+    flip_page,
+    pages_for,
+    prefix_page_keys,
+)
+
+
+@pytest.fixture(scope="module")
+def engine_model():
+    cfg = reduced(ARCHS["llama3.2-1b"], layers=2, d_model=64, vocab=128)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.key(11))
+    return cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# refcounted PageAllocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_share_and_free_to_zero_ordering():
+    a = PageAllocator(8)
+    p = a.allocate(1, 3)
+    a.share(p[0], 2)
+    a.share(p[0], 3)
+    assert a.refcount(p[0]) == 3
+    assert a.owners_of(p[0]) == {1, 2, 3}
+    assert a.shared_pages == 1
+    assert a.stats().shares == 2
+    # owner 1 lets go of everything: only the unshared pages release
+    rel = a.free(1, p)
+    assert set(rel) == set(p[1:])
+    assert a.refcount(p[0]) == 2
+    a.check_invariants()
+    # intermediate reader: still no release
+    assert a.free(2, [p[0]]) == []
+    assert a.refcount(p[0]) == 1
+    # last reader out returns the page to the free list
+    assert a.free(3, [p[0]]) == [p[0]]
+    assert a.refcount(p[0]) == 0
+    assert a.free_pages == a.total_pages
+    a.check_invariants()
+
+
+def test_allocator_share_misuse_is_hard_error():
+    a = PageAllocator(8)
+    p = a.allocate(1, 1)[0]
+    with pytest.raises(ValueError, match="already holds"):
+        a.share(p, 1)                            # double-share by holder
+    a.share(p, 2)
+    with pytest.raises(ValueError, match="already holds"):
+        a.share(p, 2)                            # double-share by reader
+    with pytest.raises(ValueError, match="scratch"):
+        a.share(paged_mod.TRASH_PAGE, 3)
+    free_page = a.allocate(9, 1)[0]
+    a.free(9, [free_page])
+    with pytest.raises(ValueError, match="free"):
+        a.share(free_page, 3)
+    a.quarantine(free_page)
+    with pytest.raises(ValueError, match="quarantined"):
+        a.share(free_page, 3)
+    with pytest.raises(ValueError, match="belongs to"):
+        a.free(3, [p])                           # foreign free
+    a.check_invariants()
+
+
+def test_allocator_quarantine_shared_page_needs_every_reader_gone():
+    a = PageAllocator(8)
+    p = a.allocate(1, 1)[0]
+    a.share(p, 2)
+    with pytest.raises(ValueError, match="release every reader"):
+        a.quarantine(p)
+    a.free(1, [p])
+    with pytest.raises(ValueError, match="release every reader"):
+        a.quarantine(p)                          # one reader still holds it
+    a.free(2, [p])
+    a.quarantine(p)
+    assert p not in a.allocate(3, a.free_pages)  # never re-issued
+    a.check_invariants()
+
+
+def test_allocator_refcount_churn_leak_check():
+    rng = np.random.default_rng(7)
+    a = PageAllocator(32)
+    held: dict[int, list[int]] = {}              # uid -> pages it holds
+    uid = 0
+    for _ in range(500):
+        r = rng.random()
+        if r < 0.4 and a.free_pages:
+            uid += 1
+            held[uid] = a.allocate(
+                uid, min(a.free_pages, int(rng.integers(1, 4)))
+            )
+        elif r < 0.7 and len(held) >= 2:
+            src, dst = rng.choice(list(held), size=2, replace=False)
+            src, dst = int(src), int(dst)
+            cands = [p for p in held[src] if dst not in a.owners_of(p)]
+            if cands:
+                p = int(rng.choice(cands))
+                a.share(p, dst)
+                held[dst].append(p)
+        elif held:
+            victim = int(rng.choice(list(held)))
+            a.free(victim, held.pop(victim))
+        a.check_invariants()
+    for owner, pages in held.items():
+        a.free(owner, pages)
+    a.check_invariants()
+    assert a.free_pages == a.total_pages         # no leaked references
+
+
+# ---------------------------------------------------------------------------
+# prefix keys + index
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_page_keys_chain_commits_to_history():
+    ps = 4
+    a = list(range(12))
+    keys = prefix_page_keys(a, ps)
+    assert len(keys) == 3                        # full pages only
+    assert prefix_page_keys(a + [99], ps) == keys            # partial page
+    assert prefix_page_keys(a, ps, max_pages=2) == keys[:2]
+    # same page-0 tokens, diverging page 1: chain splits from page 1 on
+    b = a[:4] + [77] + a[5:]
+    kb = prefix_page_keys(b, ps)
+    assert kb[0] == keys[0]
+    assert kb[1] != keys[1] and kb[2] != keys[2]
+    # the chain commits to *order* across page boundaries
+    c = a[4:8] + a[:4] + a[8:]
+    assert prefix_page_keys(c, ps)[1] != keys[1]
+    assert prefix_page_keys([], ps) == []
+
+
+def test_prefix_index_first_wins_drop_and_recycle():
+    idx = PrefixIndex()
+    k1, k2 = prefix_page_keys(list(range(8)), 4)
+    assert idx.publish(k1, 5)
+    assert not idx.publish(k1, 6)                # first-wins
+    assert idx.get(k1) == 5 and len(idx) == 1
+    idx.drop_page(5)
+    assert idx.get(k1) is None and len(idx) == 0
+    idx.drop_page(5)                             # idempotent
+    # a recycled page now holding a different prefix evicts its old key
+    assert idx.publish(k1, 7)
+    assert idx.publish(k2, 7)
+    assert idx.get(k1) is None and idx.get(k2) == 7
+    assert idx.pages() == {7}
+
+
+def test_prefix_policy_validation_and_of():
+    assert PrefixPolicy.of(None) is None
+    assert PrefixPolicy.of(False) is None
+    pol = PrefixPolicy.of(True)
+    assert pol == PrefixPolicy()
+    assert PrefixPolicy.of(pol) is pol
+    with pytest.raises(ValueError, match="min_prefix_pages"):
+        PrefixPolicy(min_prefix_pages=0)
+    with pytest.raises(ValueError, match="max_refs"):
+        PrefixPolicy(max_refs=1)
+    with pytest.raises(TypeError):
+        PrefixPolicy.of(3)
+
+
+def test_prefix_requires_paged(engine_model):
+    cfg, model, params = engine_model
+    with pytest.raises(ValueError, match="requires paged"):
+        ServeEngine(model, params, batch_slots=2, max_len=32, prefix=True)
+
+
+def test_prefix_split_empty_ledger_all_zero():
+    sp = OverheadLedger().prefix_split()
+    assert sp["hit_rate"] == 0.0                 # no lookups: no division
+    assert all(v == 0.0 for v in sp.values())
+
+
+# ---------------------------------------------------------------------------
+# engine: bitwise identity + sharing semantics
+# ---------------------------------------------------------------------------
+
+_PS = 4  # engine page size everywhere below
+
+
+def _shared_requests(rng, n, personas=2):
+    """Requests drawn over ``personas`` shared 2-page system prompts plus a
+    private suffix — the few-personas x many-users traffic shape."""
+    prefixes = [
+        [int(t) for t in rng.integers(1, 100, size=2 * _PS + 1)]
+        for _ in range(personas)
+    ]
+    out = []
+    for _ in range(n):
+        pre = prefixes[int(rng.integers(0, personas))]
+        suf = [int(t) for t in rng.integers(1, 100,
+                                            size=int(rng.integers(1, 6)))]
+        out.append((pre + suf, int(rng.integers(2, 10))))
+    return out
+
+
+def _dense_reference(model, params, reqs, *, temperature=0.0):
+    eng = ServeEngine(model, params, batch_slots=len(reqs), max_len=32,
+                      temperature=temperature, seed=0)
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done = sorted(eng.run_to_completion(max_steps=100_000),
+                  key=lambda r: r.uid)
+    return [r.generated for r in done]
+
+
+def _prefix_engine(model, params, *, prefix=True, faults=None, integrity=None,
+                   temperature=0.0, fusion=1, chunk=None, spill=False,
+                   pool_pages=48, slots=4, recoveries=64):
+    kw = {}
+    if chunk is not None:
+        kw["prefill_chunk"] = chunk
+    return ServeEngine(
+        model, params, batch_slots=slots, max_len=32, paged=True,
+        page_size=_PS, pool_pages=pool_pages, decode_fusion=fusion,
+        temperature=temperature, seed=0, prefix=prefix,
+        ledger=OverheadLedger(),
+        retry=RetryPolicy(max_request_recoveries=recoveries),
+        clock=VirtualClock(), step_time_model=lambda p, d: 1e-3,
+        transfer_bandwidth_bytes_s=64e6,
+        admission=AdmissionPolicy(growth_reserve=0.5),
+        preemption=PreemptionPolicy(
+            snapshot_threshold_tokens=2 if spill else 10**9
+        ),
+        host_budget_bytes=(1 << 20) if spill else None,
+        faults=faults, integrity=integrity, **kw,
+    )
+
+
+def _churn(model, params, *, steps, n_requests, seed, preempt_p=0.2,
+           resume_p=0.2, submit_p=0.6, **ekw):
+    rng = np.random.default_rng(seed)
+    reqs = _shared_requests(rng, n_requests)
+    eng = _prefix_engine(model, params, **ekw)
+    done, i = [], 0
+    for _ in range(steps):
+        if i < len(reqs) and rng.random() < submit_p:
+            p, m = reqs[i]
+            eng.submit(p, max_new_tokens=m)
+            i += 1
+        if eng._active and rng.random() < preempt_p:
+            uid = int(rng.choice([r.uid for r in eng._active.values()]))
+            eng.preempt(uid)
+        if eng.parked_requests and rng.random() < resume_p:
+            uid = int(rng.choice([r.uid for r in eng.parked_requests]))
+            eng.resume(uid)
+        done += eng.step()
+        eng.allocator.check_invariants()
+        eng.arena.check_invariants()
+    while i < len(reqs):
+        p, m = reqs[i]
+        eng.submit(p, max_new_tokens=m)
+        i += 1
+    done += eng.run_to_completion(max_steps=100_000)
+    eng.allocator.check_invariants()
+    eng.arena.check_invariants()
+    streams = [r.generated for r in sorted(done, key=lambda r: r.uid)]
+    assert len(streams) == len(reqs)
+    return streams, reqs, eng
+
+
+@pytest.mark.parametrize("fusion,chunk,spill,temperature", [
+    (1, None, False, 0.0),       # greedy, plain prefill, device-only
+    (4, None, True, 0.0),        # fused decode, spill tier live
+    (1, 4, True, 0.0),           # chunked prefill + spill
+    (4, 4, True, 0.7),           # everything on, seeded temperature
+])
+def test_prefix_churn_streams_identical_under_corruption(
+        engine_model, fusion, chunk, spill, temperature):
+    cfg, model, params = engine_model
+    plan = FaultPlan(seed=29, corrupt_rate=0.05)
+    streams, reqs, eng = _churn(
+        model, params, steps=60, n_requests=10, seed=21, faults=plan,
+        integrity=IntegrityPolicy(scrub_pages_per_step=2),
+        fusion=fusion, chunk=chunk, spill=spill, temperature=temperature,
+    )
+    ref = _dense_reference(model, params, reqs, temperature=temperature)
+    assert streams == ref                        # bitwise, per request
+    sp = eng.ledger.integrity_split()
+    assert sp["escaped"] == 0
+    assert sp["detected"] <= sp["corruptions"]
+
+
+@pytest.mark.parametrize("chunk", [None, 2])
+def test_prefix_sharing_saves_pages_and_ledger_agrees(engine_model, chunk):
+    cfg, model, params = engine_model
+    rng = np.random.default_rng(3)
+    reqs = _shared_requests(rng, 8, personas=1)
+    eng = _prefix_engine(model, params, chunk=chunk)
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    done = sorted(eng.run_to_completion(max_steps=100_000),
+                  key=lambda r: r.uid)
+    assert [r.generated for r in done] == _dense_reference(model, params, reqs)
+    assert eng.prefix_hits > 0
+    assert eng.prefix_pages_saved >= 2 * eng.prefix_hits  # 2-page persona
+    sp = eng.ledger.prefix_split()
+    assert sp["prefix_lookups"] == eng.prefix_lookups
+    assert sp["prefix_hits"] == eng.prefix_hits
+    assert sp["pages_saved"] == eng.prefix_pages_saved
+    assert sp["peak_shared_pages"] >= 2
+    assert sp["hit_rate"] == eng.prefix_hits / eng.prefix_lookups
+    assert sp["shared_pages"] == 0.0             # all released at drain
+    eng.allocator.check_invariants()
+
+
+def test_admission_charges_only_unshared_pages(engine_model):
+    """Pool too small for two private copies of a long prompt, big enough
+    for one copy + a shared attach: without sharing the second request
+    must wait for the first to finish; with sharing they run together."""
+    cfg, model, params = engine_model
+    prompt = list(range(1, 17))                  # 4 pages at ps=4
+    reqs = [(prompt, 6), (prompt, 6)]
+
+    def overlap(prefix):
+        eng = _prefix_engine(model, params, prefix=prefix, pool_pages=9,
+                             slots=2)
+        for p, m in reqs:
+            eng.submit(p, max_new_tokens=m)
+        both, steps = 0, 0
+        while (eng._queue or eng._active or eng._prefilling
+               or eng._parked):
+            eng.step()
+            eng.allocator.check_invariants()
+            both = max(both, len(eng._active))
+            steps += 1
+            assert steps < 10_000
+        return both
+
+    assert overlap(prefix=False) == 1
+    assert overlap(prefix=True) == 2
+
+
+def test_quarantine_of_shared_page_parks_every_reader(engine_model):
+    cfg, model, params = engine_model
+    prompt = list(range(1, 14))                  # 3 full pages + partial
+    eng = _prefix_engine(model, params,
+                         integrity=IntegrityPolicy(scrub_pages_per_step=8))
+    done = []
+    for _ in range(3):
+        eng.submit(prompt, max_new_tokens=12)
+    for _ in range(2):                           # all three prefilled + shared
+        done += eng.step()
+    shared = [p for p in range(1, eng.allocator.num_pages)
+              if eng.allocator.refcount(p) > 1]
+    assert shared
+    victim = shared[0]
+    readers = eng.allocator.owners_of(victim)
+    assert len(readers) == 3                     # one publisher + two sharers
+    eng._cache["segments"] = flip_page(eng._cache["segments"], victim)
+    done += eng.step()                           # read-verify/scrub detects
+    assert eng.corruptions_detected >= 1
+    assert eng.pages_quarantined == 1
+    assert victim not in eng._prefix_index.pages()
+    # no reader still maps the quarantined page — every one was parked
+    # through RESUME_REPREFILL (or already resumed onto fresh pages)
+    assert all(victim not in eng.allocator.pages_of(u) for u in readers)
+    assert eng.cow_copies == len(readers) - 1    # extra readers = CoW cost
+    done += eng.run_to_completion(max_steps=100_000)
+    done.sort(key=lambda r: r.uid)
+    assert all(r.fault_recoveries >= 1 for r in done)  # every reader re-ran
+    ref = _dense_reference(model, params, [(prompt, 12)] * 3)
+    assert [r.generated for r in done] == ref    # recovery is invisible
+    assert eng.ledger.integrity_split()["escaped"] == 0
+    eng.allocator.check_invariants()
+
+
+def test_parked_snapshot_excludes_shared_pages(engine_model):
+    cfg, model, params = engine_model
+    prompt = list(range(1, 14))                  # 3 full pages shared cap
+    eng = _prefix_engine(model, params, spill=True)
+    done = []
+    for _ in range(2):
+        eng.submit(prompt, max_new_tokens=10)
+    for _ in range(3):
+        done += eng.step()
+    slot, req = next(
+        (s, r) for s, r in eng._active.items() if eng._slot_shared[s] > 0
+    )
+    shared = int(eng._slot_shared[slot])
+    assert shared == (len(prompt) - 1) // _PS
+    pos = int(eng._pos[slot])
+    eng.preempt(req.uid)
+    entry = next(e for e in eng._parked if e.req.uid == req.uid)
+    assert entry.mode == RESUME_SNAPSHOT
+    assert entry.shared_pages == shared
+    keep = pages_for(pos, _PS)
+    # the arena holds only the private tail: (keep - shared) pages of bytes
+    assert eng.arena.bytes_of(req.uid) == (
+        (keep - shared) * _PS * eng._token_bytes
+    )
+    # the shared pages stayed resident under the publisher's refs
+    assert all(eng.allocator.refcount(p) >= 1
+               for p in eng._prefix_index.pages())
+    steps = 0
+    while any(e.req.uid == req.uid for e in eng._parked):
+        done += eng.step()
+        steps += 1
+        assert steps < 1000
+    assert eng.cow_copies == 0                   # prefix was still resident
+    done += eng.run_to_completion(max_steps=100_000)
+    done.sort(key=lambda r: r.uid)
+    ref = _dense_reference(model, params, [(prompt, 10)] * 2)
+    assert [r.generated for r in done] == ref
+    eng.allocator.check_invariants()
+
+
+def test_resume_with_evaporated_prefix_demotes_to_replay(engine_model):
+    """Park a sharer as a snapshot (prefix pages excluded), then release
+    every other reader so the shared pages — and their index entries —
+    evaporate.  The sharer's resume cannot re-attach what its snapshot
+    never held: it must demote to replay (the CoW moment), and the stream
+    must still come out bitwise-identical."""
+    cfg, model, params = engine_model
+    prompt = list(range(1, 14))
+    reqs = [(prompt, 8), (prompt, 8)]
+    eng = _prefix_engine(model, params, spill=True)
+    done = []
+    for p, m in reqs:
+        eng.submit(p, max_new_tokens=m)
+    for _ in range(2):
+        done += eng.step()
+    slot, sharer = next(
+        (s, r) for s, r in eng._active.items() if eng._slot_shared[s] > 0
+    )
+    eng.preempt(sharer.uid)                      # snapshot excludes prefix
+    entry = next(e for e in eng._parked if e.req.uid == sharer.uid)
+    assert entry.mode == RESUME_SNAPSHOT and entry.shared_pages > 0
+    # park the publisher too: its release drops the last reference on the
+    # shared pages, and with them the index entries
+    publisher = next(iter(eng._active.values()))
+    eng.preempt(publisher.uid)
+    assert len(eng._prefix_index) == 0           # the prefix evaporated
+    ok = eng._try_resume(entry, slot)            # sharer first, directly
+    assert ok
+    assert entry.mode == RESUME_REPREFILL        # demoted, not restored
+    assert eng.demotions == 1
+    assert eng.cow_copies == 1                   # the CoW moment, counted
+    assert eng.ledger.prefix_split()["cow_copies"] == 1.0
+    done += eng.run_to_completion(max_steps=100_000)
+    done.sort(key=lambda r: r.uid)
+    assert [r.generated for r in done] == _dense_reference(model, params,
+                                                           reqs)
+    eng.allocator.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# scrubber regressions (the three PR 10 bugfixes)
+# ---------------------------------------------------------------------------
+
+
+def _arena_only_engine(model, params, *, budget):
+    """Spill engine with every request parked as a snapshot: arena entries
+    are the only scrub targets (released device pages drop their stamps)."""
+    eng = _prefix_engine(
+        model, params, prefix=False, spill=True,
+        integrity=IntegrityPolicy(scrub_pages_per_step=budget,
+                                  verify_reads=False),
+        slots=5, pool_pages=64,
+    )
+    for i in range(5):
+        eng.submit([1 + i, 2, 3, 4, 5], max_new_tokens=8)
+    for _ in range(2):
+        eng.step()
+    for uid in [r.uid for r in eng._active.values()]:
+        eng.preempt(uid)
+    assert not eng._page_digests                 # device stamps all dropped
+    stamped = [u for u in eng.arena.entries()
+               if eng.arena.digest_of(u) is not None]
+    assert len(stamped) == 5
+    return eng, stamped
+
+
+def test_scrub_arena_rotation_covers_every_entry(engine_model):
+    """Regression (starvation): with budget < entries, the old scan began
+    at entries()[0] every step and never reached the tail."""
+    cfg, model, params = engine_model
+    budget = 2
+    eng, stamped = _arena_only_engine(model, params, budget=budget)
+    seen: list[int] = []
+    real = eng.arena.verify
+    eng.arena.verify = lambda uid: (seen.append(uid), real(uid))[1]
+    for _ in range(math.ceil(len(stamped) / budget)):
+        eng._scrub_step()
+    assert set(seen) == set(stamped)             # tail entries audited too
+    assert len(seen) == math.ceil(len(stamped) / budget) * budget
+
+
+def test_scrub_device_cursor_keyed_on_page_id_under_churn(engine_model,
+                                                          monkeypatch):
+    """Regression (cursor drift): the cursor was an index into the sorted
+    stamp list, so stamping a page below it skipped targets and releasing
+    one double-scanned.  Keyed on the last-scanned page id, every page
+    that stays stamped is re-hashed within ceil(T/budget) steps no matter
+    how membership churns around it."""
+    cfg, model, params = engine_model
+    budget = 2
+    eng = _prefix_engine(
+        model, params, prefix=False,
+        integrity=IntegrityPolicy(scrub_pages_per_step=budget,
+                                  verify_reads=False),
+    )
+    eng.submit([1, 2, 3, 4, 5], max_new_tokens=4)
+    eng.step()                                   # builds the pool + stamps
+    real = paged_mod.page_digest
+
+    def digest(p):                               # stamps bypass the recorder
+        return real(eng._cache["segments"], p)
+
+    # survivors: stamped before the rotation and never released during it
+    eng._page_digests.clear()
+    survivors = [11, 13, 15, 17, 19, 21]
+    for p in survivors:
+        eng._page_digests[p] = digest(p)
+    eng._scrub_cursor = (0, 10)                  # rotation starts at 11
+    # (stamp, release) churn applied before each scrub step — always at
+    # ids *behind* the cursor, the exact membership shifts that made the
+    # old index-based cursor skip ahead or rescan
+    schedule = [(1, None), (12, 1), (14, 12)]
+
+    scans: list[int] = []
+    monkeypatch.setattr(
+        paged_mod, "page_digest",
+        lambda segs, p: (scans.append(p), real(segs, p))[1],
+    )
+    assert math.ceil(len(survivors) / budget) == len(schedule)
+    for stamp, release in schedule:
+        eng._page_digests[stamp] = digest(stamp)
+        if release is not None:
+            del eng._page_digests[release]
+        eng._scrub_step()
+    assert scans == survivors                    # no skip, no double-scan
+
+
+def test_scrub_targets_count_only_stamped_entries(engine_model):
+    """Regression (coverage accounting): unstamped arena entries were
+    counted in the denominator the scrub loop never audits."""
+    cfg, model, params = engine_model
+    eng = _prefix_engine(
+        model, params, prefix=False,
+        integrity=IntegrityPolicy(scrub_pages_per_step=4,
+                                  verify_reads=False),
+    )
+    if eng.arena.block_bytes is None:
+        eng.arena.configure(1 << 12)
+    data = {"k": np.arange(16, dtype=np.float32)}
+    eng.arena.store(101, data, 64, digest=paged_mod.tree_digest(data))
+    eng.arena.store(102, data, 64)               # unstamped: never audited
+    eng._scrub_step()
+    sp = eng.ledger.integrity_split()
+    assert sp["scrub_targets"] == 1.0            # only the stamped entry
+    assert sp["scrubbed_blocks"] == 1.0
+    assert sp["scrub_coverage"] == 1.0           # honest: audited / auditable
+
+
+def test_scrub_fairness_under_seeded_churn(engine_model):
+    """Property: freeze any churned engine state and ceil(T/budget) scrub
+    steps audit every stamped device page *and* arena block exactly once
+    per rotation (no skip, no double-scan)."""
+    cfg, model, params = engine_model
+    budget = 3
+    rng = np.random.default_rng(17)
+    reqs = _shared_requests(rng, 8)
+    eng = _prefix_engine(
+        model, params, spill=True,
+        integrity=IntegrityPolicy(scrub_pages_per_step=budget,
+                                  verify_reads=False),
+    )
+    i = 0
+    for step in range(12):                       # seeded churn, then freeze
+        if i < len(reqs) and rng.random() < 0.6:
+            p, m = reqs[i]
+            eng.submit(p, max_new_tokens=m)
+            i += 1
+        if eng._active and rng.random() < 0.3:
+            eng.preempt(int(rng.choice([r.uid
+                                        for r in eng._active.values()])))
+        eng.step()
+        eng.allocator.check_invariants()
+    # park one straggler without stepping: the frozen state must hold
+    # stamped targets in *both* tiers for the rotation to interleave
+    assert eng._active
+    eng.preempt(int(min(r.uid for r in eng._active.values())))
+    pages = set(eng._page_digests)
+    blocks = {u for u in eng.arena.entries()
+              if eng.arena.digest_of(u) is not None}
+    assert pages and blocks
+    total = len(pages) + len(blocks)
+    page_scans: list[int] = []
+    block_scans: list[int] = []
+    real_pd = paged_mod.page_digest
+    real_v = eng.arena.verify
+    paged_mod.page_digest = (
+        lambda segs, p: (page_scans.append(p), real_pd(segs, p))[1]
+    )
+    eng.arena.verify = lambda u: (block_scans.append(u), real_v(u))[1]
+    try:
+        for _ in range(math.ceil(total / budget)):
+            eng._scrub_step()
+    finally:
+        paged_mod.page_digest = real_pd
+        eng.arena.verify = real_v
+    assert set(page_scans) == pages
+    assert set(block_scans) == blocks
+    # one full rotation + the wrap remainder: nothing scanned 3+ times
+    from collections import Counter
+    counts = Counter([("p", p) for p in page_scans]
+                     + [("b", b) for b in block_scans])
+    assert max(counts.values()) <= 2
